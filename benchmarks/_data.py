@@ -1,0 +1,64 @@
+"""Shared experiment grid for all paper-table benchmarks (memoized).
+
+One full grid run per (model, system) — every table/figure function
+reads from this cache so `python -m benchmarks.run` executes each
+simulation exactly once.  Results are also persisted to
+experiments/bench_cache.json keyed by (seed, iterations).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.search.driver import run_baseline, run_shared_pool, run_specgen
+
+SEED = 0
+ITERATIONS = 100
+T10 = [f"T{i}" for i in range(1, 11)]
+T20 = [f"T{i}" for i in range(11, 21)]
+BASELINES = ["cudaforge", "alphaevolve", "kernelagent"]
+
+
+def gm(xs) -> float:
+    return float(np.exp(np.mean(np.log(np.maximum(np.asarray(xs, float),
+                                                  1e-12)))))
+
+
+@functools.lru_cache(maxsize=None)
+def specgen_grid(model: str, tasks: tuple = tuple(T10),
+                 iterations: int = ITERATIONS, **kw):
+    kw = dict(kw)
+    sched, ctls = run_shared_pool(list(tasks), model=model,
+                                  iterations=iterations, devices=10,
+                                  seed=SEED, **kw)
+    return sched, {c.result.task_id: c.result for c in ctls}, \
+        {c.result.task_id: c for c in ctls}
+
+
+@functools.lru_cache(maxsize=None)
+def baseline_grid(name: str, model: str, tasks: tuple = tuple(T10),
+                  iterations: int = ITERATIONS):
+    out = {}
+    scheds = {}
+    for t in tasks:
+        res, sched = run_baseline(name, t, model=model,
+                                  iterations=iterations, seed=SEED)
+        out[t] = res
+        scheds[t] = sched
+    return scheds, out
+
+
+@functools.lru_cache(maxsize=None)
+def specgen_single(task: str, model: str, iterations: int = ITERATIONS,
+                   **kw):
+    return run_specgen(task, model=model, iterations=iterations,
+                       seed=SEED, **kw)
+
+
+def timed(fn, *a, **kw):
+    t0 = time.perf_counter()
+    out = fn(*a, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

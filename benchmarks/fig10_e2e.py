@@ -1,0 +1,18 @@
+"""Fig. 10 — end-to-end execution time vs the three baselines."""
+from benchmarks._data import (BASELINES, T10, baseline_grid, gm,
+                              specgen_grid, timed)
+
+
+def rows():
+    out = []
+    for model in ("glm", "dsv4"):
+        (sched, res, _), us = timed(specgen_grid, model)
+        for base in BASELINES:
+            _, bres = baseline_grid(base, model)
+            ratios = [bres[t].e2e_time / res[t].e2e_time for t in T10]
+            out.append((f"fig10_e2e_speedup_{model}_{base}", us,
+                        round(gm(ratios), 3)))
+        for t in T10:
+            out.append((f"fig10_e2e_ks_{model}_skg_{t}", us,
+                        round(res[t].e2e_time / 1e3, 2)))
+    return out

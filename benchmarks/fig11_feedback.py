@@ -1,0 +1,23 @@
+"""Fig. 11 — profiling feedback per 100 iterations."""
+import numpy as np
+
+from benchmarks._data import (BASELINES, T10, baseline_grid, gm,
+                              specgen_grid, timed)
+
+
+def rows():
+    out = []
+    for model in ("glm", "dsv4"):
+        (sched, res, _), us = timed(specgen_grid, model)
+        skg = [res[t].profiling_feedback for t in T10]
+        out.append((f"fig11_feedback_avg_{model}_specgen", us,
+                    round(float(np.mean(skg)), 1)))
+        for base in BASELINES:
+            _, bres = baseline_grid(base, model)
+            bl = [bres[t].profiling_feedback for t in T10]
+            out.append((f"fig11_feedback_avg_{model}_{base}", us,
+                        round(float(np.mean(bl)), 1)))
+            lifts = [s / max(b, 1) for s, b in zip(skg, bl)]
+            out.append((f"fig11_feedback_lift_{model}_{base}", us,
+                        round(gm(lifts), 3)))
+    return out

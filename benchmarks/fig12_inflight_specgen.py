@@ -1,0 +1,20 @@
+"""Fig. 12 — in-flight counts under SpecGen (10 workflows, shared
+elastic pool): validation/profiling stay active during generation."""
+import numpy as np
+
+from benchmarks._data import specgen_grid, timed
+from benchmarks.fig4_inflight import _avg_inflight
+
+
+def rows():
+    out = []
+    (sched, res, ctls), us = timed(specgen_grid, "glm")
+    v, p = _avg_inflight(sched, horizon=float("inf"))
+    out.append(("fig12_specgen_avg_inflight_val", us, round(v, 3)))
+    out.append(("fig12_specgen_avg_inflight_prof", us, round(p, 3)))
+    spec_live = []
+    for c in ctls.values():
+        spec_live += [n for _, n in c.gen_timeline]
+    out.append(("fig12_specgen_avg_gen_requests", us,
+                round(float(np.mean(spec_live)) * len(ctls), 2)))
+    return out

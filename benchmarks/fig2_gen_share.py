@@ -1,0 +1,17 @@
+"""Fig. 2 — per-iteration generation-time share CDF (characterization)."""
+import numpy as np
+
+from benchmarks._data import T10, baseline_grid, timed
+
+
+def rows():
+    out = []
+    for model in ("glm", "dsv4"):
+        (_, res), us = timed(baseline_grid, "cudaforge", model)
+        for t in T10:
+            shares = [r.gen_time / max(r.t_end - r.t_start, 1e-9)
+                      for r in res[t].records]
+            p75 = float(np.percentile(shares, 75))
+            out.append((f"fig2_gen_share_p75_{model}_{t}",
+                        us / len(T10), round(p75, 4)))
+    return out

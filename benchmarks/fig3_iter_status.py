@@ -1,0 +1,21 @@
+"""Fig. 3 — iteration status distribution (success/compile/runtime/
+mismatch) across 100 iterations per kernel."""
+from collections import Counter
+
+from benchmarks._data import T10, baseline_grid, timed
+
+
+def rows():
+    out = []
+    for model in ("glm", "dsv4"):
+        (_, res), us = timed(baseline_grid, "cudaforge", model)
+        counts = Counter()
+        total = 0
+        for t in T10:
+            for r in res[t].records:
+                counts[r.status or "invalid"] += 1
+                total += 1
+        for status in ("success", "compile", "runtime", "mismatch"):
+            out.append((f"fig3_status_{model}_{status}", us / 4,
+                        round(counts.get(status, 0) / total, 4)))
+    return out

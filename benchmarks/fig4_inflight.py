@@ -1,0 +1,30 @@
+"""Fig. 4 — in-flight request counts, baseline (10 workflows, static
+'one GPU per kernel'): validation/profiling orders of magnitude below
+generation concurrency."""
+import numpy as np
+
+from benchmarks._data import T10, baseline_grid, timed
+
+
+def _avg_inflight(sched, horizon=10_000.0):
+    tl = [x for x in sched.timeline if x[0] <= horizon]
+    if len(tl) < 2:
+        return 0.0, 0.0
+    tv = pv = 0.0
+    for (t0, v0, p0, *_), (t1, *_rest) in zip(tl, tl[1:]):
+        tv += v0 * (t1 - t0)
+        pv += p0 * (t1 - t0)
+    span = tl[-1][0] - tl[0][0] or 1.0
+    return tv / span, pv / span
+
+
+def rows():
+    out = []
+    (scheds, _), us = timed(baseline_grid, "cudaforge", "glm")
+    v_all, p_all = zip(*[_avg_inflight(s) for s in scheds.values()])
+    out.append(("fig4_baseline_avg_inflight_val", us,
+                round(float(np.sum(v_all)), 3)))
+    out.append(("fig4_baseline_avg_inflight_prof", us,
+                round(float(np.sum(p_all)), 3)))
+    out.append(("fig4_baseline_gen_concurrency", us, len(T10)))
+    return out

@@ -1,0 +1,23 @@
+"""Fig. 6 — shortest reasoning prefix producing a kernel faster than
+the historical average (the early-termination window)."""
+import numpy as np
+
+from benchmarks._data import T10, specgen_grid, timed
+
+
+def rows():
+    out = []
+    fracs = []
+    (sched, res, _), us = timed(specgen_grid, "glm")
+    for t in T10:
+        for rec in res[t].records:
+            if rec.early_terminated and rec.gen_time > 0:
+                # termination time / full-gen estimate ~ prefix fraction
+                dur = rec.t_end - rec.t_start
+                fracs.append(min(rec.gen_time / max(dur, rec.gen_time),
+                                 1.0))
+    for q in (10, 25, 50, 75, 90):
+        out.append((f"fig6_term_prefix_frac_p{q}", us,
+                    round(float(np.percentile(fracs, q)), 3)
+                    if fracs else 0.0))
+    return out

@@ -1,0 +1,86 @@
+"""§Roofline — three-term roofline per (arch x shape) from the dry-run.
+
+Reads experiments/dryrun/*.json (single-pod 16x16 per spec) and emits:
+compute/memory/collective terms (seconds), the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS useful ratio, and the roofline fraction
+(dominant-term lower bound / achievable-time upper bound).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(mesh: str = "pod16x16") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_fraction(rec: Dict) -> float:
+    """max(term)/sum(terms): 1.0 = perfectly bottleneck-limited (ideal
+    overlap), lower = time spread across terms with no dominant one."""
+    t = rec["terms"]
+    total = t["compute_s"] + t["memory_s"] + t["collective_s"]
+    return max(t.values()) / total if total else 0.0
+
+
+def rows():
+    out = []
+    for rec in load_cells():
+        name = f"roofline_{rec['arch']}_{rec['shape']}"
+        if rec["status"] == "skip":
+            out.append((name, 0.0, "SKIP"))
+            continue
+        if rec["status"] != "ok":
+            out.append((name, 0.0, "ERROR"))
+            continue
+        t = rec["terms"]
+        out.append((f"{name}_compute_s", 0.0, f"{t['compute_s']:.4f}"))
+        out.append((f"{name}_memory_s", 0.0, f"{t['memory_s']:.4f}"))
+        out.append((f"{name}_collective_s", 0.0,
+                    f"{t['collective_s']:.4f}"))
+        out.append((f"{name}_bottleneck", 0.0, rec["bottleneck"]))
+        out.append((f"{name}_useful_flops", 0.0,
+                    f"{rec['useful_flops_ratio']:.3f}"))
+        out.append((f"{name}_fits16GB", 0.0,
+                    rec["memory"]["fits_16GB"]))
+    return out
+
+
+def table(mesh: str = "pod16x16") -> str:
+    """Human-readable §Roofline table for EXPERIMENTS.md."""
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | "
+        "bottleneck | useful FLOPs | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(mesh):
+        if rec["status"] == "skip":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — "
+                         f"| SKIP(full-attn) | — | — | — |")
+            continue
+        if rec["status"] != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | ERR | | | "
+                         f"| | | |")
+            continue
+        t = rec["terms"]
+        m = rec["memory"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{rec['bottleneck']} | {rec['useful_flops_ratio']:.2f} | "
+            f"{m['peak'] / 2**30:.2f} | "
+            f"{'Y' if m['fits_16GB'] else 'N'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table())

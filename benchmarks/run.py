@@ -1,0 +1,61 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the
+wall-clock cost of producing that artifact's experiment grid (grids are
+memoized across tables — see benchmarks/_data.py); ``derived`` is the
+reproduced metric.  The roofline table is produced separately by
+``benchmarks.roofline`` from the dry-run artifacts.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "fig2_gen_share",
+    "fig3_iter_status",
+    "table2_prefix_conditioning",
+    "fig4_inflight",
+    "fig6_prefix_cdf",
+    "fig10_e2e",
+    "fig11_feedback",
+    "fig12_inflight_specgen",
+    "table4_utilization",
+    "table5_breakdown",
+    "table6_kernel_speedup",
+    "table7_tokens",
+    "table8_level23",
+    "table9_termination",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    only = sys.argv[1:] or None
+    for mod_name in MODULES:
+        if only and mod_name not in only:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["rows"])
+            for name, us, derived in mod.rows():
+                print(f"{name},{us:.0f},{derived}", flush=True)
+        except Exception:                                  # noqa: BLE001
+            failures += 1
+            print(f"{mod_name},0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if only:
+        return
+    try:
+        from benchmarks import roofline
+        for name, us, derived in roofline.rows():
+            print(f"{name},{us:.0f},{derived}", flush=True)
+    except Exception:                                      # noqa: BLE001
+        print("roofline,0,PENDING(dry-run artifacts incomplete)",
+              flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Table 2 — best speedup from 100 non-reasoning generations w/o and
+w/ conditioning on reasoning prefixes (the paper's core insight)."""
+from benchmarks._data import T10, timed
+from repro.search.workload import WorkloadModel
+
+
+def _best(model, task_id, frac, n=100):
+    wl = WorkloadModel(model, seed=0)
+    t = wl.task(task_id)
+    best = 0.0
+    valid = 0
+    for d in range(n):
+        ok, _ = wl.spec_valid(t, 0, d, frac)
+        if ok:
+            valid += 1
+            best = max(best, wl.speedup(t, 10.0, frac, 0, d, "spec"))
+    return best, valid
+
+
+def rows():
+    out = []
+    for model in ("glm", "dsv4"):
+        for t in T10:
+            (wo, nwo), us = timed(_best, model, t, 0.0)
+            w, nw = _best(model, t, 0.6)
+            out.append((f"table2_wo_prefix_{model}_{t}", us,
+                        round(wo, 2)))
+            out.append((f"table2_w_prefix_{model}_{t}", us,
+                        round(w, 2)))
+    return out

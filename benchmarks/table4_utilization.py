@@ -1,0 +1,29 @@
+"""Table 4 — validation/profiling resource utilization.
+
+Utilization (paper definition): percentage of E2E time during which
+resources are busy.  Device-seconds utilization reported alongside."""
+import numpy as np
+
+from benchmarks._data import BASELINES, T10, baseline_grid, specgen_grid, timed
+
+
+def rows():
+    out = []
+    for model in ("glm", "dsv4"):
+        for base in BASELINES:
+            (scheds, _), us = timed(baseline_grid, base, model)
+            u = float(np.mean([s.utilization_any() for s in
+                               scheds.values()]))
+            out.append((f"table4_util_{model}_{base}", us, round(u, 4)))
+        # SKG without ElasticScheduler: static split, FIFO both
+        (sched_wo, _, _), us = timed(
+            specgen_grid, model, scheduler_mode="static",
+            validation_policy="fifo", work_stealing=True)
+        out.append((f"table4_util_{model}_skg_wo_es", us,
+                    round(sched_wo.utilization_any(), 4)))
+        (sched, _, _), us = timed(specgen_grid, model)
+        out.append((f"table4_util_{model}_skg", us,
+                    round(sched.utilization_any(), 4)))
+        out.append((f"table4_util_devsec_{model}_skg", us,
+                    round(sched.utilization(), 4)))
+    return out

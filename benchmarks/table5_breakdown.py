@@ -1,0 +1,36 @@
+"""Table 5 — incremental performance breakdown (component ablation).
+
+Ladder (paper): baseline -> +speculative generation -> +resource
+reallocation -> +priority queue -> +remote prefix cache.  Speedup is
+geomean E2E over CudaForge on GLM across T1-T10."""
+from benchmarks._data import T10, baseline_grid, gm, specgen_grid, timed
+
+
+LADDER = [
+    ("baseline", None),
+    ("spec_generation", dict(scheduler_mode="static",
+                             validation_policy="fifo",
+                             work_stealing=True, prefix_cache=False)),
+    ("resource_reallocation", dict(scheduler_mode="elastic",
+                                   validation_policy="fifo",
+                                   prefix_cache=False)),
+    ("priority_queue", dict(scheduler_mode="elastic",
+                            validation_policy="laf",
+                            prefix_cache=False)),
+    ("remote_prefix_cache", dict(scheduler_mode="elastic",
+                                 validation_policy="laf",
+                                 prefix_cache=True)),
+]
+
+
+def rows():
+    out = []
+    _, cf = baseline_grid("cudaforge", "glm")
+    for name, kw in LADDER:
+        if kw is None:
+            out.append(("table5_baseline", 0.0, 1.0))
+            continue
+        (sched, res, _), us = timed(specgen_grid, "glm", **kw)
+        ratios = [cf[t].e2e_time / res[t].e2e_time for t in T10]
+        out.append((f"table5_plus_{name}", us, round(gm(ratios), 3)))
+    return out

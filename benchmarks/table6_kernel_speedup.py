@@ -1,0 +1,22 @@
+"""Table 6 — best kernel speedup over the reference after 100 iters."""
+from benchmarks._data import (BASELINES, T10, baseline_grid, gm,
+                              specgen_grid, timed)
+
+
+def rows():
+    out = []
+    for model in ("glm", "dsv4"):
+        (sched, res, _), us = timed(specgen_grid, model)
+        for t in T10:
+            out.append((f"table6_speedup_{model}_skg_{t}", us,
+                        round(res[t].best_speedup, 2)))
+        skg = [res[t].best_speedup for t in T10]
+        out.append((f"table6_geomean_{model}_skg", us,
+                    round(gm(skg), 3)))
+        for base in BASELINES:
+            _, bres = baseline_grid(base, model)
+            lifts = [res[t].best_speedup / max(bres[t].best_speedup, 1e-9)
+                     for t in T10]
+            out.append((f"table6_lift_{model}_{base}", us,
+                        round(gm(lifts), 3)))
+    return out

@@ -1,0 +1,23 @@
+"""Table 7 — token consumption (millions) vs CudaForge."""
+import numpy as np
+
+from benchmarks._data import T10, baseline_grid, specgen_grid, timed
+
+
+def rows():
+    out = []
+    (sched, res, _), us = timed(specgen_grid, "glm")
+    _, cf = baseline_grid("cudaforge", "glm")
+    tot_s = tot_c = 0.0
+    for t in T10:
+        tot_s += res[t].total_tokens
+        tot_c += cf[t].total_tokens
+        out.append((f"table7_tokens_M_skg_{t}", us,
+                    round(res[t].total_tokens / 1e6, 2)))
+        out.append((f"table7_ratio_{t}", us,
+                    round(res[t].total_tokens / cf[t].total_tokens, 2)))
+    out.append(("table7_total_ratio", us, round(tot_s / tot_c, 3)))
+    out.append(("table7_cached_prefix_tokens_M", us,
+                round(sum(res[t].cached_prefix_tokens
+                          for t in T10) / 1e6, 1)))
+    return out

@@ -1,0 +1,26 @@
+"""Table 8 — harder KernelBench Level 2/3 tasks (T11-T20, DeepSeek)."""
+import numpy as np
+
+from benchmarks._data import T20, baseline_grid, gm, specgen_grid, timed
+
+
+def rows():
+    out = []
+    (sched, res, _), us = timed(specgen_grid, "dsv4", tasks=tuple(T20))
+    _, cf = baseline_grid("cudaforge", "dsv4", tasks=tuple(T20))
+    for t in T20:
+        out.append((f"table8_e2e_ks_{t}_skg", us,
+                    round(res[t].e2e_time / 1e3, 1)))
+        out.append((f"table8_speedup_{t}_skg", us,
+                    round(res[t].best_speedup, 2)))
+    e2e = gm([cf[t].e2e_time / res[t].e2e_time for t in T20])
+    fb_cf = np.mean([cf[t].profiling_feedback for t in T20])
+    fb_s = np.mean([res[t].profiling_feedback for t in T20])
+    tok = sum(res[t].total_tokens for t in T20) / \
+        sum(cf[t].total_tokens for t in T20)
+    out.append(("table8_e2e_speedup_geomean", us, round(e2e, 3)))
+    out.append(("table8_feedback_cf_vs_skg", us,
+                f"{fb_cf:.1f}->{fb_s:.1f}"))
+    out.append(("table8_util_skg", us, round(sched.utilization_any(), 3)))
+    out.append(("table8_token_ratio", us, round(tok, 3)))
+    return out

@@ -1,0 +1,27 @@
+"""Table 9 — termination-criterion trade-off (time vs quality)."""
+import numpy as np
+
+from benchmarks._data import T10, baseline_grid, gm, specgen_grid, timed
+
+
+def rows():
+    out = []
+    _, cf = baseline_grid("cudaforge", "glm")
+    cf_tok = sum(cf[t].total_tokens for t in T10)
+    cf_sp = gm([cf[t].best_speedup for t in T10])
+    out.append(("table9_cudaforge_speedup", 0.0, round(cf_sp, 2)))
+    for crit in ("first-valid", "hist-avg", "hist-best", "none"):
+        (sched, res, _), us = timed(specgen_grid, "glm",
+                                    termination=crit)
+        sp = gm([res[t].best_speedup for t in T10])
+        tok = sum(res[t].total_tokens for t in T10) / cf_tok
+        e2e = sum(res[t].e2e_time for t in T10)
+        terms = float(np.mean([res[t].early_terminations for t in T10]))
+        fb = float(np.mean([res[t].profiling_feedback for t in T10]))
+        tag = crit.replace("-", "_")
+        out.append((f"table9_{tag}_kernel_speedup", us, round(sp, 2)))
+        out.append((f"table9_{tag}_token_ratio", us, round(tok, 3)))
+        out.append((f"table9_{tag}_e2e_ks", us, round(e2e / 1e3, 1)))
+        out.append((f"table9_{tag}_num_term", us, round(terms, 1)))
+        out.append((f"table9_{tag}_feedback", us, round(fb, 1)))
+    return out

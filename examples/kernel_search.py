@@ -1,0 +1,50 @@
+"""End-to-end agentic kernel optimization with REAL kernel evaluation.
+
+The LLM side streams scripted reasoning traces (A1 in DESIGN.md), but
+every candidate is a real config of the Pallas tiled-matmul template:
+validation BUILDS the kernel and checks it against the jnp oracle in
+interpret mode; profiling prices it with the TPU roofline cost model.
+The search therefore optimizes a genuine kernel: watch the best block
+configuration improve over iterations.
+
+    PYTHONPATH=src python examples/kernel_search.py [task] [iterations]
+"""
+import sys
+
+from repro.core.clock import EventLoop
+from repro.core.controller import SpecController, SpecGenConfig
+from repro.core.scheduler import ElasticScheduler, SchedulerConfig
+from repro.search.llm_sim import FeedbackSearch, SimLLMBackend
+from repro.search.real_eval import RealEvalBackend
+from repro.search.workload import WorkloadModel
+from repro.kernels.matmul.ops import estimate_cost, reference_cost
+from repro.search.tasks import TASKS
+
+task = sys.argv[1] if len(sys.argv) > 1 else "T6"
+iters = int(sys.argv[2]) if len(sys.argv) > 2 else 12
+
+loop = EventLoop()
+sched = ElasticScheduler(loop, SchedulerConfig(num_devices=2))
+ctl = SpecController(
+    loop, sched, SimLLMBackend(WorkloadModel("glm", seed=0)),
+    RealEvalBackend(), FeedbackSearch(),
+    SpecGenConfig(iterations=iters))
+res = ctl.run_task(task)
+
+td = TASKS[task]
+print(f"\ntask {task} ({td.name}), {iters} iterations, "
+      f"{res.profiling_feedback} profiled kernels")
+best = res.best_candidate
+if best is not None:
+    cfg = {k: v for k, v in best.config.items()
+           if not k.startswith("_")}
+    cost = estimate_cost(td.M, td.N, td.K, bm=cfg["bm"], bn=cfg["bn"],
+                         bk=cfg["bk"], mask=td.mask)
+    ref = reference_cost(td.M, td.N, td.K, mask=td.mask)
+    print(f"best config: {cfg}  (origin={best.origin}, "
+          f"prefix={best.prefix_frac:.0%})")
+    print(f"cost-model speedup over reference: "
+          f"{ref.runtime_s/cost.runtime_s:.2f}x "
+          f"(VMEM {cost.vmem_bytes/2**20:.1f} MiB, "
+          f"aligned={cost.mxu_aligned})")
+print(f"history: {[round(h, 2) for h in res.history[1:]]}")

@@ -1,0 +1,30 @@
+"""Quickstart: SpecGen end-to-end on one kernel-optimization task.
+
+Runs the full system (SpecController + ElasticScheduler + calibrated
+workload) on the Diagonal-Matmul task and prints the paper's headline
+metrics next to the CudaForge baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.search.driver import run_baseline, run_specgen
+
+task, model, iters = "T4", "glm", 40
+
+spec, sched, _ = run_specgen(task, model=model, iterations=iters)
+base, bsched = run_baseline("cudaforge", task, model=model,
+                            iterations=iters)
+
+print(f"task {task} / {model} / {iters} iterations")
+print(f"{'':24s}{'SpecGen':>12s}{'CudaForge':>12s}")
+print(f"{'E2E time (ks)':24s}{spec.e2e_time/1e3:12.1f}"
+      f"{base.e2e_time/1e3:12.1f}")
+print(f"{'profiling feedback':24s}{spec.profiling_feedback:12d}"
+      f"{base.profiling_feedback:12d}")
+print(f"{'best kernel speedup':24s}{spec.best_speedup:12.2f}"
+      f"{base.best_speedup:12.2f}")
+print(f"{'tokens (M)':24s}{spec.total_tokens/1e6:12.2f}"
+      f"{base.total_tokens/1e6:12.2f}")
+print(f"{'early terminations':24s}{spec.early_terminations:12d}"
+      f"{0:12d}")
+print(f"{'pool busy fraction':24s}{sched.utilization_any():12.1%}"
+      f"{bsched.utilization_any():12.1%}")

@@ -1,0 +1,1 @@
+from repro.models.registry import ARCH_IDS, get_config, get_smoke, list_archs  # noqa: F401

@@ -1,0 +1,21 @@
+"""internvl2-1b — InternViT + Qwen2-0.5B-class LM backbone
+[arXiv:2404.16821; hf].
+
+The InternViT frontend is a STUB per the assignment: input_specs()
+provides precomputed patch embeddings prepended to the token stream.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b", family="vlm",
+    num_layers=24, d_model=896, num_heads=14, num_kv_heads=2, head_dim=64,
+    d_ff=4864, vocab_size=151655, qkv_bias=True, rope_theta=1_000_000.0,
+    tie_embeddings=True, frontend="vision_patches", frontend_tokens=256,
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-1b-smoke", family="vlm",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, qkv_bias=True, rope_theta=1_000_000.0,
+    tie_embeddings=True, frontend="vision_patches", frontend_tokens=16,
+)

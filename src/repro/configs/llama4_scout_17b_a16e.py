@@ -1,0 +1,21 @@
+"""llama4-scout-17b-a16e — MoE 16e top-1 + shared expert, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+Early-fusion multimodality is a frontend concern; the assigned backbone is
+the text decoder (vision tower stubbed per the assignment spec).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=202048, num_experts=16, experts_per_token=1,
+    shared_expert=True, rope_theta=500_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="llama4-scout-smoke", family="moe",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, num_experts=4, experts_per_token=1,
+    shared_expert=True, rope_theta=500_000.0,
+)

@@ -1,0 +1,17 @@
+"""mamba2-2.7b — attention-free SSD (state-space duality)
+[arXiv:2405.21060; unverified]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b", family="ssm",
+    num_layers=64, d_model=2560, vocab_size=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_conv=4, ssm_chunk=256,
+    pos_emb="none",
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-2.7b-smoke", family="ssm",
+    num_layers=2, d_model=64, vocab_size=256,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=16, ssm_conv=4, ssm_chunk=32,
+    pos_emb="none",
+)

@@ -1,0 +1,23 @@
+"""musicgen-medium — decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+
+The EnCodec frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings; the backbone is a standard MHA decoder with
+sinusoidal positions and non-gated GELU MLP.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="audio",
+    num_layers=48, d_model=1536, num_heads=24, num_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab_size=2048, pos_emb="sinusoidal",
+    mlp_gated=False, mlp_act="gelu", norm_type="layernorm",
+    frontend="audio_frames",
+)
+
+SMOKE = ModelConfig(
+    name="musicgen-medium-smoke", family="audio",
+    num_layers=2, d_model=96, num_heads=4, num_kv_heads=4, head_dim=24,
+    d_ff=192, vocab_size=128, pos_emb="sinusoidal",
+    mlp_gated=False, mlp_act="gelu", norm_type="layernorm",
+    frontend="audio_frames",
+)

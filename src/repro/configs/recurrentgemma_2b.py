@@ -1,0 +1,21 @@
+"""recurrentgemma-2b — RG-LRU + local attention, pattern (R,R,L) = 1:2
+[arXiv:2402.19427; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab_size=256000, mlp_act="gelu",
+    block_pattern=("rglru", "rglru", "local"), local_window=2048,
+    lru_width=2560, conv1d_width=4, tie_embeddings=True,
+    logit_softcap=30.0,
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-2b-smoke", family="hybrid",
+    num_layers=3, d_model=64, num_heads=4, num_kv_heads=1, head_dim=16,
+    d_ff=192, vocab_size=256, mlp_act="gelu",
+    block_pattern=("rglru", "rglru", "local"), local_window=32,
+    lru_width=64, conv1d_width=4, tie_embeddings=True,
+    logit_softcap=30.0,
+)

@@ -1,0 +1,21 @@
+"""starcoder2-3b — dense, GQA + RoPE, LayerNorm/bias, non-gated GELU MLP
+[arXiv:2402.19173; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b", family="dense",
+    num_layers=30, d_model=3072, num_heads=24, num_kv_heads=2, head_dim=128,
+    d_ff=12288, vocab_size=49152, rope_theta=100_000.0,
+    mlp_gated=False, mlp_act="gelu", mlp_bias=True,
+    qkv_bias=True, attn_out_bias=True, norm_type="layernorm",
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="starcoder2-3b-smoke", family="dense",
+    num_layers=2, d_model=96, num_heads=6, num_kv_heads=2, head_dim=16,
+    d_ff=384, vocab_size=512, rope_theta=100_000.0,
+    mlp_gated=False, mlp_act="gelu", mlp_bias=True,
+    qkv_bias=True, attn_out_bias=True, norm_type="layernorm",
+    tie_embeddings=True,
+)

@@ -1,0 +1,79 @@
+"""Discrete-event loop: one runtime, two clocks.
+
+The entire SpecGen runtime (controller, scheduler, workload) is written
+against this loop.  Under ``VirtualClock`` the paper's 10,000-second
+traces replay in milliseconds; under ``WallClock`` the same code runs
+real work (tiny-model engine + interpret-mode kernels) and the measured
+durations drive the identical event semantics — so benchmarks and the
+real-path examples exercise the same controller/scheduler code.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from typing import Callable, List, Optional
+
+
+class Event:
+    __slots__ = ("time", "seq", "fn", "cancelled", "tag")
+
+    def __init__(self, time: float, seq: int, fn: Callable[[], None],
+                 tag: str = ""):
+        self.time, self.seq, self.fn = time, seq, fn
+        self.cancelled = False
+        self.tag = tag
+
+    def __lt__(self, other: "Event") -> bool:
+        return (self.time, self.seq) < (other.time, other.seq)
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
+class EventLoop:
+    def __init__(self):
+        self._now = 0.0
+        self._heap: List[Event] = []
+        self._seq = itertools.count()
+        self.events_run = 0
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def schedule(self, delay: float, fn: Callable[[], None],
+                 tag: str = "") -> Event:
+        ev = Event(self._now + max(delay, 0.0), next(self._seq), fn, tag)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def run(self, until: Optional[float] = None,
+            stop: Optional[Callable[[], bool]] = None) -> None:
+        while self._heap:
+            if stop is not None and stop():
+                return
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            if until is not None and ev.time > until:
+                heapq.heappush(self._heap, ev)
+                self._now = until
+                return
+            self._now = ev.time
+            self.events_run += 1
+            ev.fn()
+
+    def drain(self) -> None:
+        self._heap.clear()
+
+
+class StopWatch:
+    """Wall-clock duration measurement for real-mode tasks."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.perf_counter() - self.t0

@@ -1,0 +1,370 @@
+"""SpecController (paper Algorithm 1) on the discrete-event loop.
+
+The controller wraps a user-specified LLM backend, prompt/search
+algorithm and termination criterion (paper §5 step 1: SpecGen requires
+no changes to the underlying LLM or search algorithm).  Per iteration:
+
+  * start the main reasoning generation and stream its trace,
+  * parse trigger signals (``core.triggers``) — or fork on idle devices,
+  * fork K = max(1, min(C.val, C.prof)) non-reasoning speculative
+    generations conditioned on the reasoning prefix (prefix KV reuse via
+    the two-tier store => near-zero re-prefill token cost),
+  * dispatch emitted kernels to the ElasticScheduler for validation
+    (LAF) and profiling (FIFO),
+  * early-terminate the reasoning generation when a speculative kernel
+    meets the termination criterion (default: historical mean speedup),
+  * at the iteration boundary abort in-flight work, update the search
+    algorithm state, and continue.
+
+The controller is continuation-style (no nested event-loop runs), so
+many controllers can share one EventLoop + ElasticScheduler pool — the
+paper's evaluation setting (10 agent workflows, one device pool).
+
+Token accounting follows §8.7: reasoning tokens are prorated at early
+termination; speculative prompt tokens hit the prefix cache and only
+the un-cached suffix is charged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+
+from repro.core.clock import EventLoop
+from repro.core.scheduler import ElasticScheduler
+from repro.core.termination import get_criterion
+from repro.core.triggers import StreamTriggerParser
+from repro.core.types import (IterationRecord, KernelCandidate,
+                              ProfileResult, Request, ValidationResult)
+
+
+# ------------------------------------------------------------- protocols
+@dataclasses.dataclass
+class ReasoningScript:
+    """A reasoning generation as the controller consumes it."""
+    duration: float
+    total_tokens: int
+    chunks: List[Tuple[float, str]]          # (rel_time, text)
+    candidate_fn: Callable[[], Optional[KernelCandidate]]
+
+
+@dataclasses.dataclass
+class SpecScript:
+    """A speculative (non-reasoning) generation."""
+    duration: float
+    tokens: int                              # output tokens
+    prompt_tokens: int                       # reasoning-prefix tokens
+    candidate: Optional[KernelCandidate]
+
+
+class LLMBackend(Protocol):
+    def reasoning(self, task_id: str, iteration: int,
+                  ctx: Dict[str, Any]) -> ReasoningScript: ...
+    def speculative(self, task_id: str, iteration: int, ctx: Dict[str, Any],
+                    prefix_frac: float) -> SpecScript: ...
+
+
+class EvalBackend(Protocol):
+    def validate(self, cand: KernelCandidate
+                 ) -> Tuple[float, ValidationResult]: ...
+    def profile(self, cand: KernelCandidate
+                ) -> Tuple[float, ProfileResult]: ...
+
+
+class SearchAlgorithm(Protocol):
+    def init_ctx(self, task_id: str) -> Dict[str, Any]: ...
+    def update(self, ctx: Dict[str, Any], best: Optional[KernelCandidate],
+               feedback: List[ProfileResult]) -> Dict[str, Any]: ...
+
+
+@dataclasses.dataclass
+class SpecGenConfig:
+    iterations: int = 100
+    termination: Any = "hist-avg"
+    enable_speculation: bool = True          # ablation: off => baseline
+    idle_fork: bool = True                   # fork when pool idles (§6.1.1)
+    idle_probe_interval: float = 110.0
+    max_concurrent_spec: int = 2             # serving-capacity bound
+    prefix_cache: bool = True                # remote KV reuse (§6.2.3)
+    min_prefix_frac: float = 0.05            # don't fork on empty traces
+
+
+@dataclasses.dataclass
+class TaskResult:
+    task_id: str
+    records: List[IterationRecord]
+    best_speedup: float
+    best_candidate: Optional[KernelCandidate]
+    total_tokens: float
+    reasoning_tokens: float
+    spec_tokens: float
+    cached_prefix_tokens: float
+    e2e_time: float
+    profiling_feedback: int
+    early_terminations: int
+    history: List[float]
+
+
+class SpecController:
+    def __init__(self, loop: EventLoop, scheduler: ElasticScheduler,
+                 llm: LLMBackend, evaluator: EvalBackend,
+                 search: SearchAlgorithm, cfg: SpecGenConfig,
+                 name: str = "w0"):
+        self.loop, self.sched = loop, scheduler
+        self.llm, self.evaluator, self.search = llm, evaluator, search
+        self.cfg = cfg
+        self.name = name
+        self.criterion = get_criterion(cfg.termination)
+        self.gen_timeline: List[tuple] = []     # (t, reasoning+spec inflight)
+        self.done = False
+        self.result: Optional[TaskResult] = None
+        self._on_done: Optional[Callable[["SpecController"], None]] = None
+
+    # ------------------------------------------------------------ main API
+    def run_task(self, task_id: str) -> TaskResult:
+        """Single-workflow convenience: start + drive the loop."""
+        self.start(task_id)
+        self.loop.run(stop=lambda: self.done)
+        assert self.result is not None
+        return self.result
+
+    def start(self, task_id: str,
+              on_done: Optional[Callable[["SpecController"], None]] = None
+              ) -> None:
+        self._on_done = on_done
+        self._task_id = task_id
+        self._ctx = self.search.init_ctx(task_id)
+        self._history: List[float] = [0.0]        # H <- {0} (Alg 1 line 1)
+        self._best: Optional[KernelCandidate] = None
+        self._best_speedup = 0.0
+        self._records: List[IterationRecord] = []
+        self._tok = {"reason": 0.0, "spec": 0.0, "cached": 0.0}
+        self._early_terms = 0
+        self._feedback_total = 0
+        self._t0 = self.loop.now
+        # schedule the first iteration as an event so multiple controllers
+        # can be started before the loop runs
+        self.loop.schedule(0.0, lambda: self._begin_iteration(0))
+
+    # -------------------------------------------------------- one iteration
+    def _begin_iteration(self, it: int) -> None:
+        if it >= self.cfg.iterations:
+            self._finalize()
+            return
+        rec = IterationRecord(index=it, t_start=self.loop.now)
+        self.sched.begin_iteration(it)
+        task_id, ctx = self._task_id, self._ctx
+        script = self.llm.reasoning(task_id, it, ctx)
+        parser = StreamTriggerParser()
+        state = {
+            "it": it, "rec": rec, "script": script, "parser": parser,
+            "done": False, "reason_done": False, "terminated": False,
+            "spec_live": 0, "spec_events": [], "chunk_events": [],
+            "fallback_pending": False, "best": None,
+            "t_gen_start": self.loop.now,
+            "chars_total": max(sum(len(c) for _, c in script.chunks), 1),
+            "chars_seen": 0,
+        }
+
+        def on_chunk(text):
+            if state["done"] or state["terminated"]:
+                return
+            state["chars_seen"] += len(text)
+            triggers = parser.feed(text)
+            if self.cfg.enable_speculation and triggers:
+                self._fork(state)
+
+        def on_reason_complete():
+            if state["done"] or state["terminated"]:
+                return
+            state["reason_done"] = True
+            rec.gen_time += script.duration
+            self._tok["reason"] += script.total_tokens
+            rec.reasoning_tokens += script.total_tokens
+            cand = script.candidate_fn()
+            if cand is not None:
+                cand.iteration = it
+                cand.origin = "reasoning"
+                cand.prefix_frac = 1.0
+                rec.candidates += 1
+                state["fallback_pending"] = True
+                self._submit_validation(cand, state, fallback=True)
+            else:
+                self._maybe_finish(state)
+
+        for rel_t, text in script.chunks:
+            state["chunk_events"].append(
+                self.loop.schedule(rel_t, lambda x=text: on_chunk(x),
+                                   tag="chunk"))
+        state["chunk_events"].append(
+            self.loop.schedule(script.duration, on_reason_complete,
+                               tag="reason-done"))
+
+        # idle-fork probe (Alg 1 line 7: "... or GPU is idle")
+        if self.cfg.enable_speculation and self.cfg.idle_fork:
+            def idle_probe():
+                if state["done"] or state["terminated"] or \
+                        state["reason_done"]:
+                    return
+                if (self.sched.idle_val > 0 or self.sched.idle_prof > 0) \
+                        and state["spec_live"] < self.cfg.max_concurrent_spec:
+                    self._fork(state)
+                state["chunk_events"].append(
+                    self.loop.schedule(self.cfg.idle_probe_interval,
+                                       idle_probe, tag="idle-probe"))
+            state["chunk_events"].append(
+                self.loop.schedule(self.cfg.idle_probe_interval, idle_probe,
+                                   tag="idle-probe"))
+
+    # ----------------------------------------------------------- fork logic
+    def _fork(self, state) -> None:
+        if state["terminated"] or state["reason_done"] or state["done"]:
+            return
+        # K = max(1, min(C.val, C.prof)) (Alg 1 line 10), where capacity
+        # is the currently *idle* split — "enough candidates to keep GPUs
+        # busy without overloading the queues" (§6.1.1).  Under queue
+        # pressure (shared pool, bursty arrivals) forking pauses.
+        if len(self.sched.q_val) >= self.sched.cfg.num_devices:
+            return
+        cval = max(self.sched.idle_val, 1 if self.sched.idle_prof else 0)
+        cprof = max(self.sched.idle_prof, 1 if self.sched.idle_val else 0)
+        k = max(1, min(cval, cprof)) if (cval or cprof) else 1
+        k = min(k, self.cfg.max_concurrent_spec - state["spec_live"])
+        if k <= 0:
+            return
+        frac = min(1.0, state["chars_seen"] / state["chars_total"])
+        if frac < self.cfg.min_prefix_frac:
+            return
+        it, rec = state["it"], state["rec"]
+        for _ in range(k):
+            spec = self.llm.speculative(self._task_id, it, self._ctx, frac)
+            state["spec_live"] += 1
+            self._mark_gen(state)
+            # prefix-cache accounting (paper §6.2.3): fork prompt KV is
+            # shared with the live reasoning generation; without the
+            # remote cache the fork re-prefills its prompt (token cost
+            # AND latency at the serving prefill rate)
+            if self.cfg.prefix_cache:
+                self._tok["cached"] += spec.prompt_tokens
+                rec.cached_prefix_tokens += spec.prompt_tokens
+            else:
+                self._tok["spec"] += spec.prompt_tokens
+                rec.spec_tokens += spec.prompt_tokens
+                spec.duration += spec.prompt_tokens / 2500.0
+
+            def on_spec_done(s=spec):
+                state["spec_live"] -= 1
+                self._mark_gen(state)
+                if state["done"] or state["terminated"]:
+                    return
+                self._tok["spec"] += s.tokens
+                rec.spec_tokens += s.tokens
+                if s.candidate is not None:
+                    s.candidate.iteration = it
+                    rec.candidates += 1
+                    self._submit_validation(s.candidate, state,
+                                            fallback=False)
+            state["spec_events"].append(
+                self.loop.schedule(spec.duration, on_spec_done, tag="spec"))
+
+    # ------------------------------------------------- validation/profiling
+    def _submit_validation(self, cand, state, fallback: bool) -> None:
+        rec = state["rec"]
+        dur, res = self.evaluator.validate(cand)
+
+        def done(req: Request):
+            if req.cancelled or state["done"]:
+                return
+            if res.ok:
+                rec.validated += 1
+                self._submit_profile(cand, state, fallback)
+            else:
+                rec.status = res.failure or "invalid"
+                if fallback:
+                    state["fallback_pending"] = False
+                    self._maybe_finish(state)
+        self.sched.submit(Request(kind="validation", candidate=cand,
+                                  duration=dur, on_complete=done,
+                                  owner=self.name))
+
+    def _submit_profile(self, cand, state, fallback: bool) -> None:
+        rec = state["rec"]
+        dur, res = self.evaluator.profile(cand)
+
+        def done(req: Request):
+            if req.cancelled or state["done"]:
+                return
+            rec.profiled += 1
+            rec.status = "success"
+            speedup = res.speedup
+            prior = list(self._history)            # H before this kernel
+            self._history.append(speedup)
+            if state["best"] is None or speedup > state["best"][1]:
+                state["best"] = (cand, speedup)
+            if fallback:
+                state["fallback_pending"] = False
+                self._maybe_finish(state)
+                return
+            if not state["terminated"] and self.criterion(prior, speedup):
+                self._terminate(state)
+        self.sched.submit(Request(kind="profiling", candidate=cand,
+                                  duration=dur, on_complete=done,
+                                  owner=self.name))
+
+    # ----------------------------------------------------------- completion
+    def _terminate(self, state) -> None:
+        """Early termination (Alg 1 lines 17-20)."""
+        rec, script = state["rec"], state["script"]
+        state["terminated"] = True
+        rec.early_terminated = True
+        self._early_terms += 1
+        consumed = min(1.0, (self.loop.now - state["t_gen_start"])
+                       / max(script.duration, 1e-9))
+        self._tok["reason"] += consumed * script.total_tokens
+        rec.reasoning_tokens += int(consumed * script.total_tokens)
+        rec.gen_time += self.loop.now - state["t_gen_start"]
+        for ev in state["chunk_events"] + state["spec_events"]:
+            ev.cancel()
+        self._finish_iteration(state)
+
+    def _maybe_finish(self, state) -> None:
+        if state["reason_done"] and not state["fallback_pending"] \
+                and not state["done"]:
+            for ev in state["spec_events"]:
+                ev.cancel()
+            self._finish_iteration(state)
+
+    def _finish_iteration(self, state) -> None:
+        state["done"] = True
+        rec = state["rec"]
+        rec.t_end = self.loop.now
+        self._records.append(rec)
+        self._feedback_total += rec.profiled
+        if state["best"] is not None and \
+                state["best"][1] > self._best_speedup:
+            self._best, self._best_speedup = state["best"]
+        rec.best_speedup = self._best_speedup
+        self.sched.end_iteration(owner=self.name)
+        fb = [ProfileResult(speedup=s) for s in self._history[1:]]
+        self._ctx = self.search.update(self._ctx, self._best, fb)
+        self.loop.schedule(0.0,
+                           lambda: self._begin_iteration(state["it"] + 1))
+
+    def _finalize(self) -> None:
+        self.done = True
+        self.result = TaskResult(
+            task_id=self._task_id, records=self._records,
+            best_speedup=self._best_speedup, best_candidate=self._best,
+            total_tokens=self._tok["reason"] + self._tok["spec"],
+            reasoning_tokens=self._tok["reason"],
+            spec_tokens=self._tok["spec"],
+            cached_prefix_tokens=self._tok["cached"],
+            e2e_time=self.loop.now - self._t0,
+            profiling_feedback=self._feedback_total,
+            early_terminations=self._early_terms, history=self._history)
+        if self._on_done is not None:
+            self._on_done(self)
+
+    def _mark_gen(self, state) -> None:
+        self.gen_timeline.append(
+            (self.loop.now,
+             (0 if state["reason_done"] else 1) + state["spec_live"]))

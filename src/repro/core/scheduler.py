@@ -1,0 +1,254 @@
+"""ElasticScheduler (paper Algorithm 2).
+
+One elastic device pool, dynamically split between validation and
+profiling from the previous iteration's max queue lengths:
+
+    G_prof = min(G-1, max(1, ceil(G * L_p / (L_v + L_p)))),
+    G_val  = G - G_prof          (even split when L_v + L_p == 0)
+
+Queues: validation LAF (later candidates carry more reasoning prefix),
+profiling FIFO (oldest validated kernel first => freshest feedback
+latency bound).  At an iteration boundary, in-flight requests are
+aborted and both queues cleared so speculative tails never delay the
+next iteration.
+
+``static`` mode reproduces the legacy "one GPU per kernel-phase"
+partitioning used by the baselines and the SKG-w/o-ES ablation.
+
+Devices are exclusive (one request at a time) — profiling accuracy
+requires it (§2) and the utilization accounting below measures exactly
+the paper's Table 4 metric: fraction of elapsed time devices are busy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+from repro.core.clock import EventLoop, StopWatch
+from repro.core.types import Request
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    num_devices: int = 2
+    mode: str = "elastic"            # elastic | static
+    validation_policy: str = "laf"   # laf | fifo
+    profiling_policy: str = "fifo"   # fifo | laf
+    static_split: Optional[tuple] = None   # (val, prof) for static mode
+    # BEYOND-PAPER: let an idle device serve the other pool's queue
+    # within an iteration (the paper only rebalances between iterations).
+    # Off by default to keep the paper-faithful ablation clean; measured
+    # separately in EXPERIMENTS.md §Perf.
+    work_stealing: bool = False
+
+
+class _Device:
+    __slots__ = ("idx", "pool", "busy", "req", "busy_since", "busy_total",
+                 "completion")
+
+    def __init__(self, idx: int):
+        self.idx = idx
+        self.pool = "validation"
+        self.busy = False
+        self.req: Optional[Request] = None
+        self.busy_since = 0.0
+        self.busy_total = 0.0
+        self.completion = None           # scheduled Event
+
+
+class ElasticScheduler:
+    def __init__(self, loop: EventLoop, cfg: SchedulerConfig):
+        self.loop = loop
+        self.cfg = cfg
+        self.devices = [_Device(i) for i in range(cfg.num_devices)]
+        self.q_val: Deque[Request] = deque()
+        self.q_prof: Deque[Request] = deque()
+        self.L_val = 0
+        self.L_prof = 0
+        self.iteration = 0
+        self.timeline: List[tuple] = []      # (t, inflight_val, inflight_prof)
+        self.completed: List[Request] = []
+        self.aborted: List[Request] = []
+        self._t0 = loop.now
+        self._set_split(*self._initial_split())
+
+    # ------------------------------------------------------------ splitting
+    def _initial_split(self):
+        g = self.cfg.num_devices
+        if self.cfg.mode == "static" and self.cfg.static_split:
+            return self.cfg.static_split
+        return (g - g // 2, g // 2) if g > 1 else (1, 0)
+
+    def _set_split(self, n_val: int, n_prof: int) -> None:
+        assert n_val + n_prof == self.cfg.num_devices
+        for i, d in enumerate(self.devices):
+            # only reassign idle devices' pools; busy ones keep their pool
+            # until completion (they are aborted at iteration boundaries
+            # anyway, so splits settle immediately in practice)
+            if not d.busy:
+                d.pool = "validation" if i < n_val else "profiling"
+        self.n_val, self.n_prof = n_val, n_prof
+
+    def allocate(self) -> tuple:
+        """Paper §6.2.1 reallocation from last iteration's queue maxima."""
+        g = self.cfg.num_devices
+        if self.cfg.mode == "static":
+            return self._initial_split()
+        lv, lp = self.L_val, self.L_prof
+        if lv + lp == 0:
+            return (g - g // 2, g // 2) if g > 1 else (1, 0)
+        n_prof = min(g - 1, max(1, math.ceil(g * lp / (lv + lp))))
+        return g - n_prof, n_prof
+
+    # ------------------------------------------------------------ lifecycle
+    def begin_iteration(self, index: int) -> None:
+        self.iteration = index
+        self._set_split(*self.allocate())
+        self.L_val = 0
+        self.L_prof = 0
+
+    def end_iteration(self, owner: str = "") -> None:
+        """Abort in-flight requests, clear queues (paper Alg. 2 line 10).
+
+        With a shared pool (multiple concurrent workflows), only the
+        finishing workflow's requests are aborted (owner-scoped)."""
+        def match(r: Request) -> bool:
+            return not owner or r.owner == owner
+        for d in self.devices:
+            if d.busy and d.req is not None and match(d.req):
+                d.req.cancelled = True
+                if d.completion is not None:
+                    d.completion.cancel()
+                self.aborted.append(d.req)
+                self._release(d, record=True)
+        for q in (self.q_val, self.q_prof):
+            keep = [r for r in q if not match(r)]
+            for r in q:
+                if match(r):
+                    r.cancelled = True
+                    self.aborted.append(r)
+            q.clear()
+            q.extend(keep)
+        self._mark()
+        self._dispatch()
+
+    # -------------------------------------------------------------- submit
+    def submit(self, req: Request) -> None:
+        req.arrival = self.loop.now
+        req.iteration = self.iteration
+        q = self.q_val if req.kind == "validation" else self.q_prof
+        q.append(req)
+        self.L_val = max(self.L_val, len(self.q_val))
+        self.L_prof = max(self.L_prof, len(self.q_prof))
+        self._mark()
+        self._dispatch()
+
+    # ------------------------------------------------------------ dispatch
+    def _pick(self, kind: str) -> Optional[Request]:
+        q = self.q_val if kind == "validation" else self.q_prof
+        pol = (self.cfg.validation_policy if kind == "validation"
+               else self.cfg.profiling_policy)
+        if not q:
+            return None
+        return q.pop() if pol == "laf" else q.popleft()
+
+    def _dispatch(self) -> None:
+        progressed = True
+        while progressed:
+            progressed = False
+            for d in self.devices:
+                if d.busy:
+                    continue
+                kind = d.pool
+                req = self._pick(kind)
+                if req is None and self.cfg.work_stealing:
+                    other = ("profiling" if kind == "validation"
+                             else "validation")
+                    req = self._pick(other)
+                if req is None:
+                    continue
+                self._start(d, req)
+                progressed = True
+
+    def _start(self, d: _Device, req: Request) -> None:
+        d.busy = True
+        d.req = req
+        d.busy_since = self.loop.now
+        req.started = self.loop.now
+        if req.run is not None and req.duration == 0.0:
+            with StopWatch() as sw:          # real mode: do the work now
+                req.result = req.run()
+            req.duration = sw.elapsed
+        d.completion = self.loop.schedule(
+            req.duration, lambda dd=d, rr=req: self._complete(dd, rr),
+            tag=f"{req.kind}-done")
+        self._mark()
+
+    def _complete(self, d: _Device, req: Request) -> None:
+        req.finished = self.loop.now
+        self._release(d, record=True)
+        self.completed.append(req)
+        self._mark()
+        if req.on_complete is not None:
+            req.on_complete(req)
+        self._dispatch()
+
+    def _release(self, d: _Device, record: bool) -> None:
+        if record and d.busy:
+            d.busy_total += self.loop.now - d.busy_since
+        d.busy = False
+        d.req = None
+        d.completion = None
+
+    # ------------------------------------------------------------- metrics
+    def _mark(self) -> None:
+        run_v = sum(1 for d in self.devices
+                    if d.busy and d.req.kind == "validation")
+        run_p = sum(1 for d in self.devices
+                    if d.busy and d.req.kind == "profiling")
+        # (t, in-flight val, in-flight prof, running val, running prof)
+        self.timeline.append((self.loop.now, run_v + len(self.q_val),
+                              run_p + len(self.q_prof), run_v, run_p))
+
+    def utilization(self, t_end: Optional[float] = None) -> float:
+        """Device-seconds utilization: busy time / (devices x elapsed)."""
+        t_end = self.loop.now if t_end is None else t_end
+        elapsed = max(t_end - self._t0, 1e-9)
+        busy = sum(d.busy_total
+                   + ((t_end - d.busy_since) if d.busy else 0.0)
+                   for d in self.devices)
+        return busy / (elapsed * len(self.devices))
+
+    def utilization_any(self, t_end: Optional[float] = None) -> float:
+        """Paper Table 4 metric: 'percentage of E2E time during which
+        resources are busy' — the fraction of elapsed time the pool has
+        at least one busy device (computed from the timeline marks)."""
+        t_end = self.loop.now if t_end is None else t_end
+        if not self.timeline:
+            return 0.0
+        busy_t = 0.0
+        prev_t, prev_busy = self._t0, False
+        for (t, _iv, _ip, rv, rp) in self.timeline:
+            t = min(t, t_end)
+            if prev_busy:
+                busy_t += t - prev_t
+            prev_t, prev_busy = t, (rv + rp) > 0
+        if prev_busy and t_end > prev_t:
+            busy_t += t_end - prev_t
+        return busy_t / max(t_end - self._t0, 1e-9)
+
+    @property
+    def idle_val(self) -> int:
+        return sum(1 for d in self.devices
+                   if not d.busy and d.pool == "validation")
+
+    @property
+    def idle_prof(self) -> int:
+        return sum(1 for d in self.devices
+                   if not d.busy and d.pool == "profiling")
+
+    @property
+    def capacity(self) -> tuple:
+        return (self.n_val, self.n_prof)

@@ -1,0 +1,47 @@
+"""Termination criteria (paper §6.1.2 + §8.9 Table 9).
+
+A criterion sees the speedup history ``H`` (profiled kernels so far,
+seeded with {0}) and a new speculative kernel's measured speedup, and
+decides whether to terminate the ongoing reasoning generation.  The
+default is the paper's historical-average threshold; the interface is
+user-extensible (cfg: a callable) exactly as §6.1.2 promises.
+"""
+from __future__ import annotations
+
+from typing import Callable, List
+
+Criterion = Callable[[List[float], float], bool]
+
+
+def first_valid(history: List[float], speedup: float) -> bool:
+    return speedup > 0.0
+
+
+def hist_avg(history: List[float], speedup: float) -> bool:
+    if not history:
+        return speedup > 0.0
+    return speedup > sum(history) / len(history)
+
+
+def hist_best(history: List[float], speedup: float) -> bool:
+    if not history:
+        return speedup > 0.0
+    return speedup > max(history)
+
+
+def no_term(history: List[float], speedup: float) -> bool:
+    return False
+
+
+CRITERIA = {
+    "first-valid": first_valid,
+    "hist-avg": hist_avg,
+    "hist-best": hist_best,
+    "none": no_term,
+}
+
+
+def get_criterion(name_or_fn) -> Criterion:
+    if callable(name_or_fn):
+        return name_or_fn
+    return CRITERIA[name_or_fn]

@@ -1,0 +1,120 @@
+"""Trigger-signal parser over streaming reasoning traces (paper §6.1.1).
+
+Four trigger classes, implemented as regular expressions (the paper
+derives its patterns from 38,745 GLM/DeepSeek traces; ours encode the
+same classes, with TPU/Pallas surface forms added alongside the CUDA
+ones since this system's candidates are Pallas kernels):
+
+  1. kernel-design decisions  (tile shapes/sizes, instruction choices)
+  2. fenced code blocks       (```cuda / ```cpp / ```python / ```triton)
+  3. kernel-body completion   (__global__ fn with brace-balanced body,
+                               or a complete pallas kernel def)
+  4. implementation phrases   ("Let me implement", "Here is the plan"...)
+
+The parser is streaming: ``feed(chunk)`` returns the triggers newly
+completed by that chunk, each with the prefix length (chars) at which it
+fired — SpecController uses that position to cut the speculative prompt.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import List
+
+DESIGN_DECISION = re.compile(
+    r"""(?ix)
+    (?:\btile\s*(?:size|shape|dims?)\b[^.\n]{0,40}?\d+ |
+       \bBLOCK_[MNKXY]\s*=\s*\d+ |
+       \bblock\s*(?:size|shape)\b[^.\n]{0,40}?\d+ |
+       \b\d+\s*[x×]\s*\d+\s*(?:tile|block|thread|grid)s? |
+       \buse\s+(?:shared\s+memory|tensor\s+cores?|warp\s+shuffle|
+                 the\s+MXU|VMEM|vector\s+registers?) |
+       \bparallelize\s+(?:over|across) |
+       \b(?:wmma|mma\.sync|ldmatrix|cp\.async|__shfl|float4) |
+       \bgrid\s*(?:size|dims?)\b[^.\n]{0,40}?\d+ |
+       \bunroll(?:ing)?\s+(?:factor|by)\b[^.\n]{0,20}?\d+)
+    """)
+
+FENCED_BLOCK = re.compile(
+    r"```(?:cuda|cpp|c\+\+|python|triton|pallas)\b.*?```", re.S | re.I)
+
+KERNEL_BODY_CUDA = re.compile(
+    r"__global__\s+\w+\s+\w+\s*\([^)]*\)\s*\{")
+KERNEL_BODY_PALLAS = re.compile(
+    r"def\s+\w*kernel\w*\s*\([^)]*\)\s*:")
+
+IMPL_PHRASE = re.compile(
+    r"""(?ix)
+    \b(?:let\s+me\s+(?:implement|write|code|now\s+implement) |
+        here\s+is\s+(?:the\s+plan|my\s+plan|the\s+implementation|
+                      the\s+kernel) |
+        i(?:'ll|\s+will)\s+(?:implement|write\s+the\s+kernel|now\s+code) |
+        now\s+(?:i\s+will\s+)?(?:implement|write)\s+(?:the|this) |
+        time\s+to\s+(?:implement|write\s+the\s+kernel))
+    """)
+
+
+@dataclasses.dataclass
+class Trigger:
+    kind: str           # design | fenced | body | phrase
+    position: int       # chars of reasoning prefix when it fired
+    text: str = ""
+
+
+def _balanced_after(text: str, open_idx: int) -> bool:
+    """Is the brace opened at open_idx closed within text?"""
+    depth = 0
+    for ch in text[open_idx:]:
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                return True
+    return False
+
+
+class StreamTriggerParser:
+    """Incremental trigger detection with per-class dedup + cooldown."""
+
+    def __init__(self, min_gap_chars: int = 200):
+        self.buf = ""
+        self.min_gap = min_gap_chars
+        self._last_fire = -10 ** 9
+        self._seen_spans: set = set()
+
+    def feed(self, chunk: str) -> List[Trigger]:
+        prev_len = len(self.buf)
+        self.buf += chunk
+        out: List[Trigger] = []
+        # scan from a little before the chunk so patterns spanning the
+        # boundary are caught, but never refire an already-seen span
+        start = max(0, prev_len - 4096)
+        window = self.buf[start:]
+
+        def consider(kind: str, m_start: int, m_end: int, text: str):
+            span = (kind, start + m_start, start + m_end)
+            if span in self._seen_spans:
+                return
+            pos = start + m_end
+            if pos <= prev_len:           # completed before this chunk
+                self._seen_spans.add(span)
+                return
+            self._seen_spans.add(span)
+            if pos - self._last_fire < self.min_gap:
+                return
+            self._last_fire = pos
+            out.append(Trigger(kind=kind, position=pos, text=text[:80]))
+
+        for m in DESIGN_DECISION.finditer(window):
+            consider("design", m.start(), m.end(), m.group(0))
+        for m in FENCED_BLOCK.finditer(window):
+            consider("fenced", m.start(), m.end(), m.group(0))
+        for m in KERNEL_BODY_CUDA.finditer(window):
+            if _balanced_after(window, m.end() - 1):
+                consider("body", m.start(), m.end(), m.group(0))
+        for m in KERNEL_BODY_PALLAS.finditer(window):
+            consider("body", m.start(), m.end(), m.group(0))
+        for m in IMPL_PHRASE.finditer(window):
+            consider("phrase", m.start(), m.end(), m.group(0))
+        return out

@@ -1,0 +1,66 @@
+"""Shared datatypes of the agentic kernel-optimization runtime."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional
+
+_kid = itertools.count()
+
+
+@dataclasses.dataclass
+class KernelCandidate:
+    task_id: str
+    config: Dict[str, Any]               # Pallas template parameters
+    source: str = ""                     # textual surface form (parseable)
+    origin: str = "reasoning"            # reasoning | spec | nonreasoning
+    prefix_frac: float = 1.0             # fraction of reasoning trace seen
+    iteration: int = 0
+    kernel_id: int = dataclasses.field(default_factory=lambda: next(_kid))
+
+
+@dataclasses.dataclass
+class ValidationResult:
+    ok: bool
+    failure: Optional[str] = None        # compile | runtime | mismatch
+    speedup_firstcut: float = 0.0
+
+
+@dataclasses.dataclass
+class ProfileResult:
+    speedup: float
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Request:
+    """A validation or profiling request flowing through the scheduler."""
+    kind: str                            # "validation" | "profiling"
+    candidate: KernelCandidate
+    arrival: float = 0.0
+    duration: float = 0.0                # filled by the workload backend
+    run: Optional[Callable[[], Any]] = None   # real-mode work
+    result: Any = None
+    on_complete: Optional[Callable[["Request"], None]] = None
+    started: Optional[float] = None
+    finished: Optional[float] = None
+    cancelled: bool = False
+    iteration: int = 0
+    owner: str = ""                      # workflow/task that submitted it
+
+
+@dataclasses.dataclass
+class IterationRecord:
+    index: int
+    t_start: float
+    t_end: float = 0.0
+    gen_time: float = 0.0                # reasoning-generation wall time
+    reasoning_tokens: int = 0
+    spec_tokens: int = 0
+    cached_prefix_tokens: int = 0        # tokens NOT re-prefilled (cache)
+    candidates: int = 0
+    validated: int = 0
+    profiled: int = 0
+    early_terminated: bool = False
+    best_speedup: float = 0.0
+    status: str = ""                     # success | compile | runtime | mismatch

@@ -1,0 +1,184 @@
+"""Logical-axis sharding rules (MaxText-style) and the ShardCtx helper.
+
+Parameters carry logical axis names from ``repro.models.schema``;
+activations use ``act_*`` names applied via ``with_sharding_constraint``
+inside the layer code.  A single rules table maps logical -> mesh axes,
+so switching parallelism strategy (or turning sharding off for CPU
+tests) is a one-dict change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# -------------------------------------------------------------------- rules
+# Training: parameters are sharded over BOTH mesh axes (FSDP on the
+# embed axis over 'data', tensor/expert split on the wide axis over
+# 'model' — ZeRO-3-style just-in-time gathers emerge from GSPMD), and
+# activations are sequence-parallel: the residual stream is sharded
+# (batch -> 'pod'+'data', seq -> 'model').  SP is chosen over
+# head-parallel attention because the assigned mesh (model=16) divides
+# no architecture's head/kv-group counts, while every assigned seq_len
+# divides by 16; GSPMD all-gathers K/V per layer (ring-attention-style
+# comm) and the saved residuals shrink 16x, which is what lets 62-layer
+# models fit 16 GiB HBM with per-layer remat.
+TRAIN_RULES: Dict[str, MeshAxes] = {
+    # parameter axes
+    "embed": "data",            # FSDP shard (params + optimizer state)
+    "vocab": "model",
+    "heads": "model",           # divisibility-checked; replicate if not
+    "kv_heads": None,           # small for GQA: replicate
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",         # expert parallelism
+    "ssm_in": "model",
+    "ssm_inner": "model",
+    "ssm_conv_ch": "model",
+    "ssm_heads": None,
+    "lru": "model",
+    "lru_in": None,
+    # activation axes
+    "act_batch": ("pod", "data"),
+    "act_seq": "model",         # sequence-parallel residual stream
+    "act_heads": None,
+    "act_kv": None,
+    "act_mlp": None,            # 'model' is carried by act_seq
+    "act_experts": "model",
+    "act_vocab": None,          # seq-sharded logits, local CE
+    "kv_seq": None,
+    "param_use": "gather",      # ZeRO-3: all-gather weights at use
+}
+
+# Serving-decode: weights TP over 'model' (stationary), KV-cache
+# sequence axis sharded over 'model' (flash-decoding split), batch over
+# 'data'; S=1 activations replicate on 'model'.
+# Decode weights are row-parallel: the 'embed' (contraction) dim is
+# TP-sharded over 'model', because no assigned arch's head count divides
+# the 16-wide model axis (the wide-dim fallback would replicate ~13 GiB
+# of attention weights for deepseek).  Activations at S=1 are tiny, so
+# the per-projection partial-sum all-reduces are cheap.
+SERVE_RULES: Dict[str, MeshAxes] = dict(
+    TRAIN_RULES,
+    embed="model",              # row-parallel weight shard (storage+use)
+    act_seq=None,
+    kv_seq="model",
+    param_use="keep",           # decode: weights stay TP-sharded
+)
+
+# Prefill: sequence-parallel like training (32k/16 = 2k tokens/chip)
+# Prefill: sequence-parallel activations like training; weight storage
+# FSDP over 'data' with ZeRO-3 gather-at-use (32k tokens amortize it)
+PREFILL_RULES: Dict[str, MeshAxes] = dict(SERVE_RULES, act_seq="model",
+                                          kv_seq="model", embed="data",
+                                          param_use="gather")
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    """shard(x, *logical_axes) -> with_sharding_constraint(x, rules)."""
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, MeshAxes]] = None
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        assert self.rules is not None
+        mesh_axes = set(self.mesh.shape) if self.mesh is not None else set()
+        out = []
+        used: set = set()
+        for a in axes:
+            m = self.rules.get(a) if a else None
+            # drop mesh axes absent from this mesh (e.g. 'pod' single-pod)
+            if isinstance(m, tuple):
+                m = tuple(x for x in m if x in mesh_axes) or None
+                if m is not None and len(m) == 1:
+                    m = m[0]
+            elif isinstance(m, str) and m not in mesh_axes:
+                m = None
+            # an axis may appear at most once in a PartitionSpec
+            flat = (m,) if isinstance(m, str) else (m or ())
+            if any(f in used for f in flat):
+                m = None
+            else:
+                used.update(flat)
+            out.append(m)
+        return P(*out)
+
+    def _sized_spec(self, axes: Sequence[Optional[str]],
+                    shape: Optional[Sequence[int]]) -> P:
+        """spec() but dropping mesh axes that don't divide the dim."""
+        p = self.spec(axes)
+        if shape is None:
+            return p
+        out = []
+        for dim, m in zip(shape, tuple(p) + (None,) * (len(shape) - len(p))):
+            flat = (m,) if isinstance(m, str) else (m or ())
+            n = 1
+            for a in flat:
+                n *= self.mesh.shape[a]
+            out.append(m if (n and dim % max(n, 1) == 0) else None)
+        return P(*out)
+
+    def __call__(self, x, *axes):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self._sized_spec(axes, x.shape)))
+
+    def named(self, axes: Sequence[Optional[str]],
+              shape: Optional[Sequence[int]] = None
+              ) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self._sized_spec(axes, shape))
+
+    def use(self, w):
+        """Parameter-at-use policy.  Under FSDP ('param_use'='gather'),
+        constrain the weight to replicated right before the einsum —
+        this pins GSPMD to the ZeRO-3 plan (all-gather the WEIGHT per
+        layer) instead of resharding the much larger sequence-parallel
+        activations.  Under TP serving ('keep'), weights stay sharded
+        and the contraction partial-sums."""
+        if self.mesh is None or self.rules.get("param_use") != "gather":
+            return w
+        return jax.lax.with_sharding_constraint(
+            w, NamedSharding(self.mesh, P(*([None] * w.ndim))))
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        m = self.rules.get(logical)
+        if m is None:
+            return 1
+        axes = (m,) if isinstance(m, str) else m
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def param_shardings(ctx: ShardCtx, logical_tree, shapes_tree=None):
+    """Map a tree of logical-axis tuples -> NamedSharding tree.
+
+    ``shapes_tree`` (abstract params) enables divisibility checking so
+    non-divisible dims (e.g. 12 heads over model=16) fall back to
+    replication instead of failing pjit."""
+    if shapes_tree is None:
+        return jax.tree.map(lambda axes: ctx.named(axes), logical_tree,
+                            is_leaf=_is_axes)
+    flat_a, treedef = jax.tree.flatten(logical_tree, is_leaf=_is_axes)
+    flat_s = jax.tree.leaves(shapes_tree)
+    return jax.tree.unflatten(
+        treedef,
+        [ctx.named(a, s.shape) for a, s in zip(flat_a, flat_s)])
+
+
+NO_SHARD = ShardCtx(mesh=None, rules=None)

@@ -1,0 +1,92 @@
+"""GQA decode attention (one new token vs a long KV cache).
+
+Flash-decoding-style TPU kernel: grid = (B*KV, S/bkv) sweeps the cache
+sequence in chunks; the online-softmax state for the single query
+position is carried in VMEM scratch across the (sequential) chunk grid
+steps — the Pallas analogue of split-KV decode, matching the sequence-
+sharded decode layout the serving path uses on the mesh.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                *, bkv: int, nkv: int, scale: float):
+    """q_ref (1,G,Dh); k/v_ref (1,bkv,Dh); scratch acc (G,Dh), m/l (G,1)."""
+    ci = pl.program_id(1)
+    _, G, Dh = q_ref.shape
+    cache_len = len_ref[0]
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale             # (G, Dh)
+    k = k_ref[0].astype(jnp.float32)                     # (bkv, Dh)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G,bkv)
+    pos = ci * bkv + jax.lax.broadcasted_iota(jnp.int32, (G, bkv), 1)
+    s = jnp.where(pos < cache_len, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]              # (G,1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ci == nkv - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     cache_len, *, bkv: int = 128,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q (B,H,Dh); k/v (B,S,KV,Dh); cache_len: #valid positions.
+    Returns (B,H,Dh)."""
+    B, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    assert S % bkv == 0
+    nkv = S // bkv
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, KV, G, Dh).reshape(B * KV, G, Dh)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * KV, S, Dh)
+    vv = v.transpose(0, 2, 1, 3).reshape(B * KV, S, Dh)
+    clen = jnp.full((1,), cache_len, jnp.int32)
+    kern = functools.partial(_dec_kernel, bkv=bkv, nkv=nkv, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * KV, nkv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, Dh), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, bkv, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, bkv, Dh), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, Dh), lambda b, c: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, Dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((G, Dh), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32)],
+        interpret=interpret,
+    )(clen, qg, kk, vv)
+    return out.reshape(B, KV, G, Dh).reshape(B, H, Dh)

@@ -1,0 +1,19 @@
+"""Jitted wrapper: decode attention with jnp fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bkv", "use_pallas",
+                                             "interpret"))
+def decode_attention_op(q, k, v, cache_len, *, bkv=128, use_pallas=True,
+                        interpret=True):
+    if use_pallas:
+        return decode_attention(q, k, v, cache_len, bkv=bkv,
+                                interpret=interpret)
+    return decode_attention_ref(q, k, v, cache_len)

@@ -1,0 +1,22 @@
+"""Oracle for GQA decode attention with a partially-filled cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, cache_len):
+    """q (B,H,Dh); k/v (B,S,KV,Dh)."""
+    B, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(Dh)
+    valid = jnp.arange(S) < cache_len
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, Dh).astype(q.dtype)

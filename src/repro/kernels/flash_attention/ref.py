@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention (GQA, causal)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q (B,S,H,Dh); k/v (B,S,KV,Dh)."""
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, S, KV, G, Dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return o.reshape(B, S, H, Dh).astype(q.dtype)

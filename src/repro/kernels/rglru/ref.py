@@ -1,0 +1,16 @@
+"""Associative-scan oracle for the RG-LRU recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t, h_0 = 0.  a/b (B, S, R)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    return h.astype(b.dtype)

@@ -1,0 +1,27 @@
+"""Sequential-recurrence oracle for the SSD scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, b, c, dt, a):
+    """x (B,S,HS,P); b/c (B,S,N); dt (B,S,HS); a (HS,)."""
+    B, S, HS, P = x.shape
+    N = b.shape[-1]
+
+    def step(h, inp):
+        xt, bt, ct, dtt = inp                     # (B,HS,P),(B,N),(B,N),(B,HS)
+        decay = jnp.exp(dtt * a[None])            # (B,HS)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bn,bhp,bh->bhnp", bt, xt, dtt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, HS, N, P), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0))
+    hN, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hN

@@ -1,0 +1,133 @@
+"""Analytic per-device memory model for the dry-run cells.
+
+WHY THIS EXISTS: ``compiled.memory_analysis()`` on the CPU backend uses
+a memory-UNAWARE scheduler — it hoists every remat recomputation ahead
+of the backward pass, so reported temp size grows ~2 GiB/layer and a
+remat'd 28-layer model "needs" 57 GiB.  (Verified: remat=layer and
+remat=none report near-identical temp on CPU, and the slope is linear
+in depth.)  The TPU backend schedules memory-aware, keeping one layer's
+recompute live at a time.  This model computes the TPU-realistic peak:
+
+    params + optimizer state + gradients        (sharded, exact)
+  + saved remat residuals                       (L x local residual)
+  + max single-layer backward transient         (scores/mlp/gathers)
+  + loss-region transient (chunked CE)          (logits chunk + head)
+
+Both numbers are recorded in the dry-run JSON; fits_16GB is judged on
+this model, with the XLA-CPU figure kept for transparency.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.launch.shapes import SHAPES
+from repro.models import schema
+from repro.models.config import ModelConfig
+from repro.models.layers import Runtime
+
+
+def _sharded_param_bytes(cfg: ModelConfig, mesh_shape: Dict[str, int],
+                         rules: Dict[str, object]) -> int:
+    """Exact bytes/device of the parameter tree under the rules."""
+    total = 0
+    n_axis = dict(mesh_shape)
+    for d in schema.iter_param_defs(cfg):
+        n = 1
+        for s in d.shape:
+            n *= s
+        shards = 1
+        for dim, ax in zip(d.shape, d.axes):
+            m = rules.get(ax) if ax else None
+            axes = (m,) if isinstance(m, str) else (m or ())
+            k = 1
+            for a in axes:
+                k *= n_axis.get(a, 1)
+            if k > 1 and dim % k == 0:
+                shards *= k
+        dtype_bytes = 2 if d.dtype == "param" else 4
+        total += n * dtype_bytes // shards
+    return total
+
+
+def estimate_memory(cfg: ModelConfig, shape: str,
+                    mesh_shape: Dict[str, int], rules: Dict[str, object],
+                    rt: Runtime) -> Dict[str, float]:
+    sp = SHAPES[shape]
+    n_total = int(np.prod(list(mesh_shape.values())))
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    tp = mesh_shape.get("model", 1)
+    B_loc = max(sp.global_batch // dp, 1)
+    D, V = cfg.d_model, cfg.vocab_size
+
+    p_bytes = _sharded_param_bytes(cfg, mesh_shape, rules)
+    out: Dict[str, float] = {"params": p_bytes}
+
+    if sp.kind == "train":
+        S_loc = max(sp.seq_len // tp, 1)
+        out["optimizer"] = 2 * p_bytes * 2          # fp32 m+v vs bf16 param
+        out["gradients"] = p_bytes * 2              # fp32 grads transient
+        # saved remat residuals: one (B,S_loc,D) per layer boundary
+        resid = B_loc * S_loc * D * 2
+        out["saved_residuals"] = cfg.num_layers * resid * (
+            1 if rt.remat == "layer" else 6)
+        # single-layer backward transient
+        per_layer = 0.0
+        kinds = set(cfg.layer_kinds())
+        if kinds & {"attn", "local", "moe"}:
+            qc = min(rt.q_chunk if rt.attn_impl == "chunked" else sp.seq_len,
+                     sp.seq_len)
+            scores = B_loc * cfg.num_heads * (qc // tp) * sp.seq_len * 4
+            kv_gather = 2 * B_loc * sp.seq_len * cfg.num_kv_heads \
+                * cfg.head_dim * 2
+            per_layer = max(per_layer, 3 * scores + kv_gather)
+        if "moe" in kinds:
+            cap = int(np.ceil(sp.seq_len * cfg.experts_per_token
+                              * cfg.capacity_factor / cfg.num_experts))
+            disp = B_loc * (cfg.num_experts // max(tp, 1) or 1) * cap * D * 2
+            per_layer += 3 * disp
+        if "ssd" in kinds:
+            per_layer = max(per_layer,
+                            B_loc * (sp.seq_len // tp) * cfg.d_inner * 4 * 4)
+        if kinds & {"rglru"}:
+            per_layer = max(per_layer,
+                            B_loc * (sp.seq_len // tp) * cfg.lru_width * 4 * 4)
+        out["layer_transient"] = per_layer
+        # loss region: chunked CE logits + gathered head
+        cs = max(sp.seq_len // max(rt.ce_chunks, 1) // tp, 1)
+        out["loss_transient"] = B_loc * cs * V * 4 * 2 + D * V * 2 \
+            + (V * D * 4 if cfg.tie_embeddings else 0)
+    else:
+        S_loc = sp.seq_len
+        # serve: KV cache / recurrent state (sharded), exact from spec
+        cache = 0
+        from repro.models import transformer as T
+        serve_axes = T.cache_logical_axes(cfg)
+        for layer_spec, layer_axes in zip(
+                T.cache_spec(cfg, sp.global_batch, sp.seq_len), serve_axes):
+            for kname, (shp, dt) in layer_spec.items():
+                n = int(np.prod(shp)) * np.dtype(dt).itemsize
+                shards = 1
+                for dim, ax in zip(shp, layer_axes.get(kname, ())):
+                    m = rules.get(ax) if ax else None
+                    axes = (m,) if isinstance(m, str) else (m or ())
+                    k = 1
+                    for a in axes:
+                        k *= mesh_shape.get(a, 1)
+                    if k > 1 and dim % k == 0:
+                        shards *= k
+                cache += n // shards
+        out["kv_cache"] = cache
+        if sp.kind == "prefill":
+            qc = min(rt.q_chunk, sp.seq_len)
+            scores = B_loc * cfg.num_heads * (qc // tp) * sp.seq_len * 4 \
+                if cfg.num_heads else 0
+            out["layer_transient"] = 2 * scores
+            out["loss_transient"] = B_loc * V * 4 + D * V * 2
+        else:
+            out["layer_transient"] = B_loc * cfg.num_heads * \
+                (sp.seq_len // tp) * 4 if cfg.num_heads else 0
+            out["loss_transient"] = B_loc * V * 4 + D * V * 2 // tp
+    out["total"] = float(sum(v for k, v in out.items()))
+    return out

@@ -1,0 +1,98 @@
+"""Assigned input shapes x architectures: the 40-cell dry-run matrix.
+
+Each cell declares which step it lowers (train_step vs serve prefill /
+decode), the ShapeDtypeStruct inputs (``input_specs`` — weak-type
+correct, shardable, no device allocation), and principled skips:
+``long_500k`` requires sub-quadratic attention, so it runs only for the
+SSM/hybrid architectures (DESIGN.md §Shape skips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.registry import ARCH_IDS, get_config
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+SUBQUADRATIC = {"mamba2-2.7b", "recurrentgemma-2b"}
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return "SKIP(full-attention): 500k decode needs sub-quadratic attn"
+    return None
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    return [(a, s) for a in ARCH_IDS for s in SHAPES]
+
+
+def runnable_cells() -> List[Tuple[str, str]]:
+    return [(a, s) for a, s in all_cells() if skip_reason(a, s) is None]
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    B, S = sp.global_batch, sp.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    if sp.kind == "train":
+        if cfg.frontend == "vision_patches":
+            ft = cfg.frontend_tokens
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - ft), i32),
+                "embeds": jax.ShapeDtypeStruct((B, ft, cfg.d_model), f32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if cfg.frontend == "audio_frames":
+            return {
+                "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), f32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+
+    if sp.kind == "prefill":
+        if cfg.frontend == "audio_frames":
+            return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   f32)}
+        # vlm prefill: patches + text (patches fold into the first S slots)
+        if cfg.frontend == "vision_patches":
+            ft = cfg.frontend_tokens
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - ft), i32),
+                "embeds": jax.ShapeDtypeStruct((B, ft, cfg.d_model), f32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+
+    # decode: one new token against a cache of seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache": T.abstract_cache(cfg, B, S),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }

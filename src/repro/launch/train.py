@@ -1,0 +1,120 @@
+"""Training launcher: fault-tolerant loop with checkpoint/restart.
+
+CPU container: run reduced configs end-to-end (examples/train_lm.py).
+Real cluster: same entrypoint with --arch <id> and the production mesh.
+
+Fault tolerance:
+  * checkpoint every --ckpt-every steps (atomic; prunes old ones),
+  * on start, resume from the newest complete checkpoint (elastic:
+    re-shards to the current mesh),
+  * the data pipeline is step-indexed (stateless), so restarts are
+    bit-exact,
+  * straggler/timeout hook: a step exceeding --step-timeout raises and
+    the wrapper restarts from the last checkpoint (on real fleets this
+    is where you'd also re-slice the mesh around the failed host).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.layers import Runtime
+from repro.models.registry import ARCH_IDS, get_config, get_smoke
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, TokenPipeline
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train import (init_state, make_train_step,
+                                  state_shardings, make_shard_ctx)
+
+
+def train_loop(arch: str, *, steps: int = 200, batch_size: int = 8,
+               seq_len: int = 128, lr: float = 1e-3, smoke: bool = True,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+               mesh=None, step_timeout: float = 0.0, seed: int = 0,
+               log_every: int = 10, microbatches: int = 1):
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    ocfg = OptimizerConfig(lr=lr, warmup_steps=max(steps // 20, 5),
+                           total_steps=steps)
+    rt = Runtime()
+    pipe = TokenPipeline(cfg, DataConfig(batch_size=batch_size,
+                                         seq_len=seq_len, seed=seed))
+    step_fn = make_train_step(cfg, ocfg, rt, mesh=mesh,
+                              microbatches=microbatches)
+
+    state = init_state(cfg, jax.random.PRNGKey(seed))
+    start = 0
+    if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+        shardings = (state_shardings(cfg, make_shard_ctx(mesh))
+                     if mesh is not None else None)
+        state, start = ckpt.restore(ckpt_dir, state, shardings=shardings)
+        print(f"[train] resumed from step {start}")
+
+    losses = []
+    for step in range(start, steps):
+        t0 = time.time()
+        batch = pipe.batch(step)
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.time() - t0
+        if step_timeout and dt > step_timeout:
+            raise TimeoutError(
+                f"step {step} took {dt:.1f}s > {step_timeout}s "
+                "(straggler hook)")
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[train] step={step:5d} loss={loss:.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} {dt*1e3:.0f}ms",
+                  flush=True)
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, step + 1, state)
+            ckpt.prune(ckpt_dir, keep=3)
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, steps, state)
+    return state, losses
+
+
+def run_with_restarts(max_restarts: int = 3, **kw):
+    """Fault-tolerance wrapper: restart from checkpoint on failure."""
+    for attempt in range(max_restarts + 1):
+        try:
+            return train_loop(**kw)
+        except (TimeoutError, RuntimeError) as e:   # noqa: PERF203
+            if attempt == max_restarts:
+                raise
+            print(f"[train] attempt {attempt} failed ({e}); restarting "
+                  "from last checkpoint")
+    raise RuntimeError("unreachable")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (needs a real TPU mesh)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", choices=["none", "host", "production"],
+                    default="none")
+    args = ap.parse_args()
+    mesh = {"none": None, "host": make_host_mesh(),
+            "production": make_production_mesh()}[args.mesh]
+    run_with_restarts(
+        arch=args.arch, steps=args.steps, batch_size=args.batch_size,
+        seq_len=args.seq_len, lr=args.lr, smoke=not args.full,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, mesh=mesh,
+        microbatches=args.microbatches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Model configuration covering every assigned architecture family.
+
+One frozen dataclass describes dense / GQA / MoE / SSM (Mamba-2 SSD) /
+hybrid (RG-LRU + local attention) / audio / VLM decoder-only language
+models.  Family-specific fields default to "off" so a config is always
+fully specified by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    vocab_size: int
+
+    # ---- attention ----
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    qk_norm: bool = False            # qwen3-style per-head RMSNorm on q/k
+    qkv_bias: bool = False           # qwen2-style bias on q/k/v projections
+    attn_out_bias: bool = False
+    rope_theta: float = 10_000.0
+    pos_emb: str = "rope"            # rope | sinusoidal | none
+    logit_softcap: float = 0.0
+
+    # ---- MLP ----
+    d_ff: int = 0
+    mlp_gated: bool = True           # SwiGLU-style gate (llama lineage)
+    mlp_act: str = "silu"            # silu | gelu
+    mlp_bias: bool = False
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+
+    # ---- MoE ----
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0                # per-expert hidden size (0 -> d_ff)
+    shared_expert: bool = False      # llama4-style always-on shared expert
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    aux_loss_coef: float = 1e-2
+
+    # ---- SSM (Mamba-2 / SSD) ----
+    ssm_state: int = 0               # N, state dimension per head
+    ssm_expand: int = 2              # d_inner = expand * d_model
+    ssm_head_dim: int = 64           # P
+    ssm_conv: int = 4                # depthwise causal conv width
+    ssm_chunk: int = 256             # SSD chunk length
+
+    # ---- hybrid (RG-LRU + local attention, RecurrentGemma) ----
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rglru","rglru","local")
+    local_window: int = 0
+    lru_width: int = 0               # 0 -> d_model
+    conv1d_width: int = 4
+
+    # ---- modality frontend (stub per spec) ----
+    frontend: str = "none"           # none | audio_frames | vision_patches
+    frontend_tokens: int = 0         # patches / frames prepended (vlm)
+
+    # ---- numerics ----
+    dtype: str = "bfloat16"          # activation / param compute dtype
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    # -------------------------------------------------------------- helpers
+    def __post_init__(self):
+        if self.num_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_experts and not self.moe_d_ff:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        if self.family == "hybrid" and not self.lru_width:
+            object.__setattr__(self, "lru_width", self.d_model)
+
+    # layer types, expanded to num_layers
+    def layer_kinds(self) -> Tuple[str, ...]:
+        if self.family == "ssm":
+            return ("ssd",) * self.num_layers
+        if self.block_pattern:
+            pat = self.block_pattern
+            reps = (self.num_layers + len(pat) - 1) // len(pat)
+            return (pat * reps)[: self.num_layers]
+        if self.num_experts:
+            return ("moe",) * self.num_layers
+        return ("attn",) * self.num_layers
+
+    @property
+    def homogeneous(self) -> bool:
+        kinds = set(self.layer_kinds())
+        return len(kinds) == 1
+
+    @property
+    def d_inner(self) -> int:          # SSD inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    # ---------------------------------------------------------- accounting
+    def param_count(self) -> int:
+        """Exact parameter count (matches init_params)."""
+        from repro.models import schema        # local import, avoids cycle
+        total = 0
+        for d in schema.iter_param_defs(self):
+            n = 1
+            for s in d.shape:
+                n *= s
+            total += n
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed-in experts)."""
+        if not self.num_experts:
+            return self.param_count()
+        from repro.models import schema
+        total = 0
+        for d in schema.iter_param_defs(self):
+            n = 1
+            for s in d.shape:
+                n *= s
+            if "experts" in d.axes:
+                n = n * self.experts_per_token // self.num_experts
+            total += n
+        return total
+
+    def flops_per_token(self, seq_len: int, *, decode: bool = False) -> float:
+        """Analytic forward-pass FLOPs/token: 2*N_active + attention term.
+
+        decode=True means one new token attending to a cache of ``seq_len``.
+        """
+        n = 2.0 * self.active_param_count()
+        att = 0.0
+        for kind in self.layer_kinds():
+            if kind in ("attn", "local"):
+                if kind == "local":
+                    ctx = min(self.local_window, seq_len)
+                else:
+                    ctx = seq_len if decode else seq_len / 2.0  # causal avg
+                att += 4.0 * self.num_heads * self.head_dim * ctx  # QK^T + AV
+            elif kind == "ssd":
+                # per token: Bx outer product + Ch readout, per head-state
+                att += 4.0 * self.d_inner * self.ssm_state
+            elif kind == "rglru":
+                att += 6.0 * self.lru_width  # gates + recurrence (elementwise)
+        return n + att

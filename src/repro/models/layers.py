@@ -1,0 +1,605 @@
+"""Layer math for every architecture family, in pure JAX.
+
+Design notes
+------------
+* Sharding is injected via a ``shard(x, *logical_axes)`` callable
+  (see ``repro.distributed.sharding.ShardCtx``) so the same code runs
+  unsharded on CPU tests and fully sharded on the production mesh.
+* Attention supports three execution paths:
+    - ``full``     : one einsum pair, causal/banded mask (short seqs),
+    - ``chunked``  : python-unrolled Q-chunks with per-chunk KV slices
+                     (bounds VMEM/HBM temp for 32k prefill AND keeps the
+                     dry-run cost analysis exact — no scan bodies),
+    - ``decode``   : single-token step against a KV cache whose sequence
+                     axis is sharded over the 'model' mesh axis
+                     (flash-decoding-style split, LSE-combined by GSPMD).
+* MoE uses group-local dispatch: tokens stay sharded over the data axis
+  (groups), experts over the model axis; dispatch/combine are per-group
+  gathers/scatters which partition cleanly without all-gathering tokens.
+* SSD (Mamba-2) uses the chunked state-space-dual form: intra-chunk work
+  is batched einsums (counted exactly by the HLO cost model); only the
+  tiny inter-chunk state recurrence is a ``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Shard = Callable[..., jnp.ndarray]
+
+
+def no_shard(x, *axes):
+    return x
+
+
+no_shard.use = lambda w: w  # parity with ShardCtx for unsharded runs
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution knobs orthogonal to the architecture."""
+    attn_impl: str = "auto"        # full | chunked | auto
+    q_chunk: int = 4096
+    full_attn_threshold: int = 8192
+    use_pallas: bool = False       # interpret-mode Pallas kernels (tests)
+    remat: str = "none"            # none | layer | dots
+    scan_layers: bool = False      # homogeneous archs only (real training)
+    moe_group_axis: str = "batch"  # group-local MoE dispatch granularity
+    ce_chunks: int = 1             # cross-entropy seq-chunking (memory)
+    score_dtype: str = "float32"   # attention-score dtype (perf knob)
+    cache_dtype: str = ""          # KV-cache dtype override (e.g. f8)
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, p: Dict[str, jnp.ndarray], x) -> jnp.ndarray:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------- positional
+def rope_table(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin tables (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (..., S, H, Dh); cos/sin (..., S, Dh//2) broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(dt)
+
+
+def sinusoidal_embedding(positions: jnp.ndarray, d_model: int):
+    half = d_model // 2
+    freqs = jnp.exp(
+        -math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+def _qkv(cfg: ModelConfig, p, x, positions, shard):
+    """Project + (qk-norm) + rope.  Returns q (B,S,H,Dh), k/v (B,S,KV,Dh).
+
+    The input is re-pinned to the sequence-parallel layout: without
+    this, GSPMD serves the full-sequence K/V constraint below by
+    all-gathering the (12-96x larger) fp32 residual stream instead of
+    the projected K/V heads — measured at ~350 GiB/step of extra
+    traffic on deepseek-coder-33b (EXPERIMENTS.md §Perf A1)."""
+    use = getattr(shard, "use", lambda w: w)
+    x = shard(x, "act_batch", "act_seq", None)
+    q = jnp.einsum("bsd,dhk->bshk", x, use(p["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", x, use(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", x, use(p["wv"]))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        cos, sin = rope_table(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    # sequence-parallel attention: Q keeps the seq shard; K/V are
+    # all-gathered to the full sequence (ring-attention-style comm) so
+    # scores stay (Sq-sharded, Sk-full) and softmax is shard-local.
+    # The gather is a custom-vjp so its COTANGENT is reduce-scattered
+    # back to the sequence shard BEFORE the projection transpose —
+    # otherwise AD computes the (B,S,D) dx at full sequence in fp32
+    # (~350 GiB/step extra on deepseek; EXPERIMENTS.md §Perf A1).
+    q = shard(q, "act_batch", "act_seq", "act_heads", None)
+    gather = _seq_gather(shard)
+    k = gather(k)
+    v = gather(v)
+    return q, k, v
+
+
+def _seq_gather(shard):
+    @jax.custom_vjp
+    def g(t):
+        return shard(t, "act_batch", None, "act_kv", None)
+
+    def g_fwd(t):
+        return g(t), None
+
+    def g_bwd(_, ct):
+        return (shard(ct, "act_batch", "act_seq", "act_kv", None),)
+
+    g.defvjp(g_fwd, g_bwd)
+    return g
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask, shard,
+          score_dtype=jnp.float32):
+    """Grouped-query attention core.  q (B,Sq,H,Dh), k/v (B,Sk,KV,Dh)."""
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, Sq, KV, G, Dh)
+    neg = jnp.finfo(score_dtype).min / 2
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k).astype(score_dtype) * scale
+    scores = jnp.where(mask[None, None, None, :, :], scores, neg)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(B, Sq, H, Dh)
+    return shard(out, "act_batch", "act_seq", "act_heads", None)
+
+
+def _causal_mask(sq: int, sk: int, q_offset: int, window: int):
+    """mask[i, j] = may q-position (q_offset+i) attend to k-position j."""
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window:
+        m = m & (kpos > qpos - window)
+    return m
+
+
+def attention_train(cfg, p, x, positions, shard, runtime: Runtime,
+                    window: int = 0):
+    """Self-attention over a full sequence (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(cfg, p, x, positions, shard)
+    impl = runtime.attn_impl
+    if impl == "auto":
+        impl = "full" if S <= runtime.full_attn_threshold else "chunked"
+    sdt = jnp.dtype(runtime.score_dtype)
+    if impl == "full" or S <= runtime.q_chunk:
+        out = _sdpa(cfg, q, k, v, _causal_mask(S, S, 0, window), shard,
+                    score_dtype=sdt)
+    else:
+        qc = runtime.q_chunk
+        assert S % qc == 0, f"seq {S} not divisible by q_chunk {qc}"
+        outs = []
+        for i in range(S // qc):            # unrolled: exact HLO costs
+            lo = i * qc
+            hi = lo + qc
+            klo = max(0, lo - window + 1) if window else 0
+            kv_hi = hi
+            mask = _causal_mask(qc, kv_hi - klo, lo - klo, window)
+            outs.append(
+                _sdpa(cfg, q[:, lo:hi], k[:, klo:kv_hi], v[:, klo:kv_hi],
+                      mask, shard, score_dtype=sdt)
+            )
+        out = jnp.concatenate(outs, axis=1)
+    y = jnp.einsum("bshk,hkd->bsd", out,
+                   getattr(shard, "use", lambda w: w)(p["wo"]))
+    if cfg.attn_out_bias:
+        y = y + p["bo"].astype(y.dtype)
+    return shard(y, "act_batch", "act_seq", None)
+
+
+def attention_prefill(cfg, p, x, positions, shard, runtime, cache,
+                      window: int = 0):
+    """Prefill: run attention_train AND populate the KV cache."""
+    q, k, v = _qkv(cfg, p, x, positions, shard)
+    B, S, KV, Dh = k.shape
+    new_cache = dict(cache)
+    if window:
+        # ring buffer keeps the last `window` tokens at slot = pos % window
+        w = min(window, S)
+        last_pos = positions[0, -w:]                       # (w,) absolute
+        slots = last_pos % window                          # scatter slots
+        new_cache["k"] = cache["k"].at[:, slots].set(
+            k[:, -w:].astype(cache["k"].dtype))
+        new_cache["v"] = cache["v"].at[:, slots].set(
+            v[:, -w:].astype(cache["v"].dtype))
+    else:
+        new_cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    new_cache["pos"] = jnp.asarray(S, jnp.int32)
+    out = attention_train(cfg, p, x, positions, shard, runtime, window)
+    return out, new_cache
+
+
+def attention_decode(cfg, p, x, pos, shard, runtime, cache, window: int = 0):
+    """One-token decode against the cache.
+
+    cache["k"/"v"]: (B, S_cache, KV, Dh) — sequence axis sharded over
+    'model' (logical "kv_seq"); cache["pos"]: tokens already present.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32) if jnp.ndim(pos) == 0 else pos
+    q, k, v = _qkv(cfg, p, x, positions, shard)
+    Sc = cache["k"].shape[1]
+    if window:
+        slot = pos % window
+    else:
+        slot = pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    ck = shard(ck, "act_batch", "kv_seq", None, None)
+    cv = shard(cv, "act_batch", "kv_seq", None, None)
+    new_cache = dict(cache, k=ck, v=cv, pos=pos + 1)
+
+    KV, Dh, H = ck.shape[2], ck.shape[3], q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Dh)
+    scale = 1.0 / math.sqrt(Dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg,
+                        ck.astype(q.dtype)).astype(jnp.float32) * scale
+    kpos = jnp.arange(Sc)
+    if window:
+        # slots fill in order until the ring wraps; then all are valid
+        valid = kpos < jnp.minimum(pos + 1, window)
+    else:
+        valid = kpos <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, cv.astype(q.dtype))
+    out = out.reshape(B, 1, H, Dh)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if cfg.attn_out_bias:
+        y = y + p["bo"].astype(y.dtype)
+    return y, new_cache
+
+
+# ----------------------------------------------------------------------- MLP
+def mlp(cfg: ModelConfig, p, x, shard):
+    use = getattr(shard, "use", lambda w: w)
+    act = jax.nn.silu if cfg.mlp_act == "silu" else (
+        lambda z: jax.nn.gelu(z, approximate=True))
+    h = jnp.einsum("bsd,df->bsf", x, use(p["wi"]))
+    if cfg.mlp_bias:
+        h = h + p["bi"].astype(h.dtype)
+    h = shard(h, "act_batch", "act_seq", "act_mlp")
+    if cfg.mlp_gated:
+        g = jnp.einsum("bsd,df->bsf", x, use(p["wg"]))
+        g = shard(g, "act_batch", "act_seq", "act_mlp")
+        h = act(g) * h
+    else:
+        h = act(h)
+    y = jnp.einsum("bsf,fd->bsd", h, use(p["wo"]))
+    if cfg.mlp_bias:
+        y = y + p["bo"].astype(y.dtype)
+    return shard(y, "act_batch", "act_seq", None)
+
+
+# ----------------------------------------------------------------------- MoE
+def moe(cfg: ModelConfig, p, x, shard) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Group-local top-k MoE with capacity.  x (B, S, D).
+
+    Groups = batch rows: each group routes its own S tokens, so the
+    dispatch gather/scatter partitions along the (data-sharded) batch
+    axis with no cross-device token movement; expert weights are sharded
+    over the 'model' axis (expert parallelism).  Overflowing tokens are
+    dropped (standard capacity-factor semantics).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    cap = int(math.ceil(S * K * cfg.capacity_factor / E))
+    cap = min(cap, S)
+
+    # SP -> EP boundary: routing/dispatch need the full local sequence,
+    # so re-shard the tokens to batch-only (all-to-all-ish reshard), and
+    # restore sequence-parallel layout on exit.
+    x = shard(x, "act_batch", None, None)
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # (B,S,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)  # (B,S,K,E)
+    flat = onehot.reshape(B, S * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat             # (B,S*K,E)
+    pos = jnp.sum(pos_in_e * flat, axis=-1).reshape(B, S, K)
+    keep = pos < cap
+
+    # scatter token indices into the (E, cap) dispatch table
+    token_id = jnp.broadcast_to(jnp.arange(S)[None, :, None], (B, S, K))
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None, None], (B, S, K))
+    e_idx = jnp.where(keep, gate_idx, E)        # drop -> row E (discarded)
+    c_idx = jnp.where(keep, pos, 0)
+    table = jnp.full((B, E + 1, cap), S, jnp.int32)        # S = padding row
+    table = table.at[b_idx, e_idx, c_idx].set(token_id, mode="drop")
+    table = table[:, :E]                                   # (B,E,cap)
+
+    xpad = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    disp = jnp.take_along_axis(
+        xpad, table.reshape(B, E * cap)[:, :, None], axis=1
+    ).reshape(B, E, cap, D)
+    disp = shard(disp, "act_batch", "act_experts", None, None)
+
+    h = jnp.einsum("becd,edf->becf", disp, p["wi"])
+    g = jnp.einsum("becd,edf->becf", disp, p["wg"])
+    h = shard(jax.nn.silu(g) * h, "act_batch", "act_experts", None, "act_mlp")
+    eo = jnp.einsum("becf,efd->becd", h, p["wo"])
+    eo = shard(eo, "act_batch", "act_experts", None, None)
+
+    # combine: GATHER each token's K expert outputs back (a scatter-add
+    # here makes GSPMD replicate a global-batch f32 accumulator and
+    # all-reduce ~17 GB per layer — measured; the batched gather
+    # partitions cleanly along the data-sharded batch axis instead)
+    eo_pad = jnp.concatenate(
+        [eo.reshape(B, E * cap, D),
+         jnp.zeros((B, 1, D), eo.dtype)], axis=1)
+    flat_idx = jnp.where(keep, gate_idx * cap + pos, E * cap)   # (B,S,K)
+    contrib = jnp.take_along_axis(
+        eo_pad, flat_idx.reshape(B, S * K)[..., None], axis=1
+    ).reshape(B, S, K, D)
+    gates = jnp.where(keep, gate_vals, 0.0).astype(eo.dtype)
+    y = jnp.sum(contrib * gates[..., None], axis=2)
+    y = shard(y, "act_batch", "act_seq", None)
+
+    if cfg.shared_expert:
+        use = getattr(shard, "use", lambda w: w)
+        sh = jnp.einsum("bsd,df->bsf", x, use(p["shared_wi"]))
+        sg = jnp.einsum("bsd,df->bsf", x, use(p["shared_wg"]))
+        y = y + jnp.einsum(
+            "bsf,fd->bsd", jax.nn.silu(sg) * sh, use(p["shared_wo"]))
+
+    # aux losses (load balance + router z-loss)
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    ) / K
+    aux = {
+        "moe_load_balance": cfg.aux_loss_coef * E * jnp.sum(me * ce),
+        "moe_z_loss": cfg.router_z_loss
+        * jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+    }
+    return y, aux
+
+
+# --------------------------------------------------------------- causal conv
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv.  x (B,S,C), w (W,C).  Returns y, new_state."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(W):                                     # W is tiny (4)
+        y = y + xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return y, new_state
+
+
+# ----------------------------------------------------------------------- SSD
+def _segsum(s: jnp.ndarray) -> jnp.ndarray:
+    """s (..., Q) log-decays -> L (..., Q, Q), L[i,j]=sum_{j<m<=i} s_m."""
+    Q = s.shape[-1]
+    cs = jnp.cumsum(s, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_forward(cfg: ModelConfig, p, x, shard, state=None):
+    """Mamba-2 SSD block.  x (B,S,D) -> y (B,S,D), new recurrent state."""
+    B, S, D = x.shape
+    DI, N, HS, P_ = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    use = getattr(shard, "use", lambda w: w)
+    proj = jnp.einsum("bsd,de->bse", x, use(p["in_proj"]))
+    z, xin, Bc, Cc, dt = jnp.split(
+        proj, [DI, 2 * DI, 2 * DI + N, 2 * DI + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_state = None if state is None else state.get("conv")
+    conv_out, new_conv = causal_conv1d(conv_in, p["conv_w"], p["conv_b"],
+                                       conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :DI].reshape(B, S, HS, P_)
+    Bc = conv_out[..., DI : DI + N]                        # (B,S,N)
+    Cc = conv_out[..., DI + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,HS)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (HS,)
+
+    Q = min(cfg.ssm_chunk, S)
+    Sp = S
+    if S % Q:
+        pad = Q - S % Q
+        Sp = S + pad
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        # dt = 0 on padding -> decay 1, contribution 0: state is exact
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        dt = dt * (jnp.arange(Sp) < S).astype(dt.dtype)[None, :, None]
+    nc = Sp // Q
+    xb = xin.reshape(B, nc, Q, HS, P_).astype(jnp.float32)
+    Bb = Bc.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cb = Cc.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtb = dt.reshape(B, nc, Q, HS)
+    s = dtb * A                                            # log decay
+    xdt = xb * dtb[..., None]
+
+    # intra-chunk (batched over chunks — exact in HLO cost analysis)
+    L = jnp.exp(_segsum(jnp.moveaxis(s, -1, -2)))          # (B,nc,HS,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cb, Bb)         # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, L, xdt)
+
+    # chunk-final states
+    cum = jnp.cumsum(s, axis=2)                            # (B,nc,Q,HS)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,Q,HS)
+    chunk_state = jnp.einsum("bcqn,bcqhp,bcqh->bchnp", Bb, xdt, decay_to_end)
+
+    # inter-chunk recurrence (tiny sequential scan over nc states)
+    chunk_decay = jnp.exp(jnp.sum(s, axis=2))              # (B,nc,HS)
+    if state is not None and state.get("ssm") is not None:
+        h0 = state["ssm"].astype(jnp.float32)
+    else:
+        h0 = jnp.zeros((B, HS, N, P_), jnp.float32)
+
+    def step(h, inp):
+        cs, cd = inp
+        h_out = h                                          # state BEFORE chunk
+        h = h * cd[..., None, None] + cs
+        return h, h_out
+
+    hN, h_prev = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                    # (B,nc,HS,N,P)
+
+    decay_from_start = jnp.exp(cum)                        # (B,nc,Q,HS)
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cb, h_prev,
+                         decay_from_start)
+    y = (y_intra + y_inter).reshape(B, Sp, HS, P_)[:, :S]
+    y = y + xin[:, :S].astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, S, DI)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, use(p["out_proj"]))
+    new_state = {"conv": new_conv, "ssm": hN}
+    return shard(out, "act_batch", "act_seq", None), new_state
+
+
+def ssd_decode_step(cfg: ModelConfig, p, x, state, shard):
+    """Single-token SSD step.  x (B,1,D)."""
+    B = x.shape[0]
+    DI, N, HS, P_ = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]
+    z, xin, Bc, Cc, dt = jnp.split(
+        proj, [DI, 2 * DI, 2 * DI + N, 2 * DI + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)[:, None]
+    conv_out, new_conv = causal_conv1d(conv_in, p["conv_w"], p["conv_b"],
+                                       state["conv"])
+    conv_out = jax.nn.silu(conv_out[:, 0])
+    xin = conv_out[..., :DI].reshape(B, HS, P_).astype(jnp.float32)
+    Bc = conv_out[..., DI : DI + N].astype(jnp.float32)
+    Cc = conv_out[..., DI + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,HS)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h = state["ssm"].astype(jnp.float32)                   # (B,HS,N,P)
+    decay = jnp.exp(dt * A)                                # (B,HS)
+    h = h * decay[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", Bc, xin, dt)
+    y = jnp.einsum("bn,bhnp->bhp", Cc, h)
+    y = y + xin * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, DI)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None]
+    return out, {"conv": new_conv, "ssm": h}
+
+
+# -------------------------------------------------------------------- RG-LRU
+_LRU_C = 8.0
+
+
+def rglru_forward(cfg: ModelConfig, p, x, shard, state=None):
+    """RecurrentGemma recurrent block.  x (B,S,D)."""
+    B, S, D = x.shape
+    R = cfg.lru_width
+    use = getattr(shard, "use", lambda w: w)
+    x1 = jnp.einsum("bsd,dr->bsr", x, use(p["wx"]))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, use(p["wy"])),
+                       approximate=True)
+    conv_state = None if state is None else state.get("conv")
+    x1, new_conv = causal_conv1d(x1, p["conv_w"], p["conv_b"], conv_state)
+
+    xf = x1.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rt->bst", xf, p["w_a"].astype(
+        jnp.float32)) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rt->bst", xf, p["w_i"].astype(
+        jnp.float32)) + p["b_i"].astype(jnp.float32))
+    log_a0 = -_LRU_C * jax.nn.softplus(p["a_param"].astype(jnp.float32))
+    log_a = log_a0 * r                                     # (B,S,R)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+
+    if state is not None and state.get("lru") is not None:
+        h0 = state["lru"].astype(jnp.float32)              # (B,R)
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    new_state = {"conv": new_conv, "lru": h[:, -1]}
+    y = (h * gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsr,rd->bsd", y, use(p["out"]))
+    return shard(out, "act_batch", "act_seq", None), new_state
+
+
+def rglru_decode_step(cfg: ModelConfig, p, x, state, shard):
+    B = x.shape[0]
+    x1 = jnp.einsum("bsd,dr->bsr", x, p["wx"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["wy"]),
+                       approximate=True)
+    x1, new_conv = causal_conv1d(x1, p["conv_w"], p["conv_b"], state["conv"])
+    xf = x1[:, 0].astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32)
+                       + p["b_i"].astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    h = a * state["lru"].astype(jnp.float32) + b
+    y = (h[:, None] * gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsr,rd->bsd", y, p["out"])
+    return out, {"conv": new_conv, "lru": h}

@@ -1,0 +1,230 @@
+"""Parameter schema: one declarative description per architecture.
+
+The schema drives three consumers with zero duplication:
+  * ``init_params``     — materialize real weights (tests / examples),
+  * ``abstract_params`` — ShapeDtypeStructs for the AOT dry-run (no alloc),
+  * ``logical_axes``    — logical sharding axes consumed by repro.distributed.
+
+Params are nested dicts; ``layers`` is a list (one entry per layer) so
+heterogeneous stacks (RecurrentGemma's (R,R,L) pattern) are first-class.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterator, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+class ParamDef(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis per dim
+    init: str = "normal"              # normal|zeros|ones|lru_a|ssd_a|dt_bias
+    dtype: str = "param"              # "param" -> cfg.dtype, else literal
+
+
+def _norm(cfg: ModelConfig) -> dict:
+    d = {"scale": ParamDef((cfg.d_model,), ("embed",), "ones", "float32")}
+    if cfg.norm_type == "layernorm":
+        d["bias"] = ParamDef((cfg.d_model,), ("embed",), "zeros", "float32")
+    return d
+
+
+def _attn(cfg: ModelConfig, local: bool) -> dict:
+    D, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    a: dict = {
+        "wq": ParamDef((D, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((D, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((D, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, Dh, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        a["bq"] = ParamDef((H, Dh), ("heads", "head_dim"), "zeros")
+        a["bk"] = ParamDef((KV, Dh), ("kv_heads", "head_dim"), "zeros")
+        a["bv"] = ParamDef((KV, Dh), ("kv_heads", "head_dim"), "zeros")
+    if cfg.attn_out_bias:
+        a["bo"] = ParamDef((D,), ("embed",), "zeros")
+    if cfg.qk_norm:
+        a["q_norm"] = ParamDef((Dh,), ("head_dim",), "ones", "float32")
+        a["k_norm"] = ParamDef((Dh,), ("head_dim",), "ones", "float32")
+    return a
+
+
+def _mlp(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    m: dict = {"wi": ParamDef((D, F), ("embed", "mlp"))}
+    if cfg.mlp_gated:
+        m["wg"] = ParamDef((D, F), ("embed", "mlp"))
+    m["wo"] = ParamDef((F, D), ("mlp", "embed"))
+    if cfg.mlp_bias:
+        m["bi"] = ParamDef((F,), ("mlp",), "zeros")
+        m["bo"] = ParamDef((D,), ("embed",), "zeros")
+    return m
+
+
+def _moe(cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    m: dict = {
+        "router": ParamDef((D, E), ("embed", None), "normal", "float32"),
+        "wi": ParamDef((E, D, F), ("experts", "embed", "mlp")),
+        "wg": ParamDef((E, D, F), ("experts", "embed", "mlp")),
+        "wo": ParamDef((E, F, D), ("experts", "mlp", "embed")),
+    }
+    if cfg.shared_expert:
+        m["shared_wi"] = ParamDef((D, F), ("embed", "mlp"))
+        m["shared_wg"] = ParamDef((D, F), ("embed", "mlp"))
+        m["shared_wo"] = ParamDef((F, D), ("mlp", "embed"))
+    return m
+
+
+def _ssd(cfg: ModelConfig) -> dict:
+    D, DI, N, HS = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.ssm_conv
+    # in_proj emits [z(DI), x(DI), B(N), C(N), dt(HS)]  (n_groups = 1)
+    return {
+        "in_proj": ParamDef((D, 2 * DI + 2 * N + HS), ("embed", "ssm_in")),
+        "conv_w": ParamDef((W, DI + 2 * N), (None, "ssm_conv_ch"), "conv"),
+        "conv_b": ParamDef((DI + 2 * N,), ("ssm_conv_ch",), "zeros"),
+        "A_log": ParamDef((HS,), ("ssm_heads",), "ssd_a", "float32"),
+        "D": ParamDef((HS,), ("ssm_heads",), "ones", "float32"),
+        "dt_bias": ParamDef((HS,), ("ssm_heads",), "dt_bias", "float32"),
+        "norm_scale": ParamDef((DI,), ("ssm_inner",), "ones", "float32"),
+        "out_proj": ParamDef((DI, D), ("ssm_inner", "embed")),
+    }
+
+
+def _rglru(cfg: ModelConfig) -> dict:
+    D, R, W = cfg.d_model, cfg.lru_width, cfg.conv1d_width
+    return {
+        "wx": ParamDef((D, R), ("embed", "lru")),
+        "wy": ParamDef((D, R), ("embed", "lru")),
+        "conv_w": ParamDef((W, R), (None, "lru"), "conv"),
+        "conv_b": ParamDef((R,), ("lru",), "zeros"),
+        "w_a": ParamDef((R, R), ("lru_in", "lru")),      # recurrence gate
+        "b_a": ParamDef((R,), ("lru",), "zeros"),
+        "w_i": ParamDef((R, R), ("lru_in", "lru")),      # input gate
+        "b_i": ParamDef((R,), ("lru",), "zeros"),
+        "a_param": ParamDef((R,), ("lru",), "lru_a", "float32"),
+        "out": ParamDef((R, D), ("lru", "embed")),
+    }
+
+
+def layer_schema(cfg: ModelConfig, kind: str) -> dict:
+    layer: dict = {"ln1": _norm(cfg)}
+    if kind == "attn" or kind == "local":
+        layer["attn"] = _attn(cfg, local=(kind == "local"))
+        layer["ln2"] = _norm(cfg)
+        layer["mlp"] = _mlp(cfg)
+    elif kind == "moe":
+        layer["attn"] = _attn(cfg, local=False)
+        layer["ln2"] = _norm(cfg)
+        layer["moe"] = _moe(cfg)
+    elif kind == "ssd":
+        layer["ssd"] = _ssd(cfg)
+    elif kind == "rglru":
+        layer["rglru"] = _rglru(cfg)
+        layer["ln2"] = _norm(cfg)
+        layer["mlp"] = _mlp(cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    return layer
+
+
+def param_schema(cfg: ModelConfig) -> dict:
+    tree: dict = {
+        "embed": {
+            "tokens": ParamDef(
+                (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), "embed"
+            )
+        },
+        "layers": [layer_schema(cfg, k) for k in cfg.layer_kinds()],
+        "final_norm": _norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = {
+            "w": ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+        }
+    return tree
+
+
+def iter_param_defs(cfg: ModelConfig) -> Iterator[ParamDef]:
+    for leaf in jax.tree.leaves(
+        param_schema(cfg), is_leaf=lambda x: isinstance(x, ParamDef)
+    ):
+        yield leaf
+
+
+# ------------------------------------------------------------------ builders
+def _materialize(d: ParamDef, cfg: ModelConfig, key) -> jnp.ndarray:
+    dtype = jnp.dtype(cfg.dtype if d.dtype == "param" else d.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape, jnp.float32) * 0.02).astype(dtype)
+    if d.init == "conv":
+        fan = d.shape[0]
+        return (
+            jax.random.uniform(key, d.shape, jnp.float32, -1, 1) / math.sqrt(fan)
+        ).astype(dtype)
+    if d.init == "lru_a":
+        # a = sigmoid(p) mapped so that a^(c)  decays in [0.9, 0.999]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 0.9, 0.999)
+        # store Lambda with softplus param s.t. exp(-8*softplus(L)) = u
+        sp = -jnp.log(u) / 8.0
+        return jnp.log(jnp.expm1(jnp.maximum(sp, 1e-8))).astype(dtype)
+    if d.init == "ssd_a":
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if d.init == "dt_bias":
+        dt = jnp.exp(
+            jax.random.uniform(key, d.shape, jnp.float32)
+            * (math.log(0.1) - math.log(1e-3))
+            + math.log(1e-3)
+        )
+        return jnp.log(jnp.expm1(dt)).astype(dtype)  # inverse softplus
+    # default: truncated-normal-ish fan-in scaling
+    fan_in = d.shape[0] if len(d.shape) == 1 else int(
+        jnp.prod(jnp.asarray(d.shape[:-1]))
+    )
+    if len(d.shape) >= 2:
+        fan_in = 1
+        for s in d.shape[:-1]:
+            fan_in *= s
+        # 3D attn weights (D,H,Dh): fan-in is embed only
+        if d.axes and d.axes[0] == "embed":
+            fan_in = d.shape[0]
+        if d.axes and d.axes[0] == "experts":
+            fan_in = d.shape[1]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(
+        jnp.dtype(cfg.dtype if d.dtype == "param" else d.dtype)
+    )
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array):
+    tree = param_schema(cfg)
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_def)
+    keys = jax.random.split(rng, len(leaves))
+    out = [_materialize(d, cfg, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(cfg: ModelConfig):
+    def to_sds(d: ParamDef):
+        dtype = jnp.dtype(cfg.dtype if d.dtype == "param" else d.dtype)
+        return jax.ShapeDtypeStruct(d.shape, dtype)
+
+    return jax.tree.map(to_sds, param_schema(cfg), is_leaf=_is_def)
+
+
+def logical_axes(cfg: ModelConfig):
+    return jax.tree.map(lambda d: d.axes, param_schema(cfg), is_leaf=_is_def)

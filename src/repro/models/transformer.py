@@ -1,0 +1,437 @@
+"""Model assembly: embedding, block stack, LM loss, prefill/decode.
+
+All functions are pure; parameters are the pytrees produced by
+``repro.models.schema``.  The same code path serves all ten assigned
+architectures — block kinds come from ``cfg.layer_kinds()``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.layers import Runtime
+from repro.distributed.sharding import NO_SHARD, ShardCtx
+
+
+# ------------------------------------------------------------------ blocks
+def block_forward(cfg: ModelConfig, kind: str, p, x, positions, shard,
+                  runtime: Runtime) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    aux: Dict[str, Any] = {}
+    window = cfg.local_window if kind == "local" else 0
+    if kind in ("attn", "local"):
+        h = L.attention_train(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
+                              positions, shard, runtime, window)
+        x = x + h
+        x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x), shard)
+    elif kind == "moe":
+        h = L.attention_train(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
+                              positions, shard, runtime, 0)
+        x = x + h
+        m, aux = L.moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x), shard)
+        x = x + m
+    elif kind == "ssd":
+        h, _ = L.ssd_forward(cfg, p["ssd"], L.apply_norm(cfg, p["ln1"], x),
+                             shard)
+        x = x + h
+    elif kind == "rglru":
+        h, _ = L.rglru_forward(cfg, p["rglru"],
+                               L.apply_norm(cfg, p["ln1"], x), shard)
+        x = x + h
+        x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x), shard)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _maybe_remat(fn, runtime: Runtime):
+    if runtime.remat == "layer":
+        return jax.checkpoint(fn)
+    if runtime.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_saveable)
+    return fn
+
+
+# ------------------------------------------------------------- block stack
+def _pattern(cfg: ModelConfig):
+    kinds = cfg.layer_kinds()
+    pat = tuple(cfg.block_pattern) if cfg.block_pattern else (kinds[0],)
+    return kinds, pat
+
+
+def _stack_units(cfg: ModelConfig, layers_list):
+    """Stack per-layer param trees across repeating pattern units so a
+    single lax.scan drives heterogeneous stacks (e.g. (R,R,L) hybrids).
+    A stack that does not tile evenly (recurrentgemma: 26 = 8x(R,R,L)+2)
+    returns the remainder layers for an unrolled tail."""
+    _, pat = _pattern(cfg)
+    U = len(pat)
+    n_units = len(layers_list) // U
+    scanned = layers_list[: n_units * U]
+    tail = layers_list[n_units * U:]
+    stacked = tuple(
+        jax.tree.map(lambda *xs: jnp.stack(xs), *scanned[j::U])
+        for j in range(U)) if n_units else ()
+    return pat, stacked, tail
+
+
+def _aux_zero(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    if cfg.num_experts:
+        return {"moe_load_balance": jnp.zeros((), jnp.float32),
+                "moe_z_loss": jnp.zeros((), jnp.float32)}
+    return {}
+
+
+def _run_blocks(cfg: ModelConfig, params, x, positions, shard,
+                runtime: Runtime):
+    """Run the layer stack: lax.scan over pattern units (production
+    path — one compiled body) or an unrolled python loop (dry-run cost
+    accounting; XLA's cost model counts scan bodies once)."""
+    kinds = cfg.layer_kinds()
+    if runtime.scan_layers and len(kinds) > len(
+            cfg.block_pattern or (1,)):
+        pat, stacked, tail = _stack_units(cfg, params["layers"])
+
+        def body(carry, unit_params):
+            xx, aux_acc = carry
+            for j, kind in enumerate(pat):
+                xx, aux = block_forward(cfg, kind, unit_params[j], xx,
+                                        positions, shard, runtime)
+                for k2 in aux_acc:
+                    aux_acc = dict(aux_acc)
+                    aux_acc[k2] = aux_acc[k2] + aux.get(k2, 0.0)
+            return (xx, aux_acc), None
+
+        body = _maybe_remat(body, runtime)
+        (x, aux_total), _ = jax.lax.scan(body, (x, _aux_zero(cfg)),
+                                         stacked)
+        for kind, p in zip(pat, tail):          # unrolled remainder
+            x, aux = block_forward(cfg, kind, p, x, positions, shard,
+                                   runtime)
+            for k2, v in aux.items():
+                aux_total[k2] = aux_total.get(k2, 0.0) + v
+        return x, aux_total
+
+    aux_total: Dict[str, jnp.ndarray] = {}
+    for kind, p in zip(kinds, params["layers"]):
+        fn = _maybe_remat(
+            lambda pp, xx, k=kind: block_forward(
+                cfg, k, pp, xx, positions, shard, runtime), runtime)
+        x, aux = fn(p, x)
+        for k2, v in aux.items():
+            aux_total[k2] = aux_total.get(k2, 0.0) + v
+    return x, aux_total
+
+
+# ----------------------------------------------------------------- forward
+def embed_inputs(cfg: ModelConfig, params, tokens, embeds, positions, shard):
+    """tokens (B,St) int32 and/or embeds (B,Se,D).  Frontend-stub archs
+    prepend precomputed modality embeddings (vision patches / audio frames)
+    per the assignment spec."""
+    use = getattr(shard, "use", lambda w: w)
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(jnp.dtype(cfg.dtype)))
+    if tokens is not None:
+        te = jnp.take(use(params["embed"]["tokens"]), tokens, axis=0)
+        parts.append(te)
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos_emb == "sinusoidal":
+        x = x + L.sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)
+    x = shard(x, "act_batch", "act_seq", None)
+    return x, positions
+
+
+def forward(cfg: ModelConfig, params, tokens=None, *, embeds=None,
+            positions=None, runtime: Runtime = Runtime(),
+            shard: ShardCtx = NO_SHARD):
+    """Full-sequence forward -> (logits, aux_losses)."""
+    x, positions = embed_inputs(cfg, params, tokens, embeds, positions, shard)
+    kinds = cfg.layer_kinds()
+
+    x, aux_total = _run_blocks(cfg, params, x, positions, shard, runtime)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    head = _head(cfg, params, shard)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = shard(logits, "act_batch", "act_seq", "act_vocab")
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits, aux_total
+
+
+def _head(cfg: ModelConfig, params, shard):
+    use = getattr(shard, "use", lambda w: w)
+    if cfg.tie_embeddings:
+        return use(params["embed"]["tokens"]).T
+    return use(params["lm_head"]["w"])
+
+
+def hidden_states(cfg: ModelConfig, params, tokens=None, *, embeds=None,
+                  positions=None, runtime: Runtime = Runtime(),
+                  shard: ShardCtx = NO_SHARD):
+    """forward() minus the LM head: final-norm hidden states + aux."""
+    x, positions = embed_inputs(cfg, params, tokens, embeds, positions,
+                                shard)
+    x, aux_total = _run_blocks(cfg, params, x, positions, shard, runtime)
+    return L.apply_norm(cfg, params["final_norm"], x), aux_total
+
+
+def lm_loss(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray],
+            runtime: Runtime = Runtime(), shard: ShardCtx = NO_SHARD):
+    """Next-token cross-entropy.  batch: tokens/embeds + labels (B,S).
+
+    labels < 0 are masked out (padding / modality-frontend positions).
+    """
+    x, aux = hidden_states(
+        cfg, params,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        runtime=runtime, shard=shard)
+    head = _head(cfg, params, shard)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    S = x.shape[1]
+    nc = max(1, min(runtime.ce_chunks, S))
+    assert S % nc == 0, (S, nc)
+    cs = S // nc
+    nll_sum = 0.0
+    # unrolled seq-chunked CE: bounds the fp32 logits buffer to
+    # (B, S/nc, V) while keeping HLO cost accounting exact
+    for i in range(nc):
+        xc = x[:, i * cs:(i + 1) * cs]
+        logits = jnp.einsum("bsd,dv->bsv", xc, head)
+        logits = shard(logits, "act_batch", "act_seq", "act_vocab")
+        logits = logits.astype(jnp.float32)
+        if cfg.logit_softcap:
+            c = cfg.logit_softcap
+            logits = jnp.tanh(logits / c) * c
+        lc = safe[:, i * cs:(i + 1) * cs]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll_sum = nll_sum + jnp.sum(
+            (lse - ll) * mask[:, i * cs:(i + 1) * cs])
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = nll_sum / denom
+    total = loss
+    for v in aux.values():
+        total = total + v
+    metrics = {"nll": loss, **aux,
+               "tokens": jnp.sum(mask)}
+    return total, metrics
+
+
+# ------------------------------------------------------------------- cache
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+               cache_dtype: str = ""):
+    """Shape/dtype spec of the per-layer decode state.
+
+    Attention layers hold (B, S, KV, Dh) K/V (ring-buffer of
+    ``local_window`` for local attention); SSD and RG-LRU layers hold
+    fixed-size recurrent state — the framework treats both uniformly as
+    "the prefix cache" (see DESIGN.md §Arch-applicability).
+    """
+    dt = jnp.dtype(cache_dtype) if cache_dtype else jnp.dtype(cfg.dtype)
+    spec = []
+    for kind in cfg.layer_kinds():
+        if kind in ("attn", "moe"):
+            s = {"k": ((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt),
+                 "v": ((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt),
+                 "pos": ((), jnp.int32)}
+        elif kind == "local":
+            w = min(cfg.local_window, max_len)
+            s = {"k": ((batch, w, cfg.num_kv_heads, cfg.head_dim), dt),
+                 "v": ((batch, w, cfg.num_kv_heads, cfg.head_dim), dt),
+                 "pos": ((), jnp.int32)}
+        elif kind == "ssd":
+            s = {"conv": ((batch, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dt),
+                 "ssm": ((batch, cfg.ssm_heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32)}
+        elif kind == "rglru":
+            s = {"conv": ((batch, cfg.conv1d_width - 1, cfg.lru_width), dt),
+                 "lru": ((batch, cfg.lru_width), jnp.float32)}
+        spec.append(s)
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               cache_dtype: str = ""):
+    return [
+        {k: jnp.zeros(shape, dtype) for k, (shape, dtype) in s.items()}
+        for s in cache_spec(cfg, batch, max_len, cache_dtype)
+    ]
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   cache_dtype: str = ""):
+    return [
+        {k: jax.ShapeDtypeStruct(shape, dtype)
+         for k, (shape, dtype) in s.items()}
+        for s in cache_spec(cfg, batch, max_len, cache_dtype)
+    ]
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical axes for the decode cache (mirrors cache_spec)."""
+    spec = []
+    for kind in cfg.layer_kinds():
+        if kind in ("attn", "moe", "local"):
+            s = {"k": ("act_batch", "kv_seq", "act_kv", None),
+                 "v": ("act_batch", "kv_seq", "act_kv", None),
+                 "pos": ()}
+        elif kind == "ssd":
+            s = {"conv": ("act_batch", None, "ssm_conv_ch"),
+                 "ssm": ("act_batch", None, None, None)}
+        elif kind == "rglru":
+            s = {"conv": ("act_batch", None, "lru"),
+                 "lru": ("act_batch", "lru")}
+        spec.append(s)
+    return spec
+
+
+# ------------------------------------------------------------- serve steps
+def _block_decode(cfg, kind, p, x, pos, cache, shard, runtime):
+    window = cfg.local_window if kind == "local" else 0
+    if kind in ("attn", "local", "moe"):
+        h, cache = L.attention_decode(cfg, p["attn"],
+                                      L.apply_norm(cfg, p["ln1"], x),
+                                      pos, shard, runtime, cache, window)
+        x = x + h
+        if kind == "moe":
+            m, _ = L.moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x),
+                         shard)
+            x = x + m
+        else:
+            x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x),
+                          shard)
+    elif kind == "ssd":
+        h, cache = L.ssd_decode_step(cfg, p["ssd"],
+                                     L.apply_norm(cfg, p["ln1"], x),
+                                     cache, shard)
+        x = x + h
+    elif kind == "rglru":
+        h, cache = L.rglru_decode_step(cfg, p["rglru"],
+                                       L.apply_norm(cfg, p["ln1"], x),
+                                       cache, shard)
+        x = x + h
+        x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x), shard)
+    return x, cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos,
+                runtime: Runtime = Runtime(), shard: ShardCtx = NO_SHARD):
+    """One decode step.  tokens (B,1) int32; pos scalar int32 (current
+    position = number of tokens already in the cache)."""
+    B = tokens.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x, _ = embed_inputs(cfg, params, tokens, None, positions, shard)
+    new_cache = []
+    for kind, p, c in zip(cfg.layer_kinds(), params["layers"], cache):
+        x, c2 = _block_decode(cfg, kind, p, x, pos, c, shard, runtime)
+        new_cache.append(c2)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    head = (params["embed"]["tokens"].T if cfg.tie_embeddings
+            else params["lm_head"]["w"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits[:, 0], new_cache
+
+
+def _prefill_block(cfg: ModelConfig, kind: str, p, x, positions, c,
+                   shard, runtime: Runtime):
+    window = cfg.local_window if kind == "local" else 0
+    if kind in ("attn", "local", "moe"):
+        h, c2 = L.attention_prefill(cfg, p["attn"],
+                                    L.apply_norm(cfg, p["ln1"], x),
+                                    positions, shard, runtime, c, window)
+        x = x + h
+        if kind == "moe":
+            m, _ = L.moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x),
+                         shard)
+            x = x + m
+        else:
+            x = x + L.mlp(cfg, p["mlp"],
+                          L.apply_norm(cfg, p["ln2"], x), shard)
+    elif kind == "ssd":
+        h, c2 = L.ssd_forward(cfg, p["ssd"],
+                              L.apply_norm(cfg, p["ln1"], x), shard, c)
+        x = x + h
+    elif kind == "rglru":
+        h, c2 = L.rglru_forward(cfg, p["rglru"],
+                                L.apply_norm(cfg, p["ln1"], x), shard, c)
+        x = x + h
+        x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x), shard)
+    return x, c2
+
+
+def _zero_cache_for(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    """Single-layer zero cache of the given kind."""
+    idx = cfg.layer_kinds().index(kind)
+    spec = cache_spec(cfg, batch, max_len)[idx]
+    return {k: jnp.zeros(shape, dtype) for k, (shape, dtype) in spec.items()}
+
+
+def prefill(cfg: ModelConfig, params, tokens=None, *, embeds=None,
+            cache=None, runtime: Runtime = Runtime(),
+            shard: ShardCtx = NO_SHARD):
+    """Run the prompt through the model, filling the cache.
+
+    Returns (last-token logits, cache).  With ``runtime.scan_layers``
+    the stack runs as one lax.scan over pattern units and the cache
+    comes back STACKED: a tuple (one entry per pattern position) of
+    pytrees with a leading (num_units,) axis — the production layout
+    big models serve with.  Otherwise the cache is a per-layer list.
+    """
+    x, positions = embed_inputs(cfg, params, tokens, embeds, None, shard)
+    B, S, _ = x.shape
+    kinds = cfg.layer_kinds()
+
+    if runtime.scan_layers and len(kinds) > len(cfg.block_pattern or (1,)):
+        assert cache is None, "scan-prefill builds its own cache"
+        pat, stacked, tail = _stack_units(cfg, params["layers"])
+        max_len = S
+
+        def body(xx, unit_params):
+            caches = []
+            for j, kind in enumerate(pat):
+                c0 = _zero_cache_for(cfg, kind, B, max_len)
+                xx, c2 = _prefill_block(cfg, kind, unit_params[j], xx,
+                                        positions, c0, shard, runtime)
+                caches.append(c2)
+            return xx, tuple(caches)
+
+        x, new_cache = jax.lax.scan(body, x, stacked)
+        tail_caches = []
+        for kind, p in zip(pat, tail):              # unrolled remainder
+            c0 = _zero_cache_for(cfg, kind, B, max_len)
+            x, c2 = _prefill_block(cfg, kind, p, x, positions, c0,
+                                   shard, runtime)
+            tail_caches.append(c2)
+        if tail_caches:
+            new_cache = (new_cache, tuple(tail_caches))
+    else:
+        if cache is None:
+            cache = init_cache(cfg, B, S)
+        new_cache = []
+        for kind, p, c in zip(kinds, params["layers"], cache):
+            x, c2 = _prefill_block(cfg, kind, p, x, positions, c, shard,
+                                   runtime)
+            new_cache.append(c2)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    head = _head(cfg, params, shard)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, new_cache

@@ -1,0 +1,82 @@
+"""Pluggable search algorithms (paper §5 step 1).
+
+SpecGen wraps a *user-specified* search algorithm; the controller only
+calls ``init_ctx``/``update``.  Three provided strategies:
+
+  * FeedbackSearch   — iterative refinement (KernelBench default):
+                       accumulate profiling feedback into the context;
+  * BestOfNSearch    — keep the N best kernels as in-context exemplars
+                       (CudaForge/K-search family);
+  * EvolutionarySearch — population with parent sampling + mutation
+                       pressure (AlphaEvolve/OpenEvolve family): the
+                       context carries the sampled parent so the trace
+                       generator conditions on it.
+
+All three drive the same SpecController unchanged — the paper's
+"requires no changes to the underlying LLM or search algorithm".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.types import KernelCandidate, ProfileResult
+from repro.search.llm_sim import FeedbackSearch  # re-export  # noqa: F401
+
+
+@dataclasses.dataclass
+class BestOfNSearch:
+    """Keep the top-N profiled kernels as exemplars in the context."""
+    n: int = 4
+
+    def init_ctx(self, task_id: str) -> Dict[str, Any]:
+        return {"task_id": task_id, "feedback_count": 0.0,
+                "best_speedup": 0.0, "exemplars": []}
+
+    def update(self, ctx, best: Optional[KernelCandidate],
+               feedback: List[ProfileResult]) -> Dict[str, Any]:
+        ctx = dict(ctx)
+        ctx["feedback_count"] = float(len(feedback))
+        tops = sorted((f.speedup for f in feedback), reverse=True)[: self.n]
+        ctx["exemplars"] = tops
+        if tops:
+            ctx["best_speedup"] = tops[0]
+        return ctx
+
+
+@dataclasses.dataclass
+class EvolutionarySearch:
+    """Population-based: sample a parent ~ softmax(speedup/T) each
+    iteration; the context's parent fields condition the next trace."""
+    population: int = 8
+    temperature: float = 1.0
+    seed: int = 0
+
+    def init_ctx(self, task_id: str) -> Dict[str, Any]:
+        return {"task_id": task_id, "feedback_count": 0.0,
+                "best_speedup": 0.0, "population": [], "parent": None,
+                "generation": 0}
+
+    def update(self, ctx, best: Optional[KernelCandidate],
+               feedback: List[ProfileResult]) -> Dict[str, Any]:
+        ctx = dict(ctx)
+        ctx["feedback_count"] = float(len(feedback))
+        ctx["generation"] = ctx.get("generation", 0) + 1
+        pop = sorted((f.speedup for f in feedback),
+                     reverse=True)[: self.population]
+        ctx["population"] = pop
+        if pop:
+            ctx["best_speedup"] = pop[0]
+            rs = np.random.RandomState(self.seed + ctx["generation"])
+            w = np.exp(np.asarray(pop) / max(self.temperature, 1e-6))
+            ctx["parent"] = float(rs.choice(pop, p=w / w.sum()))
+        return ctx
+
+
+ALGORITHMS = {
+    "refine": FeedbackSearch,
+    "best-of-n": BestOfNSearch,
+    "evolutionary": EvolutionarySearch,
+}

@@ -1,0 +1,157 @@
+"""Baseline harnesses (paper §8.1): CudaForge, AlphaEvolve, KernelAgent.
+
+All three share the calibrated workload model and the scheduler
+substrate with the legacy "one GPU per kernel" static partitioning —
+one exclusive device per task serving validation then profiling
+(work_stealing lets the single device drain both queues sequentially,
+which is exactly what a dedicated per-kernel GPU does).
+
+Harness-level differences (from the papers / §8.2's analysis):
+  * CudaForge   — Coder-Judge: each iteration adds a non-reasoning judge
+                  step before validation; hardware (NCU) feedback loop.
+  * AlphaEvolve — evolutionary loop: longer prompts (population context)
+                  => slightly longer generations; parent selection lifts
+                  validity a little; candidates actionable only after
+                  each full generation.
+  * KernelAgent — analysis + verification stage (CPU-side) before GPU
+                  validation; lifts validity; adds per-iteration latency.
+
+Crucially, none of them overlaps validation/profiling with the ongoing
+reasoning generation — the inefficiency SpecGen removes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.clock import EventLoop
+from repro.core.scheduler import ElasticScheduler, SchedulerConfig
+from repro.core.types import IterationRecord, KernelCandidate, Request
+from repro.core.controller import TaskResult
+from repro.search.llm_sim import SimEvalBackend, SimLLMBackend
+from repro.search.workload import WorkloadModel, _rs
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineSpec:
+    name: str
+    gen_mult: float = 1.0            # context-length latency multiplier
+    validity_boost: float = 1.0
+    judge_latency: float = 0.0       # coder-judge non-reasoning step (s)
+    judge_tokens: int = 0
+    verify_latency: float = 0.0      # CPU-side verification stage (s)
+    token_mult: float = 1.0
+
+
+BASELINES: Dict[str, BaselineSpec] = {
+    "cudaforge": BaselineSpec("cudaforge", judge_latency=45.0,
+                              judge_tokens=2_000),
+    "alphaevolve": BaselineSpec("alphaevolve", gen_mult=1.15,
+                                validity_boost=1.17, token_mult=1.12),
+    "kernelagent": BaselineSpec("kernelagent", gen_mult=1.10,
+                                validity_boost=1.17, verify_latency=55.0,
+                                token_mult=1.08),
+}
+
+
+class BaselineHarness:
+    """Sequential gen -> (judge/verify) -> validate -> profile loop."""
+
+    def __init__(self, loop: EventLoop, sched: ElasticScheduler,
+                 llm: SimLLMBackend, evaluator: SimEvalBackend,
+                 spec: BaselineSpec, iterations: int = 100,
+                 token_budget: Optional[float] = None):
+        self.loop, self.sched = loop, sched
+        self.llm, self.eval = llm, evaluator
+        self.spec = spec
+        self.iterations = iterations
+        self.token_budget = token_budget
+
+    def run_task(self, task_id: str) -> TaskResult:
+        m = self.llm.model
+        task = m.task(task_id)
+        records: List[IterationRecord] = []
+        history: List[float] = [0.0]
+        best = None
+        best_speedup = 0.0
+        tokens = 0.0
+        feedback_total = 0
+        it = 0
+        while it < self.iterations:
+            if self.token_budget is not None and tokens >= self.token_budget:
+                break
+            rec = IterationRecord(index=it, t_start=self.loop.now)
+            self.sched.begin_iteration(it)
+            state = {"done": False}
+            fb = float(feedback_total)
+
+            gen_dur = m.gen_duration(task, it, mult=self.spec.gen_mult)
+            gen_toks = (m.reasoning_tokens(task, it)
+                        * self.spec.gen_mult * self.spec.token_mult)
+            ok, fail = m.reasoning_valid(task, it,
+                                         boost=self.spec.validity_boost)
+            sp = m.speedup(task, fb, 1.0, it, 0, "reasoning") if ok else 0.0
+            cand = KernelCandidate(
+                task_id=task_id,
+                config={"_valid": ok, "_failure": fail, "_speedup": sp,
+                        "_it": it, "_draw": 0},
+                origin="reasoning", iteration=it)
+
+            def submit_eval():
+                vdur, vres = self.eval.validate(cand)
+
+                def vdone(req: Request):
+                    nonlocal best, best_speedup
+                    rec.candidates += 1
+                    if not vres.ok:
+                        rec.status = vres.failure or "invalid"
+                        state["done"] = True
+                        return
+                    rec.validated += 1
+                    pdur, pres = self.eval.profile(cand)
+
+                    def pdone(req2: Request):
+                        nonlocal best, best_speedup
+                        rec.profiled += 1
+                        rec.status = "success"
+                        history.append(pres.speedup)
+                        if pres.speedup > best_speedup:
+                            best, best_speedup = cand, pres.speedup
+                        state["done"] = True
+                    self.sched.submit(Request(
+                        kind="profiling", candidate=cand, duration=pdur,
+                        on_complete=pdone))
+                self.sched.submit(Request(
+                    kind="validation", candidate=cand, duration=vdur,
+                    on_complete=vdone))
+
+            extra = self.spec.judge_latency + self.spec.verify_latency
+            self.loop.schedule(gen_dur + extra, submit_eval, tag="gen")
+            self.loop.run(stop=lambda: state["done"])
+            if not state["done"]:
+                state["done"] = True
+
+            tokens += gen_toks + self.spec.judge_tokens
+            rec.gen_time = gen_dur + extra
+            rec.reasoning_tokens = int(gen_toks)
+            rec.t_end = self.loop.now
+            rec.best_speedup = best_speedup
+            feedback_total += rec.profiled
+            records.append(rec)
+            it += 1
+
+        return TaskResult(
+            task_id=task_id, records=records, best_speedup=best_speedup,
+            best_candidate=best, total_tokens=tokens,
+            reasoning_tokens=tokens, spec_tokens=0.0,
+            cached_prefix_tokens=0.0, e2e_time=self.loop.now,
+            profiling_feedback=feedback_total, early_terminations=0,
+            history=history)
+
+
+def one_gpu_per_kernel_scheduler(loop: EventLoop) -> ElasticScheduler:
+    """Legacy partitioning: a single exclusive device per task runs
+    its validation and profiling sequentially."""
+    return ElasticScheduler(loop, SchedulerConfig(
+        num_devices=1, mode="static", static_split=(1, 0),
+        work_stealing=True))

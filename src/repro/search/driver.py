@@ -1,0 +1,87 @@
+"""One-call drivers assembling the full stacks (benchmarks/examples)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.core.clock import EventLoop
+from repro.core.controller import SpecController, SpecGenConfig, TaskResult
+from repro.core.scheduler import ElasticScheduler, SchedulerConfig
+from repro.search.baselines import (BASELINES, BaselineHarness,
+                                    one_gpu_per_kernel_scheduler)
+from repro.search.llm_sim import FeedbackSearch, SimEvalBackend, SimLLMBackend
+from repro.search.workload import WorkloadModel
+
+
+def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
+                devices: int = 2, termination="hist-avg",
+                enable_speculation: bool = True, prefix_cache: bool = True,
+                scheduler_mode: str = "elastic",
+                validation_policy: str = "laf",
+                profiling_policy: str = "fifo",
+                seed: int = 0, max_concurrent_spec: int = 8,
+                ) -> Tuple[TaskResult, ElasticScheduler, SpecController]:
+    loop = EventLoop()
+    wl = WorkloadModel(model=model, seed=seed)
+    sched = ElasticScheduler(loop, SchedulerConfig(
+        num_devices=devices, mode=scheduler_mode,
+        validation_policy=validation_policy,
+        profiling_policy=profiling_policy,
+        static_split=((devices - devices // 2, devices // 2)
+                      if scheduler_mode == "static" else None)))
+    ctl = SpecController(
+        loop, sched, SimLLMBackend(wl), SimEvalBackend(wl),
+        FeedbackSearch(),
+        SpecGenConfig(iterations=iterations, termination=termination,
+                      enable_speculation=enable_speculation,
+                      prefix_cache=prefix_cache,
+                      max_concurrent_spec=max_concurrent_spec))
+    res = ctl.run_task(task_id)
+    return res, sched, ctl
+
+
+def run_baseline(name: str, task_id: str, model: str = "glm",
+                 iterations: int = 100, seed: int = 0,
+                 token_budget: Optional[float] = None,
+                 ) -> Tuple[TaskResult, ElasticScheduler]:
+    loop = EventLoop()
+    wl = WorkloadModel(model=model, seed=seed)
+    sched = one_gpu_per_kernel_scheduler(loop)
+    h = BaselineHarness(loop, sched, SimLLMBackend(wl), SimEvalBackend(wl),
+                        BASELINES[name], iterations=iterations,
+                        token_budget=token_budget)
+    res = h.run_task(task_id)
+    return res, sched
+
+
+def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
+                    devices: int = 10, seed: int = 0,
+                    scheduler_mode: str = "elastic",
+                    validation_policy: str = "laf",
+                    profiling_policy: str = "fifo",
+                    work_stealing: bool = False,
+                    enable_speculation: bool = True,
+                    prefix_cache: bool = True,
+                    termination="hist-avg"):
+    """The paper's evaluation setting: N workflows sharing one pool."""
+    loop = EventLoop()
+    wl = WorkloadModel(model=model, seed=seed)
+    sched = ElasticScheduler(loop, SchedulerConfig(
+        num_devices=devices, mode=scheduler_mode,
+        validation_policy=validation_policy,
+        profiling_policy=profiling_policy,
+        work_stealing=work_stealing,
+        static_split=((devices - devices // 2, devices // 2)
+                      if scheduler_mode == "static" else None)))
+    ctls = []
+    for i, task in enumerate(tasks):
+        c = SpecController(
+            loop, sched, SimLLMBackend(wl), SimEvalBackend(wl),
+            FeedbackSearch(),
+            SpecGenConfig(iterations=iterations, termination=termination,
+                          enable_speculation=enable_speculation,
+                          prefix_cache=prefix_cache),
+            name=f"w{i}")
+        c.start(task)
+        ctls.append(c)
+    loop.run(stop=lambda: all(c.done for c in ctls))
+    return sched, ctls

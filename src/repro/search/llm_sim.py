@@ -1,0 +1,199 @@
+"""Scripted LLM + evaluation backends over the calibrated workload model.
+
+The reasoning stream is synthesized TEXT (with real trigger signals the
+regex parser must find — nothing is side-channeled to the controller),
+and every candidate kernel carries a concrete Pallas-template config.
+Outcomes (validity, speedup) are decided at generation time by the
+workload model and *revealed* by the evaluation backend after the
+calibrated validation/profiling latencies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.controller import ReasoningScript, SpecScript
+from repro.core.types import KernelCandidate, ProfileResult, ValidationResult
+from repro.search.workload import WorkloadModel, _rs
+
+_FILLER = [
+    "Hmm, the profiler shows the kernel is memory bound. ",
+    "Wait, I need to reconsider the accumulation order here. ",
+    "The reference implementation loops over the K dimension naively. ",
+    "Occupancy might drop if registers per thread grow too much. ",
+    "Let me think about the data reuse pattern once more. ",
+    "Actually the L2 hit rate from the last NCU report was low. ",
+    "Bank conflicts could explain the gap to the roofline. ",
+    "The arithmetic intensity suggests we are latency bound. ",
+]
+
+_DESIGN = [
+    "I'll use tile size {bm}x{bn} with BLOCK_K = {bk}. ",
+    "Choose a block shape of {bm}x{bn} tiles for the output. ",
+    "We should use shared memory for the {bk}-wide K panels. ",
+    "Set BLOCK_M = {bm} and parallelize over the M dimension. ",
+    "Use tensor cores with {bm}x{bn} tiles and an unroll factor of 4. ",
+]
+
+_PHRASE = [
+    "Let me implement this now. ",
+    "Here is the plan: tile, stage, accumulate. ",
+    "I'll write the kernel accordingly. ",
+    "Now I will implement the tiled version. ",
+]
+
+_BODY = ("__global__ void opt_kernel(const float* A, const float* B, "
+         "float* C) {{ /* {bm}x{bn}x{bk} tiled */ }} ")
+
+_FENCE = ("```cuda\n__global__ void opt_kernel(const float* A, "
+          "const float* B, float* C) {{\n  // tile {bm}x{bn}, BLOCK_K={bk}"
+          "\n}}\n``` ")
+
+
+def _cfg_from(rs: np.random.RandomState) -> Dict[str, int]:
+    return {"bm": int(rs.choice([32, 64, 128, 256])),
+            "bn": int(rs.choice([32, 64, 128, 256])),
+            "bk": int(rs.choice([16, 32, 64, 128])),
+            "unroll": int(rs.choice([1, 2, 4]))}
+
+
+def synth_trace(model: WorkloadModel, task_id: str, it: int,
+                n_chunks: int = 28) -> Tuple[List[str], Dict[str, int]]:
+    """Reasoning trace text split into chunks; returns (chunks, config)."""
+    rs = _rs(model.seed, model.model, task_id, it, "trace")
+    cfg = _cfg_from(rs)
+    n_trig = rs.randint(3, 8)
+    trig_at = sorted(rs.uniform(0.12, 0.92, size=n_trig))
+    kinds = rs.choice(["design", "phrase", "body", "fence"], size=n_trig,
+                      p=[0.45, 0.25, 0.15, 0.15])
+    chunks: List[str] = []
+    ti = 0
+    for i in range(n_chunks):
+        frac = (i + 1) / n_chunks
+        text = "".join(rs.choice(_FILLER)
+                       for _ in range(rs.randint(2, 5)))
+        while ti < n_trig and trig_at[ti] <= frac:
+            kind = kinds[ti]
+            if kind == "design":
+                text += str(rs.choice(_DESIGN)).format(**cfg)
+            elif kind == "phrase":
+                text += str(rs.choice(_PHRASE))
+            elif kind == "body":
+                text += _BODY.format(**cfg)
+            else:
+                text += _FENCE.format(**cfg)
+            ti += 1
+        chunks.append(text)
+    return chunks, cfg
+
+
+class SimLLMBackend:
+    """LLMBackend over the calibrated workload model."""
+
+    def __init__(self, model: WorkloadModel):
+        self.model = model
+        self._spec_draws: Dict[Tuple[str, int], int] = {}
+
+    def reasoning(self, task_id: str, it: int,
+                  ctx: Dict[str, Any]) -> ReasoningScript:
+        m = self.model
+        task = m.task(task_id)
+        dur = m.gen_duration(task, it)
+        toks = m.reasoning_tokens(task, it)
+        chunks, cfg = synth_trace(m, task_id, it)
+        n = len(chunks)
+        rel = [dur * (i + 1) / (n + 1) for i in range(n)]
+        fb = float(ctx.get("feedback_count", 0.0))
+
+        def candidate_fn() -> Optional[KernelCandidate]:
+            ok, fail = m.reasoning_valid(task, it)
+            sp = m.speedup(task, fb, 1.0, it, 0, "reasoning") if ok else 0.0
+            return KernelCandidate(
+                task_id=task_id, config=dict(
+                    cfg, _valid=ok, _failure=fail, _speedup=sp,
+                    _it=it, _draw=0),
+                source=_FENCE.format(**cfg), origin="reasoning",
+                prefix_frac=1.0)
+
+        return ReasoningScript(duration=dur, total_tokens=toks,
+                               chunks=list(zip(rel, chunks)),
+                               candidate_fn=candidate_fn)
+
+    def speculative(self, task_id: str, it: int, ctx: Dict[str, Any],
+                    prefix_frac: float) -> SpecScript:
+        m = self.model
+        task = m.task(task_id)
+        key = (task_id, it)
+        draw = self._spec_draws.get(key, 0) + 1
+        self._spec_draws[key] = draw
+        dur = m.spec_duration(task, it, draw)
+        out_toks = m.spec_out_tokens(task, it, draw)
+        fb = float(ctx.get("feedback_count", 0.0))
+        ok, fail = m.spec_valid(task, it, draw, prefix_frac)
+        sp = (m.speedup(task, fb, prefix_frac, it, draw, "spec")
+              if ok else 0.0)
+        rs = _rs(m.seed, m.model, task_id, it, draw, "scfg")
+        cfg = _cfg_from(rs)
+        cand = KernelCandidate(
+            task_id=task_id,
+            config=dict(cfg, _valid=ok, _failure=fail, _speedup=sp,
+                        _it=it, _draw=draw),
+            source=_FENCE.format(**cfg), origin="spec",
+            prefix_frac=prefix_frac)
+        prefix_tokens = int(prefix_frac * m.reasoning_tokens(task, it))
+        return SpecScript(duration=dur, tokens=out_toks,
+                          prompt_tokens=m.prompt_tokens + prefix_tokens,
+                          candidate=cand)
+
+    def nonreasoning(self, task_id: str, it: int, draw: int,
+                     ctx: Dict[str, Any]) -> SpecScript:
+        """Unconditioned non-reasoning generation (Table 2 'w/o')."""
+        return self.speculative(task_id, it, dict(ctx), prefix_frac=0.0)
+
+
+class SimEvalBackend:
+    """Reveals the pre-decided outcome after calibrated latencies."""
+
+    def __init__(self, model: WorkloadModel):
+        self.model = model
+
+    def validate(self, cand: KernelCandidate
+                 ) -> Tuple[float, ValidationResult]:
+        task = self.model.task(cand.task_id)
+        it, draw = cand.config.get("_it", 0), cand.config.get("_draw", 0)
+        dur = self.model.val_duration(task, it, draw)
+        ok = bool(cand.config.get("_valid", False))
+        return dur, ValidationResult(
+            ok=ok, failure=cand.config.get("_failure"),
+            speedup_firstcut=float(cand.config.get("_speedup", 0.0)))
+
+    def profile(self, cand: KernelCandidate) -> Tuple[float, ProfileResult]:
+        task = self.model.task(cand.task_id)
+        it, draw = cand.config.get("_it", 0), cand.config.get("_draw", 0)
+        dur = self.model.prof_duration(task, it, draw)
+        sp = float(cand.config.get("_speedup", 0.0))
+        return dur, ProfileResult(
+            speedup=sp,
+            metrics={"sm_efficiency": min(0.98, 0.3 + sp / 20.0),
+                     "dram_bw_frac": 0.5})
+
+
+@dataclasses.dataclass
+class FeedbackSearch:
+    """Default search algorithm: accumulate profiling feedback into the
+    context (iterative refinement — the KernelBench framework the paper
+    characterizes).  Also the substrate for best-of-N/evolutionary modes
+    used by the baseline harnesses."""
+
+    def init_ctx(self, task_id: str) -> Dict[str, Any]:
+        return {"task_id": task_id, "feedback_count": 0.0,
+                "best_speedup": 0.0}
+
+    def update(self, ctx, best, feedback) -> Dict[str, Any]:
+        ctx = dict(ctx)
+        ctx["feedback_count"] = float(len(feedback))
+        if feedback:
+            ctx["best_speedup"] = max(f.speedup for f in feedback)
+        return ctx

@@ -1,0 +1,65 @@
+"""KernelBench-like task definitions (Tables 1 and 3) as jnp ops.
+
+Each task is a reference computation plus the candidate-template
+binding: for the matmul-family tasks a candidate kernel is a config of
+``repro.kernels.matmul`` (blocks + epilogue + mask); the real
+evaluation backend builds the Pallas kernel, checks it against the
+reference (validation) and prices it with the TPU cost model
+(profiling).  Shapes are downscaled from KernelBench for interpret-mode
+CPU execution; the cost model prices the FULL shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTaskDef:
+    task_id: str
+    name: str
+    M: int                      # full problem size (cost model)
+    N: int
+    K: int
+    mask: Optional[str] = None
+    epilogue: str = "none"
+    check_M: int = 256          # downscaled correctness-check size
+    check_N: int = 256
+    check_K: int = 128
+
+
+TASKS: Dict[str, KernelTaskDef] = {
+    "T2": KernelTaskDef("T2", "3D tensor Matmul", 16 * 1024, 1024, 2048),
+    "T3": KernelTaskDef("T3", "4D tensor Matmul", 32 * 1024, 512, 1024),
+    "T4": KernelTaskDef("T4", "Diagonal Matmul", 4096, 4096, 4096),
+    "T5": KernelTaskDef("T5", "Symmetric Matmul", 4096, 4096, 4096),
+    "T6": KernelTaskDef("T6", "Upper-tri Matmul", 4096, 4096, 4096,
+                        mask="upper"),
+    "T7": KernelTaskDef("T7", "Lower-tri Matmul", 4096, 4096, 4096,
+                        mask="lower"),
+    "T8": KernelTaskDef("T8", "A^T B Matmul", 4096, 4096, 4096),
+    "T9": KernelTaskDef("T9", "A B^T Matmul", 4096, 4096, 4096),
+    "T10": KernelTaskDef("T10", "A^T B^T Matmul", 4096, 4096, 4096),
+    # Level 2 fusions (Table 3)
+    "T11": KernelTaskDef("T11", "Gemm x LeakyReLU", 4096, 4096, 4096,
+                         epilogue="leaky_relu"),
+    "T13": KernelTaskDef("T13", "Gemm-Scale", 4096, 4096, 4096,
+                         epilogue="scale"),
+    "T15": KernelTaskDef("T15", "Matmul-Sigmoid", 4096, 4096, 4096,
+                         epilogue="sigmoid"),
+    "T17": KernelTaskDef("T17", "Gemm-Add-ReLU", 4096, 4096, 4096,
+                         epilogue="relu"),
+    "T18": KernelTaskDef("T18", "Matmul-GELU", 4096, 4096, 4096,
+                         epilogue="gelu"),
+}
+
+
+def reference_fn(task: KernelTaskDef) -> Callable:
+    from repro.kernels.matmul.ref import matmul_ref
+
+    def ref(a, b):
+        return matmul_ref(a, b, epilogue=task.epilogue, mask=task.mask)
+    return ref

@@ -1,0 +1,217 @@
+"""Calibrated workload model of agentic kernel optimization (paper §3).
+
+This is assumption A1 of DESIGN.md: we cannot run GLM-5.1 / DeepSeek-V4
+on H200s, so the INPUT statistics of the workload are calibrated to the
+paper's own characterization, and every OUTPUT claim (E2E ratios,
+feedback counts, utilization, token ratios) must then EMERGE from the
+mechanisms under test.  Calibrated inputs:
+
+  * generation latency:  mean 706.9 s (GLM) / 522.6 s (DSv4), lognormal,
+    per-task multiplier (Fig. 2: generation dominates, P75 70-99%);
+  * validation latency:  mean 22.9 s / 59.0 s;  profiling: 26.5/26.6 s;
+  * reasoning validity:  36.3% / 40.7% success overall with per-task
+    spread and model-specific failure mixes (Fig. 3);
+  * non-reasoning validity without prefix: near zero (Table 2 — 8/10
+    GLM tasks produce NO valid kernel in 100 tries);
+  * validity/quality of prefix-conditioned generations rises with the
+    prefix fraction (Table 2 w/, Fig. 6);
+  * per-task achievable-speedup ceilings anchored to Table 6/8;
+  * quality improves with accumulated profiling feedback (the paper's
+    causal premise — §8.9: "this added feedback in return guides the
+    LLM toward faster kernels").
+
+Everything is deterministic given (model, task, iteration, draw-index).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+# -------------------------------------------------- calibration constants
+MODEL_STATS = {
+    "glm": dict(gen_mean=706.9, val_mean=22.9, prof_mean=26.5,
+                p_valid_reasoning=0.363,
+                failure_mix=dict(compile=0.55, runtime=0.25, mismatch=0.20),
+                reason_tokens=20_000, spec_tokens=700,
+                prompt_tokens=2_500,
+                spec_validity_gain=1.3, spec_validity_exp=1.3,
+                spec_quality_base=0.30, spec_quality_exp=0.8),
+    "dsv4": dict(gen_mean=522.6, val_mean=59.0, prof_mean=26.6,
+                 p_valid_reasoning=0.407,
+                 failure_mix=dict(compile=0.30, runtime=0.45, mismatch=0.25),
+                 reason_tokens=16_000, spec_tokens=700,
+                 prompt_tokens=2_500,
+                 spec_validity_gain=1.5, spec_validity_exp=0.9,
+                 spec_quality_base=0.45, spec_quality_exp=0.6),
+}
+
+# Table 6 ceilings (best speedup over reference, SpecGen row ~= the
+# achievable ceiling a perfect search converges to)
+TASK_CEILING = {
+    "glm": {"T1": 23.86, "T2": 3.54, "T3": 0.79, "T4": 57.72, "T5": 6.60,
+            "T6": 3.66, "T7": 2.99, "T8": 5.13, "T9": 5.41, "T10": 5.37},
+    "dsv4": {"T1": 8.76, "T2": 1.69, "T3": 0.90, "T4": 61.54, "T5": 5.38,
+             "T6": 5.94, "T7": 3.00, "T8": 3.87, "T9": 1.19, "T10": 0.73},
+}
+# Table 8 ceilings for the harder Level 2/3 tasks (DSv4 column)
+TASK_CEILING_L23 = {
+    "T11": 1.25, "T12": 0.42, "T13": 0.63, "T14": 1.68, "T15": 0.77,
+    "T16": 1.27, "T17": 0.74, "T18": 55.79, "T19": 1.05, "T20": 1.39,
+}
+for _m in ("glm", "dsv4"):
+    TASK_CEILING[_m] = dict(TASK_CEILING[_m], **TASK_CEILING_L23)
+
+LEVEL23 = {f"T{i}" for i in range(11, 21)}
+
+
+def _stable_u01(*key) -> float:
+    h = hashlib.blake2b("|".join(map(str, key)).encode(),
+                        digest_size=8).digest()
+    return int.from_bytes(h, "big") / 2 ** 64
+
+
+def _rs(*key) -> np.random.RandomState:
+    h = hashlib.blake2b("|".join(map(str, key)).encode(),
+                        digest_size=4).digest()
+    return np.random.RandomState(int.from_bytes(h, "big") % (2 ** 31 - 1))
+
+
+@dataclasses.dataclass
+class TaskParams:
+    task_id: str
+    gen_mult: float            # per-task generation-latency multiplier
+    p_valid: float             # reasoning-generation validity
+    ceiling: float             # achievable speedup ceiling
+    tau_feedback: float        # feedback count to reach ~63% of ceiling
+    hardness: float            # Level 2/3 tasks are harder
+
+
+class WorkloadModel:
+    def __init__(self, model: str = "glm", seed: int = 0):
+        assert model in MODEL_STATS
+        self.model = model
+        self.stats = MODEL_STATS[model]
+        self.seed = seed
+        self._tasks: Dict[str, TaskParams] = {}
+
+    # ------------------------------------------------------------- task
+    def task(self, task_id: str) -> TaskParams:
+        if task_id not in self._tasks:
+            u = _stable_u01(self.seed, self.model, task_id, "mult")
+            hard = 1.0 if task_id not in LEVEL23 else 1.6
+            p = self.stats["p_valid_reasoning"]
+            pv = float(np.clip(
+                p * (0.6 + 0.9 * _stable_u01(self.seed, task_id, "pv"))
+                / hard, 0.05, 0.8))
+            self._tasks[task_id] = TaskParams(
+                task_id=task_id,
+                gen_mult=0.75 + 0.5 * u,
+                p_valid=pv,
+                ceiling=TASK_CEILING[self.model].get(task_id, 4.0),
+                tau_feedback=48.0 * hard,
+                hardness=hard)
+        return self._tasks[task_id]
+
+    # --------------------------------------------------------- knowledge
+    def knowledge(self, feedback_count: float, task: TaskParams) -> float:
+        """Search progress in [0,1): more profiling feedback -> closer to
+        the ceiling.  This encodes the paper's causal premise."""
+        return 1.0 - math.exp(-feedback_count / task.tau_feedback)
+
+    # ---------------------------------------------------------- latencies
+    def gen_duration(self, task: TaskParams, it: int, draw: int = 0,
+                     mult: float = 1.0) -> float:
+        rs = _rs(self.seed, self.model, task.task_id, it, draw, "gd")
+        # lognormal with sigma .55 around the calibrated mean
+        mu = math.log(self.stats["gen_mean"] * task.gen_mult * mult) - 0.15
+        return float(np.clip(rs.lognormal(mu, 0.55), 60.0, 3600.0))
+
+    def spec_duration(self, task: TaskParams, it: int, draw: int) -> float:
+        rs = _rs(self.seed, self.model, task.task_id, it, draw, "sd")
+        # non-reasoning generations are ~8-15x faster than reasoning
+        scale = 55.0 if self.model == "glm" else 42.0
+        return float(np.clip(rs.lognormal(math.log(scale), 0.4), 15.0, 240.0))
+
+    def val_duration(self, task: TaskParams, it: int, draw: int) -> float:
+        rs = _rs(self.seed, self.model, task.task_id, it, draw, "vd")
+        return float(np.clip(
+            rs.lognormal(math.log(self.stats["val_mean"]) - 0.08, 0.4),
+            3.0, 300.0))
+
+    def prof_duration(self, task: TaskParams, it: int, draw: int) -> float:
+        rs = _rs(self.seed, self.model, task.task_id, it, draw, "pd")
+        return float(np.clip(
+            rs.lognormal(math.log(self.stats["prof_mean"]) - 0.08, 0.4),
+            3.0, 300.0))
+
+    # ----------------------------------------------------------- validity
+    def reasoning_valid(self, task: TaskParams, it: int, draw: int = 0,
+                        boost: float = 1.0) -> Tuple[bool, Optional[str]]:
+        rs = _rs(self.seed, self.model, task.task_id, it, draw, "rv")
+        if rs.rand() < min(task.p_valid * boost, 0.9):
+            return True, None
+        mix = self.stats["failure_mix"]
+        r = rs.rand()
+        if r < mix["compile"]:
+            return False, "compile"
+        if r < mix["compile"] + mix["runtime"]:
+            return False, "runtime"
+        return False, "mismatch"
+
+    def spec_valid(self, task: TaskParams, it: int, draw: int,
+                   prefix_frac: float) -> Tuple[bool, Optional[str]]:
+        """Validity of a prefix-conditioned non-reasoning generation.
+        At frac->0 this matches Table 2 'w/o conditioning' (~1-2%);
+        as frac->1 it approaches (slightly exceeds) reasoning validity —
+        the trace has already worked out the design."""
+        p0 = 0.015
+        p1 = min(0.95, task.p_valid * self.stats["spec_validity_gain"])
+        p = p0 + (p1 - p0) * (prefix_frac ** self.stats["spec_validity_exp"])
+        rs = _rs(self.seed, self.model, task.task_id, it, draw, "sv")
+        if rs.rand() < p:
+            return True, None
+        mix = self.stats["failure_mix"]
+        r = rs.rand()
+        if r < mix["compile"]:
+            return False, "compile"
+        if r < mix["compile"] + mix["runtime"]:
+            return False, "runtime"
+        return False, "mismatch"
+
+    # ------------------------------------------------------------ quality
+    def speedup(self, task: TaskParams, feedback_count: float,
+                prefix_frac: float, it: int, draw: int,
+                origin: str) -> float:
+        """Measured speedup of a valid kernel over the reference."""
+        k = self.knowledge(feedback_count, task)
+        base = task.ceiling * (0.12 + 0.88 * k)
+        if origin == "spec":
+            # Fig. 6: conditioning quality grows with the prefix; even
+            # modest prefixes often beat the historical average
+            qb = self.stats["spec_quality_base"]
+            base *= qb + (1.05 - qb) * (
+                prefix_frac ** self.stats["spec_quality_exp"])
+        elif origin == "nonreasoning":
+            base *= 0.15
+        rs = _rs(self.seed, self.model, task.task_id, it, draw, "q",
+                 origin)
+        noise = rs.lognormal(0.0, 0.35)
+        return float(min(base * noise, task.ceiling * 1.05))
+
+    # -------------------------------------------------------------- tokens
+    def reasoning_tokens(self, task: TaskParams, it: int) -> int:
+        rs = _rs(self.seed, self.model, task.task_id, it, "rt")
+        return int(self.stats["reason_tokens"]
+                   * task.gen_mult * rs.uniform(0.8, 1.25))
+
+    def spec_out_tokens(self, task: TaskParams, it: int, draw: int) -> int:
+        rs = _rs(self.seed, self.model, task.task_id, it, draw, "st")
+        return int(self.stats["spec_tokens"] * rs.uniform(0.7, 1.4))
+
+    @property
+    def prompt_tokens(self) -> int:
+        return int(self.stats["prompt_tokens"])

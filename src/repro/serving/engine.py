@@ -1,0 +1,178 @@
+"""Generation engine: prefill/decode with prefix-cache fork semantics.
+
+This is the real-model path of the system (examples/serve_spec.py runs
+it on a reduced config).  SpecGen's SpecController talks to engines
+through the ``GenerationStream`` protocol, which the simulated LLM in
+``repro.search.llm_sim`` also implements — the controller cannot tell
+the difference (the paper's "no changes to the underlying LLM" claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.layers import Runtime
+from repro.distributed.sharding import NO_SHARD
+from repro.serving.kvcache import PrefixCacheStore, tree_bytes
+from repro.serving.sampler import sample_token
+
+
+@dataclasses.dataclass
+class Generation:
+    gen_id: int
+    tokens: List[int]                 # full context (prompt + emitted)
+    prompt_len: int
+    cache: Any = None
+    pos: int = 0
+    status: str = "pending"           # pending|running|done|cancelled
+    max_new_tokens: int = 64
+    temperature: float = 0.7
+    reasoning: bool = True            # reasoning vs speculative fork
+    shares_cache: bool = False        # copy-on-write pending
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    rng_seed: int = 0
+
+
+class Engine:
+    """Single-model generation engine with prefix-cache reuse + forks."""
+
+    def __init__(self, cfg: ModelConfig, params, runtime: Runtime = Runtime(),
+                 max_len: int = 512, cache_store: PrefixCacheStore = None,
+                 store_prefixes: bool = True):
+        self.cfg, self.params, self.runtime = cfg, params, runtime
+        self.max_len = max_len
+        # NOTE: `cache_store or ...` would discard an EMPTY store
+        # (PrefixCacheStore defines __len__) — compare to None instead
+        self.store = cache_store if cache_store is not None else \
+            PrefixCacheStore(local_budget_bytes=1 << 30,
+                             remote_budget_bytes=1 << 30)
+        self.store_prefixes = store_prefixes
+        self._gens: Dict[int, Generation] = {}
+        self._ids = itertools.count()
+        self.tokens_prefilled = 0
+        self.tokens_decoded = 0
+
+        rt = runtime
+        self._prefill = jax.jit(
+            lambda p, toks, cache: T.prefill(
+                cfg, p, toks, cache=cache, runtime=rt, shard=NO_SHARD))
+        # two decode variants: donating (exclusive cache — in-place) and
+        # non-donating (first step after a fork: copy-on-write)
+        self._decode_cow = jax.jit(
+            lambda p, tok, cache, pos: T.decode_step(
+                cfg, p, tok, cache, pos, rt, NO_SHARD))
+        self._decode_inplace = jax.jit(
+            lambda p, tok, cache, pos: T.decode_step(
+                cfg, p, tok, cache, pos, rt, NO_SHARD),
+            donate_argnums=(2,))
+
+    # ----------------------------------------------------------- lifecycle
+    def submit(self, prompt_tokens: List[int], *, max_new_tokens: int = 64,
+               temperature: float = 0.7, reasoning: bool = True,
+               seed: int = 0) -> int:
+        gid = next(self._ids)
+        self._gens[gid] = Generation(
+            gen_id=gid, tokens=list(prompt_tokens),
+            prompt_len=len(prompt_tokens), max_new_tokens=max_new_tokens,
+            temperature=temperature, reasoning=reasoning, rng_seed=seed)
+        return gid
+
+    def fork(self, parent_id: int, *, max_new_tokens: int = 64,
+             temperature: float = 0.7, seed: int = 0) -> int:
+        """Fork a speculative generation from the parent's CURRENT prefix.
+
+        The child shares the parent's cache arrays (immutable => free);
+        its first decode step copies-on-write.  No prefill recompute —
+        the paper's prefix-conditioned non-reasoning generation.
+        """
+        parent = self._gens[parent_id]
+        assert parent.status == "running", "fork requires a live parent"
+        gid = next(self._ids)
+        child = Generation(
+            gen_id=gid, tokens=list(parent.tokens),
+            prompt_len=len(parent.tokens), cache=parent.cache,
+            pos=parent.pos, status="running",
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            reasoning=False, shares_cache=True, rng_seed=seed)
+        parent.shares_cache = True        # parent must also CoW next step
+        self._gens[gid] = child
+        self.store.stats.tokens_reused += parent.pos
+        return gid
+
+    def cancel(self, gen_id: int) -> None:
+        g = self._gens.get(gen_id)
+        if g and g.status in ("pending", "running"):
+            g.status = "cancelled"
+            g.cache = None
+
+    def suspend_to_store(self, gen_id: int) -> None:
+        """Park a generation's prefix in the cache store (local tier; the
+        store migrates it remote under memory pressure)."""
+        g = self._gens[gen_id]
+        if g.cache is not None:
+            self.store.put(g.tokens[: g.pos], g.cache, length=g.pos)
+
+    # ----------------------------------------------------------- execution
+    def _ensure_prefilled(self, g: Generation) -> None:
+        """Prefill all but the last context token; decode consumes it.
+
+        Invariant maintained by ``step``:  g.pos == len(g.tokens) - 1,
+        i.e. the cache holds tokens[:pos] and tokens[pos] is the next
+        token to feed."""
+        if g.cache is not None:
+            return
+        n = g.prompt_len - 1
+        cached, clen = self.store.get(g.tokens[:n])
+        if cached is not None and clen == n:
+            g.cache = cached
+            g.shares_cache = True
+        else:
+            self.store.note_recompute(n)
+            cache = T.init_cache(self.cfg, 1, self.max_len)
+            toks = jnp.asarray([g.tokens[:n]], jnp.int32)
+            _, cache = self._prefill(self.params, toks, cache)
+            g.cache = cache
+            self.tokens_prefilled += n
+            if self.store_prefixes:
+                self.store.put(g.tokens[:n], cache, length=n)
+                g.shares_cache = True
+        g.pos = n
+        g.status = "running"
+
+    def step(self, gen_id: int) -> Optional[int]:
+        """Advance one generation by one token; returns it (or None)."""
+        g = self._gens[gen_id]
+        if g.status == "pending":
+            self._ensure_prefilled(g)
+        if g.status != "running":
+            return None
+        tok = jnp.asarray([[g.tokens[g.pos]]], jnp.int32)
+        decode = self._decode_cow if g.shares_cache else self._decode_inplace
+        logits, cache = decode(self.params, tok, g.cache, jnp.int32(g.pos))
+        g.cache = cache
+        g.shares_cache = False
+        nxt = sample_token(np.asarray(logits[0]), g.temperature,
+                           seed=g.rng_seed + g.pos)
+        g.tokens.append(int(nxt))
+        g.emitted.append(int(nxt))
+        g.pos += 1
+        self.tokens_decoded += 1
+        if len(g.emitted) >= g.max_new_tokens or g.pos >= self.max_len - 1:
+            g.status = "done"
+        return int(nxt)
+
+    def run(self, gen_id: int) -> List[int]:
+        g = self._gens[gen_id]
+        while g.status in ("pending", "running"):
+            self.step(gen_id)
+        return g.emitted
+
+    def generation(self, gen_id: int) -> Generation:
+        return self._gens[gen_id]

@@ -1,0 +1,185 @@
+"""Prefix KV-cache store with local/remote tiers (paper §6.2.3).
+
+JAX arrays are immutable, so *forking* a generation from a reasoning
+prefix is structural sharing — zero copy, zero tokens recomputed.  What
+costs memory is keeping suspended prefixes alive in the serving pool;
+SpecGen's insight is that the validation/profiling pool has spare memory
+that can hold them.  This module implements exactly that accounting:
+
+  * ``local``  tier = serving-pool memory (budgeted),
+  * ``remote`` tier = spare validation/profiling-pool memory (budgeted),
+  * on local pressure, entries MIGRATE local->remote (device-to-device
+    RDMA in the paper via Mooncake; here ``device_get``/``device_put``
+    between the serving device and the pool store),
+  * a fork that finds its prefix (either tier) restores the cached state
+    instead of recomputing prefill — the hit/miss/recompute counters are
+    what benchmarks/table5 and §8.5 measure.
+
+For recurrent architectures (SSD / RG-LRU) the "KV cache" is the fixed
+size recurrence state; entries then snapshot (state, boundary) pairs —
+same interface, coarser sharing granularity (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+from typing import Any, Dict, Iterable, Optional, Tuple
+
+import numpy as np
+import jax
+
+
+def prefix_key(tokens: Iterable[int]) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.asarray(list(tokens), np.int32).tobytes())
+    return h.hexdigest()
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree.leaves(tree))
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    key: str
+    length: int                 # tokens represented by this prefix
+    nbytes: int
+    tier: str                   # "local" | "remote"
+    payload: Any                # cache pytree (device) or host copy
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits_local: int = 0
+    hits_remote: int = 0
+    misses: int = 0
+    tokens_reused: int = 0
+    tokens_recomputed: int = 0
+    migrations: int = 0
+    restores: int = 0
+    bytes_migrated: int = 0
+    evictions_local: int = 0
+    evictions_remote: int = 0
+
+    @property
+    def hits(self) -> int:
+        return self.hits_local + self.hits_remote
+
+
+class PrefixCacheStore:
+    """Two-tier LRU prefix store with migrate-on-pressure semantics."""
+
+    def __init__(self, local_budget_bytes: int,
+                 remote_budget_bytes: int = 0,
+                 migrate_on_pressure: bool = True):
+        self.local_budget = local_budget_bytes
+        self.remote_budget = remote_budget_bytes
+        self.migrate_on_pressure = migrate_on_pressure
+        self._local: "OrderedDict[str, CacheEntry]" = OrderedDict()
+        self._remote: "OrderedDict[str, CacheEntry]" = OrderedDict()
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------ internals
+    def _tier_bytes(self, tier: "OrderedDict[str, CacheEntry]") -> int:
+        return sum(e.nbytes for e in tier.values())
+
+    @property
+    def local_bytes(self) -> int:
+        return self._tier_bytes(self._local)
+
+    @property
+    def remote_bytes(self) -> int:
+        return self._tier_bytes(self._remote)
+
+    def _to_remote(self, entry: CacheEntry) -> None:
+        """Migrate: move payload out of serving memory into the pool store
+        (host/device_get stands in for Mooncake RDMA on this container)."""
+        entry.payload = jax.tree.map(
+            lambda l: np.asarray(jax.device_get(l)), entry.payload)
+        entry.tier = "remote"
+        self._remote[entry.key] = entry
+        self._remote.move_to_end(entry.key)
+        self.stats.migrations += 1
+        self.stats.bytes_migrated += entry.nbytes
+
+    def _restore_payload(self, entry: CacheEntry):
+        if entry.tier == "remote":
+            self.stats.restores += 1
+            self.stats.bytes_migrated += entry.nbytes
+            return jax.tree.map(jax.device_put, entry.payload)
+        return entry.payload
+
+    def _evict_until(self, tier: "OrderedDict[str, CacheEntry]",
+                     budget: int, migrating: bool) -> None:
+        while self._tier_bytes(tier) > budget and tier:
+            key, entry = tier.popitem(last=False)       # LRU
+            if migrating and self.migrate_on_pressure and \
+                    self.remote_budget > 0 and \
+                    entry.nbytes + self.remote_bytes <= self.remote_budget:
+                self._to_remote(entry)
+            elif migrating:
+                self.stats.evictions_local += 1
+            else:
+                self.stats.evictions_remote += 1
+
+    # ----------------------------------------------------------------- API
+    def put(self, tokens, payload, *, length: Optional[int] = None) -> str:
+        key = prefix_key(tokens)
+        nbytes = tree_bytes(payload)
+        entry = CacheEntry(key=key, length=length or len(list(tokens)),
+                           nbytes=nbytes, tier="local", payload=payload)
+        self._local[key] = entry
+        self._local.move_to_end(key)
+        self._evict_until(self._local, self.local_budget, migrating=True)
+        return key
+
+    def get(self, tokens) -> Tuple[Optional[Any], int]:
+        """Return (payload-on-device | None, cached_length)."""
+        key = prefix_key(tokens)
+        if key in self._local:
+            e = self._local[key]
+            self._local.move_to_end(key)
+            self.stats.hits_local += 1
+            self.stats.tokens_reused += e.length
+            return e.payload, e.length
+        if key in self._remote:
+            e = self._remote.pop(key)
+            payload = self._restore_payload(e)
+            e.payload, e.tier = payload, "local"
+            self._local[key] = e
+            self._evict_until(self._local, self.local_budget, migrating=True)
+            self.stats.hits_remote += 1
+            self.stats.tokens_reused += e.length
+            return payload, e.length
+        self.stats.misses += 1
+        return None, 0
+
+    def note_recompute(self, tokens_recomputed: int) -> None:
+        self.stats.tokens_recomputed += tokens_recomputed
+
+    def suspend(self, tokens) -> bool:
+        """Explicitly migrate a prefix to the remote tier (paper: local
+        serving memory approaching capacity)."""
+        key = prefix_key(tokens)
+        e = self._local.pop(key, None)
+        if e is None:
+            return False
+        if self.remote_budget > 0 and \
+                e.nbytes + self.remote_bytes <= self.remote_budget:
+            self._to_remote(e)
+            self._evict_until(self._remote, self.remote_budget,
+                              migrating=False)
+            return True
+        self.stats.evictions_local += 1
+        return False
+
+    def __contains__(self, tokens) -> bool:
+        key = prefix_key(tokens)
+        return key in self._local or key in self._remote
+
+    def __len__(self) -> int:
+        return len(self._local) + len(self._remote)

@@ -1,0 +1,20 @@
+"""Token sampling (numpy-side: logits are tiny vs the model step)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sample_token(logits: np.ndarray, temperature: float, *,
+                 top_k: int = 0, seed: int = 0) -> int:
+    logits = np.asarray(logits, np.float64)
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    logits = logits / max(temperature, 1e-6)
+    if top_k:
+        kth = np.partition(logits, -top_k)[-top_k]
+        logits = np.where(logits < kth, -np.inf, logits)
+    logits -= logits.max()
+    p = np.exp(logits)
+    p /= p.sum()
+    rs = np.random.RandomState(seed % (2 ** 31 - 1))
+    return int(rs.choice(len(p), p=p))

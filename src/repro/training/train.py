@@ -1,0 +1,117 @@
+"""Train step: loss + grad (+accumulation) + AdamW, mesh-aware.
+
+``make_train_step`` returns a jittable function with explicit
+in/out_shardings when a mesh is supplied — the same function the
+multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import schema, transformer as T
+from repro.models.config import ModelConfig
+from repro.models.layers import Runtime
+from repro.distributed.sharding import (
+    NO_SHARD, ShardCtx, TRAIN_RULES, param_shardings)
+from repro.training.optimizer import (
+    OptimizerConfig, adamw_update, init_opt_state)
+
+
+def make_shard_ctx(mesh, rules=None) -> ShardCtx:
+    return ShardCtx(mesh=mesh, rules=dict(TRAIN_RULES, **(rules or {})))
+
+
+def train_step(cfg: ModelConfig, ocfg: OptimizerConfig, runtime: Runtime,
+               shard: ShardCtx, state: Dict[str, Any],
+               batch: Dict[str, jnp.ndarray], microbatches: int = 1):
+    """One optimizer step over a (possibly micro-batched) global batch."""
+    params = state["params"]
+
+    def loss_fn(p, b):
+        return T.lm_loss(cfg, p, b, runtime=runtime, shard=shard)
+
+    if microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+    else:
+        B = batch["labels"].shape[0]
+        assert B % microbatches == 0
+        mb = B // microbatches
+        def slice_mb(b, i):
+            return jax.tree.map(lambda x: x[i * mb:(i + 1) * mb], b)
+        acc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        loss = 0.0
+        metrics = None
+        for i in range(microbatches):   # unrolled: overlappable by XLA
+            (li, mi), gi = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, slice_mb(batch, i))
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                               acc, gi)
+            loss = loss + li / microbatches
+            metrics = mi if metrics is None else jax.tree.map(
+                lambda a, b2: a + b2, metrics, mi)
+        grads = jax.tree.map(lambda a: a / microbatches, acc)
+        metrics = jax.tree.map(lambda x: x / microbatches, metrics)
+
+    new_params, new_opt, opt_metrics = adamw_update(
+        ocfg, params, grads, state["opt"])
+    new_state = {"params": new_params, "opt": new_opt}
+    metrics = dict(metrics or {}, loss=loss, **opt_metrics)
+    return new_state, metrics
+
+
+def state_shardings(cfg: ModelConfig, shard: ShardCtx):
+    """NamedSharding tree for {params, opt} matching the logical axes."""
+    axes = schema.logical_axes(cfg)
+    shapes = schema.abstract_params(cfg)
+    p_sh = param_shardings(shard, axes, shapes)
+    return {
+        "params": p_sh,
+        "opt": {"m": p_sh, "v": p_sh,
+                "step": shard.named(()) if shard.mesh else None},
+    }
+
+
+def batch_shardings(shard: ShardCtx, batch_tree):
+    def spec_for(path_leaf):
+        nd = len(path_leaf.shape)
+        return shard.named(("act_batch",) + (None,) * (nd - 1))
+    return jax.tree.map(spec_for, batch_tree)
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimizerConfig,
+                    runtime: Runtime, mesh=None, microbatches: int = 1,
+                    rules=None, donate: bool = True):
+    shard = make_shard_ctx(mesh, rules) if mesh is not None else NO_SHARD
+    fn = functools.partial(train_step, cfg, ocfg, runtime, shard,
+                           microbatches=microbatches)
+    if mesh is None:
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+    st_sh = state_shardings(cfg, shard)
+    return jax.jit(
+        fn,
+        in_shardings=(st_sh, None),
+        out_shardings=(st_sh, None),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+def init_state(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    params = schema.init_params(cfg, rng)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def abstract_state(cfg: ModelConfig) -> Dict[str, Any]:
+    params = schema.abstract_params(cfg)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "params": params,
+        "opt": {"m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }

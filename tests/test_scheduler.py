@@ -1,0 +1,152 @@
+"""ElasticScheduler invariants (paper Algorithm 2) — unit + property."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clock import EventLoop
+from repro.core.scheduler import ElasticScheduler, SchedulerConfig
+from repro.core.types import Request, KernelCandidate
+
+
+def mk(loop=None, n=4, mode="elastic", **kw):
+    loop = loop or EventLoop()
+    return loop, ElasticScheduler(loop, SchedulerConfig(
+        num_devices=n, mode=mode, **kw))
+
+
+def req(kind, dur, done=None, owner=""):
+    return Request(kind=kind, duration=dur,
+                   candidate=KernelCandidate(task_id="T1", config={}),
+                   on_complete=done, owner=owner)
+
+
+# ------------------------------------------------- allocation formula
+@settings(max_examples=60, deadline=None)
+@given(g=st.integers(2, 64), lv=st.integers(0, 100), lp=st.integers(0, 100))
+def test_allocation_formula_bounds(g, lv, lp):
+    """G_prof = min(G-1, max(1, ceil(G*Lp/(Lv+Lp)))); both pools >= 1."""
+    loop, s = mk(n=g)
+    s.L_val, s.L_prof = lv, lp
+    n_val, n_prof = s.allocate()
+    assert n_val + n_prof == g
+    assert n_val >= 1 and n_prof >= 1
+    if lv + lp == 0:
+        assert abs(n_val - n_prof) <= 1
+    else:
+        import math
+        expect_p = min(g - 1, max(1, math.ceil(g * lp / (lv + lp))))
+        assert n_prof == expect_p
+
+
+def test_reallocation_follows_queue_pressure():
+    loop, s = mk(n=10)
+    s.L_val, s.L_prof = 90, 10
+    nv, np_ = s.allocate()
+    assert nv > np_
+    s.L_val, s.L_prof = 5, 95
+    nv, np_ = s.allocate()
+    assert np_ > nv
+
+
+# ------------------------------------------------------- exclusivity
+def test_device_exclusivity_and_completion():
+    loop, s = mk(n=2)
+    done = []
+    for i in range(6):
+        s.submit(req("validation", 10.0, done=lambda r: done.append(r)))
+    # only 1 validation device in the (1,1) split -> serialized
+    loop.run()
+    assert len(done) == 6
+    busy = max(v for _, v, _, rv, _ in
+               [(t, iv, ip, rv, rp) for t, iv, ip, rv, rp in s.timeline])
+    assert loop.now == pytest.approx(60.0)   # serialized on one device
+
+
+def test_laf_validation_order():
+    loop, s = mk(n=2, validation_policy="laf")
+    order = []
+    # saturate the validation device, then queue three more
+    s.submit(req("validation", 5.0))
+    for name in "abc":
+        r = req("validation", 1.0,
+                done=lambda rr, n=name: order.append(n))
+        s.submit(r)
+    loop.run()
+    assert order == ["c", "b", "a"]          # last-arrival-first
+
+
+def test_fifo_profiling_order():
+    loop, s = mk(n=2, profiling_policy="fifo")
+    order = []
+    s.submit(req("profiling", 5.0))
+    for name in "abc":
+        s.submit(req("profiling", 1.0,
+                     done=lambda rr, n=name: order.append(n)))
+    loop.run()
+    assert order == ["a", "b", "c"]
+
+
+# -------------------------------------------------- iteration boundary
+def test_end_iteration_aborts_and_clears():
+    loop, s = mk(n=2)
+    done = []
+    for i in range(5):
+        s.submit(req("validation", 100.0,
+                     done=lambda r: done.append(r)))
+    loop.run(until=50.0)
+    s.end_iteration()
+    assert len(s.q_val) == 0 and len(s.q_prof) == 0
+    assert all(not d.busy for d in s.devices)
+    loop.run()
+    assert done == []                        # nothing completed post-abort
+    assert len(s.aborted) == 5
+
+
+def test_owner_scoped_abort():
+    loop, s = mk(n=2)
+    done = []
+    s.submit(req("validation", 100.0, owner="w0",
+                 done=lambda r: done.append("w0")))
+    s.submit(req("validation", 100.0, owner="w1",
+                 done=lambda r: done.append("w1")))
+    s.end_iteration(owner="w0")
+    loop.run()
+    assert done == ["w1"]
+
+
+# ------------------------------------------------------- utilization
+def test_utilization_metrics():
+    loop, s = mk(n=2)
+    s.submit(req("validation", 10.0))
+    loop.run()
+    loop.schedule(10.0, lambda: None)
+    loop.run()                               # 10s busy of 20s elapsed
+    assert s.utilization() == pytest.approx(0.25, abs=0.02)   # 1 of 2 devs
+    assert s.utilization_any() == pytest.approx(0.5, abs=0.02)
+
+
+def test_static_one_gpu_per_kernel_serves_both():
+    loop, s = mk(n=1, mode="static", static_split=(1, 0),
+                 work_stealing=True)
+    done = []
+    s.submit(req("validation", 5.0, done=lambda r: done.append("v")))
+    s.submit(req("profiling", 5.0, done=lambda r: done.append("p")))
+    loop.run()
+    assert done == ["v", "p"]
+    assert loop.now == pytest.approx(10.0)   # sequential on one device
+
+
+# --------------------------------------------------------- property
+@settings(max_examples=20, deadline=None)
+@given(durs=st.lists(st.floats(0.5, 30.0), min_size=1, max_size=20),
+       n=st.integers(1, 8))
+def test_all_requests_complete_or_abort(durs, n):
+    loop, s = mk(n=max(n, 2))
+    completed = []
+    for d in durs:
+        kind = "validation" if d < 15 else "profiling"
+        s.submit(req(kind, d, done=lambda r: completed.append(r)))
+    loop.run()
+    assert len(completed) == len(durs)
+    # conservation: every request completed exactly once
+    assert len(set(id(r) for r in completed)) == len(durs)

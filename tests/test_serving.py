@@ -1,0 +1,126 @@
+"""Serving engine + two-tier prefix cache (paper §6.2.3 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import schema
+from repro.models.layers import Runtime
+from repro.models.registry import get_smoke
+from repro.serving.engine import Engine
+from repro.serving.kvcache import PrefixCacheStore, prefix_key, tree_bytes
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke("qwen2-1.5b")
+    params = schema.init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params, Runtime(), max_len=96)
+
+
+def test_fork_equals_fresh_generation(engine):
+    prompt = list(np.random.RandomState(0).randint(
+        0, engine.cfg.vocab_size, 16))
+    g1 = engine.submit(prompt, max_new_tokens=8, temperature=0.0)
+    engine.step(g1)
+    engine.step(g1)
+    f1 = engine.fork(g1, max_new_tokens=4, temperature=0.0)
+    out_fork = engine.run(f1)
+    ctx = engine.generation(g1).tokens[:18]
+    g2 = engine.submit(ctx, max_new_tokens=4, temperature=0.0)
+    assert out_fork == engine.run(g2)
+
+
+def test_parent_survives_fork_cow(engine):
+    prompt = list(np.random.RandomState(1).randint(
+        0, engine.cfg.vocab_size, 12))
+    g = engine.submit(prompt, max_new_tokens=6, temperature=0.0)
+    engine.step(g)
+    f = engine.fork(g, max_new_tokens=3, temperature=0.9, seed=42)
+    engine.run(f)                      # child mutates its cache copy
+    out_parent = engine.run(g)         # parent must be unaffected
+    g2 = engine.submit(prompt, max_new_tokens=6, temperature=0.0)
+    out_fresh = engine.run(g2)
+    assert out_parent == out_fresh
+
+
+def test_cancel(engine):
+    prompt = list(np.random.RandomState(2).randint(
+        0, engine.cfg.vocab_size, 8))
+    g = engine.submit(prompt, max_new_tokens=8)
+    engine.step(g)
+    engine.cancel(g)
+    assert engine.generation(g).status == "cancelled"
+    assert engine.step(g) is None
+
+
+# ------------------------------------------------------- prefix store
+def _payload(n_bytes):
+    return {"k": jnp.zeros((n_bytes // 4,), jnp.float32)}
+
+
+def test_store_hit_miss_and_bytes():
+    st = PrefixCacheStore(local_budget_bytes=10_000,
+                          remote_budget_bytes=10_000)
+    toks = [1, 2, 3]
+    assert st.get(toks) == (None, 0)
+    assert st.stats.misses == 1
+    st.put(toks, _payload(4000), length=3)
+    got, ln = st.get(toks)
+    assert ln == 3 and got is not None
+    assert st.stats.hits_local == 1
+    assert tree_bytes(_payload(4000)) == 4000
+
+
+def test_migration_on_local_pressure():
+    st = PrefixCacheStore(local_budget_bytes=8_000,
+                          remote_budget_bytes=100_000)
+    st.put([1], _payload(4000), length=1)
+    st.put([2], _payload(4000), length=1)
+    st.put([3], _payload(4000), length=1)   # evicts LRU [1] -> remote
+    assert st.stats.migrations >= 1
+    assert st.local_bytes <= 8_000
+    got, ln = st.get([1])                   # restore from remote tier
+    assert got is not None
+    assert st.stats.hits_remote == 1
+    assert st.stats.restores == 1
+    assert st.stats.bytes_migrated >= 8000  # out + back
+
+
+def test_eviction_without_remote():
+    st = PrefixCacheStore(local_budget_bytes=8_000, remote_budget_bytes=0)
+    st.put([1], _payload(4000), length=1)
+    st.put([2], _payload(4000), length=1)
+    st.put([3], _payload(4000), length=1)
+    assert st.stats.evictions_local >= 1
+    got, _ = st.get([1])
+    assert got is None                      # discarded, not migrated
+
+
+def test_explicit_suspend():
+    st = PrefixCacheStore(local_budget_bytes=100_000,
+                          remote_budget_bytes=100_000)
+    st.put([5, 6], _payload(4000), length=2)
+    assert st.suspend([5, 6]) is True
+    assert st.local_bytes == 0 and st.remote_bytes == 4000
+    got, ln = st.get([5, 6])
+    assert got is not None and ln == 2
+
+
+def test_prefix_key_stability():
+    assert prefix_key([1, 2, 3]) == prefix_key((1, 2, 3))
+    assert prefix_key([1, 2, 3]) != prefix_key([1, 2, 4])
+
+
+def test_engine_prefill_reuse_counts(engine):
+    st = engine.store.stats
+    before = st.tokens_recomputed
+    prompt = list(np.random.RandomState(3).randint(
+        0, engine.cfg.vocab_size, 20))
+    g1 = engine.submit(prompt, max_new_tokens=2, temperature=0.0)
+    engine.run(g1)
+    mid = st.tokens_recomputed
+    assert mid > before                     # first prefill recomputes
+    g2 = engine.submit(prompt, max_new_tokens=2, temperature=0.0)
+    engine.run(g2)
+    assert st.tokens_recomputed == mid      # second hits the store

@@ -1,0 +1,59 @@
+"""ShardCtx rule resolution: dedup, divisibility, missing axes."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ShardCtx, TRAIN_RULES, SERVE_RULES
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_spec_basic(mesh):
+    ctx = ShardCtx(mesh=mesh, rules=TRAIN_RULES)
+    assert ctx.spec(("act_batch", "act_seq", None)) == P("data", "model",
+                                                         None)
+
+
+def test_spec_dedup_axis_used_once(mesh):
+    ctx = ShardCtx(mesh=mesh, rules=dict(TRAIN_RULES, act_mlp="model"))
+    # act_seq takes 'model'; act_mlp must be dropped (axis already used)
+    assert ctx.spec(("act_batch", "act_seq", "act_mlp")) == \
+        P("data", "model", None)
+
+
+def test_spec_drops_missing_mesh_axes(mesh):
+    ctx = ShardCtx(mesh=mesh, rules=TRAIN_RULES)
+    # 'pod' is not in this mesh: ('pod','data') -> 'data'
+    assert ctx.spec(("act_batch",)) == P("data")
+
+
+def test_sized_spec_divisibility(mesh):
+    # AbstractMesh carries shape without needing 8 real devices
+    big = jax.sharding.AbstractMesh(
+        (2, 4), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    ctx = ShardCtx(mesh=big, rules=TRAIN_RULES)
+    # heads=6 over model=4: not divisible -> replicated
+    spec = ctx._sized_spec(("heads", "head_dim"), (6, 64))
+    assert spec == P(None, None)
+    spec = ctx._sized_spec(("heads", "head_dim"), (8, 64))
+    assert spec == P("model", None)
+
+
+def test_serve_rules_keep_weights(mesh):
+    ctx = ShardCtx(mesh=mesh, rules=SERVE_RULES)
+    import jax.numpy as jnp
+    w = jnp.ones((4, 4))
+    assert ctx.use(w) is w          # 'keep' -> no constraint op
+
+
+def test_no_shard_passthrough():
+    from repro.distributed.sharding import NO_SHARD
+    import jax.numpy as jnp
+    x = jnp.ones((2, 2))
+    assert NO_SHARD(x, "act_batch", None) is x
+    assert NO_SHARD.use(x) is x
