@@ -1,0 +1,23 @@
+# Tier-1 contract (ROADMAP.md) as one command.
+#
+#   make tier1   - full offline test suite; any collection error or
+#                  test failure fails the target (pytest exits nonzero
+#                  on collection errors; -x stops at the first failure)
+#   make smoke   - end-to-end quickstart: SpecGen vs baseline on one
+#                  kernel-optimization task
+#   make serve   - continuous-batched real-model serving demo with
+#                  speculative forks + two-tier prefix cache
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: tier1 smoke serve
+
+tier1:
+	$(PY) -m pytest -x -q
+
+smoke:
+	$(PY) examples/quickstart.py
+
+serve:
+	$(PY) examples/serve_spec.py

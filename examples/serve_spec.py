@@ -1,10 +1,12 @@
 """Speculative forking on the REAL serving engine (reduced model).
 
-A 'reasoning' generation streams on the tiny qwen2 config; mid-stream
-we fork non-reasoning children that share its prefix KV cache with
-zero recompute (immutable arrays = structural sharing + copy-on-write),
-then park the prefix in the two-tier store and watch a later fork
-restore it instead of re-prefilling — the paper's §6.2.3 mechanism.
+Ten concurrent 'reasoning' workflows stream on the tiny qwen2 config,
+sharing ONE continuous-batched engine: every decode step is a single
+jitted dispatch over all live rows.  Mid-stream each workflow forks a
+non-reasoning child that copy-on-writes its parent's cache row — zero
+prefill recompute — then a prefix is parked in the two-tier store and
+a later submission restores it instead of re-prefilling (the paper's
+§6.2.3 mechanism).
 
     PYTHONPATH=src python examples/serve_spec.py
 """
@@ -23,29 +25,50 @@ cfg = get_smoke("qwen2-1.5b")
 params = schema.init_params(cfg, jax.random.PRNGKey(0))
 store = PrefixCacheStore(local_budget_bytes=64 << 20,
                          remote_budget_bytes=256 << 20)
-eng = Engine(cfg, params, Runtime(), max_len=160, cache_store=store)
+eng = Engine(cfg, params, Runtime(), max_len=160, cache_store=store,
+             max_batch=20)
 
-prompt = list(np.random.RandomState(0).randint(0, cfg.vocab_size, 24))
-main = eng.submit(prompt, max_new_tokens=48, temperature=0.7,
-                  reasoning=True)
+N = 10
+rs = np.random.RandomState(0)
+roots = [eng.submit(list(rs.randint(0, cfg.vocab_size, 24)),
+                    max_new_tokens=48, temperature=0.7, reasoning=True,
+                    seed=i) for i in range(N)]
 
 t0 = time.time()
-forks = []
 for step in range(48):
-    eng.step(main)
-    if step in (12, 24, 36):               # trigger points
-        f = eng.fork(main, max_new_tokens=8, temperature=0.9,
-                     seed=step)
-        forks.append((step, f))
-        print(f"[fork @ reasoning token {step}] child shares "
-              f"{eng.generation(f).pos} prefix tokens (0 recomputed)")
-for step, f in forks:
-    out = eng.run(f)
-    print(f"[fork @ {step}] emitted {len(out)} tokens: {out[:6]}...")
-eng.suspend_to_store(main)
+    eng.step_all()                          # ONE dispatch for all rows
+    if step in (12, 24):                    # trigger points: speculate
+        forked = [eng.fork(r, max_new_tokens=8, temperature=0.9,
+                           seed=1000 + step + i)
+                  for i, r in enumerate(roots)
+                  if eng.generation(r).status == "running"]
+        if forked:
+            print(f"[step {step}] forked {len(forked)} children, each "
+                  f"sharing {eng.generation(forked[0]).pos} prefix "
+                  f"tokens (0 recomputed); {eng.live} rows live")
+out = eng.run_all()
 
-print(f"\ndecoded {eng.tokens_decoded} tokens in {time.time()-t0:.1f}s")
+dt = time.time() - t0
+done = sum(eng.generation(g).status == "done" for g in out)
+print(f"\n{done} generations done; decoded {eng.tokens_decoded} tokens "
+      f"in {dt:.1f}s via {eng.decode_dispatches} batched dispatches "
+      f"({eng.tokens_decoded / max(eng.decode_dispatches, 1):.1f} "
+      f"tokens/dispatch)")
+
+# park a finished prefix remotely, then restore it on resubmission
+g0 = roots[0]
+ctx = eng.generation(g0).tokens
+store.flush_to_remote()                     # simulate memory pressure
+recomputed_before = store.stats.tokens_recomputed
+parked = eng.generation(g0).pos             # tokens actually parked
+resumed = eng.submit(ctx + [1], max_new_tokens=4, temperature=0.0)
+eng.run(resumed)
+print(f"resumed from remote tier: "
+      f"{store.stats.tokens_recomputed - recomputed_before} tokens "
+      f"recomputed (prefix {parked} restored)")
+
 s = store.stats
 print(f"prefix cache: reused={s.tokens_reused} tokens, "
       f"recomputed={s.tokens_recomputed}, migrations={s.migrations}, "
+      f"restores={s.restores}, "
       f"local={store.local_bytes>>20} MiB / remote={store.remote_bytes>>20} MiB")

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def _quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
@@ -63,10 +65,9 @@ def compressed_psum_pod(grads, mesh, *, axis: str = "pod",
                 jax.tree.unflatten(td, [o[1] for o in out]))
 
     specs = jax.tree.map(lambda _: P(), grads)
-    fn = jax.shard_map(synced, mesh=mesh,
-                       in_specs=(specs, specs),
-                       out_specs=(specs, specs),
-                       check_vma=False)
+    fn = shard_map(synced, mesh=mesh,
+                   in_specs=(specs, specs),
+                   out_specs=(specs, specs))
     return fn(grads, error)
 
 

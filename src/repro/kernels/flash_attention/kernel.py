@@ -32,10 +32,11 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bkv: int, seq: int,
 
     def body(ci, carry):
         acc, m_i, l_i = carry
-        k = pl.load(k_ref, (0, pl.ds(ci * bkv, bkv), slice(None))
-                    ).astype(jnp.float32)               # (bkv, Dh)
-        v = pl.load(v_ref, (0, pl.ds(ci * bkv, bkv), slice(None))
-                    ).astype(jnp.float32)
+        # bare-int indices break pl.load on jax 0.4.x: use ds(0, 1)
+        k = pl.load(k_ref, (pl.ds(0, 1), pl.ds(ci * bkv, bkv),
+                            slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(0, 1), pl.ds(ci * bkv, bkv),
+                            slice(None)))[0].astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((2,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)          # (G, bq, bkv)

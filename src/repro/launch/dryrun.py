@@ -233,20 +233,25 @@ def build_cell(arch: str, shape: str, mesh, *, scan: bool = False,
          for k, ax in layer.items()}
         for layer, layer_sds in zip(T.cache_logical_axes(cfg), acache)]
     tok_sh = shard.named(("act_batch", None), specs["tokens"].shape)
-    pos_sh = shard.named(())
+    pos_sh = shard.named(("act_batch",), specs["pos"].shape)
+    act_sh = shard.named(("act_batch",), specs["active"].shape)
 
-    def decode_fn(p, tokens, cache, pos):
-        return T.decode_step(cfg, p, tokens, cache, pos, rt, shard)
+    def decode_fn(p, tokens, cache, pos, active):
+        return T.decode_step(cfg, p, tokens, cache, pos, rt, shard,
+                             active=active)
     fn = jax.jit(decode_fn,
-                 in_shardings=(p_sh, tok_sh, cache_sh, pos_sh),
+                 in_shardings=(p_sh, tok_sh, cache_sh, pos_sh, act_sh),
                  out_shardings=(None, cache_sh),
                  donate_argnums=(2,))
-    return fn, (params, specs["tokens"], specs["cache"], specs["pos"])
+    return fn, (params, specs["tokens"], specs["cache"], specs["pos"],
+                specs["active"])
 
 
 # --------------------------------------------------------------- run cell
 def _analyze(compiled, hlo: str, n_dev: int):
     ca = compiled.cost_analysis()
+    if isinstance(ca, list):        # jax 0.4.x: one dict per device set
+        ca = ca[0] if ca else {}
     coll = parse_collectives(hlo, n_dev)
     return {
         "flops_per_device": float(ca.get("flops", 0.0)),

@@ -24,20 +24,26 @@ def serve_batch(arch: str = "qwen2-1.5b", *, num_requests: int = 8,
     store = PrefixCacheStore(local_budget_bytes=1 << 28,
                              remote_budget_bytes=1 << 28)
     eng = Engine(cfg, params, Runtime(), max_len=prompt_len + max_new + 8,
-                 cache_store=store)
+                 cache_store=store, max_batch=num_requests)
     rs = np.random.RandomState(seed)
     prefix = list(rs.randint(0, cfg.vocab_size, shared_prefix))
+    # seed the store with the shared prefix so every request's
+    # admission is a partial hit that suffix-prefills only its tail
+    warm = eng.submit(prefix + [0], max_new_tokens=1, temperature=0.0)
+    eng.run(warm)
     t0 = time.time()
-    outs = []
+    gids = []
     for i in range(num_requests):
         tail = list(rs.randint(0, cfg.vocab_size, prompt_len - shared_prefix))
-        gid = eng.submit(prefix + tail, max_new_tokens=max_new,
-                         temperature=0.8, seed=seed + i)
-        outs.append(eng.run(gid))
+        gids.append(eng.submit(prefix + tail, max_new_tokens=max_new,
+                               temperature=0.8, seed=seed + i))
+    outs_by_gid = eng.run_all()             # continuous-batched decode
+    outs = [outs_by_gid[g] for g in gids]
     dt = time.time() - t0
     if verbose:
         print(f"[serve] {num_requests} requests x {max_new} tokens "
-              f"in {dt:.2f}s ({num_requests*max_new/dt:.1f} tok/s)")
+              f"in {dt:.2f}s ({num_requests*max_new/dt:.1f} tok/s, "
+              f"{eng.decode_dispatches} batched dispatches)")
         print(f"[serve] prefix cache: hits={store.stats.hits} "
               f"misses={store.stats.misses} "
               f"tokens_reused={store.stats.tokens_reused} "

@@ -90,9 +90,13 @@ def input_specs(arch: str, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
             }
         return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
 
-    # decode: one new token against a cache of seq_len
+    # decode: one new token per row against a cache of seq_len.  The
+    # serving engine runs continuous batching, so the planned shape
+    # carries PER-ROW positions (each generation at its own depth) and
+    # a liveness mask — one fixed-shape dispatch per step.
     return {
         "tokens": jax.ShapeDtypeStruct((B, 1), i32),
         "cache": T.abstract_cache(cfg, B, S),
-        "pos": jax.ShapeDtypeStruct((), i32),
+        "pos": jax.ShapeDtypeStruct((B,), i32),
+        "active": jax.ShapeDtypeStruct((B,), jnp.bool_),
     }

@@ -5,14 +5,19 @@ Design notes
 * Sharding is injected via a ``shard(x, *logical_axes)`` callable
   (see ``repro.distributed.sharding.ShardCtx``) so the same code runs
   unsharded on CPU tests and fully sharded on the production mesh.
-* Attention supports three execution paths:
-    - ``full``     : one einsum pair, causal/banded mask (short seqs),
+* Attention is ONE code path (``attend``) for training forward, prefill
+  and decode: key slots carry explicit absolute positions (``kv_pos``),
+  scores and the value sum accumulate in f32, and full-sequence forward
+  is just prefill with position 0 — so a decode step reproduces the
+  forward bitwise (bf16) instead of drifting apart (the consistency
+  SpecGen's speculative forks rest on).  Two lowering strategies only:
+    - ``full``     : one einsum pair over the whole (possibly cached)
+                     key range (short seqs / decode),
     - ``chunked``  : python-unrolled Q-chunks with per-chunk KV slices
                      (bounds VMEM/HBM temp for 32k prefill AND keeps the
-                     dry-run cost analysis exact — no scan bodies),
-    - ``decode``   : single-token step against a KV cache whose sequence
-                     axis is sharded over the 'model' mesh axis
-                     (flash-decoding-style split, LSE-combined by GSPMD).
+                     dry-run cost analysis exact — no scan bodies).
+  The decode cache's sequence axis stays sharded over the 'model' mesh
+  axis (flash-decoding-style split, LSE-combined by GSPMD).
 * MoE uses group-local dispatch: tokens stay sharded over the data axis
   (groups), experts over the model axis; dispatch/combine are per-group
   gathers/scatters which partition cleanly without all-gathering tokens.
@@ -163,134 +168,155 @@ def _seq_gather(shard):
     return g
 
 
-def _sdpa(cfg: ModelConfig, q, k, v, mask, shard,
-          score_dtype=jnp.float32):
-    """Grouped-query attention core.  q (B,Sq,H,Dh), k/v (B,Sk,KV,Dh)."""
+# The one attention core.  Every execution mode — training forward,
+# prefill, single- and multi-row decode — lowers to `attend` below, so
+# there is no per-mode math to drift apart (the seed's decode path
+# accumulated in bf16 while train/prefill rounded differently; see
+# test_prefill_decode_matches_forward).  Key slots carry their absolute
+# position explicitly (`kv_pos`, EMPTY_SLOT = unwritten), which makes
+# full attention, ring-buffered local attention, and partially-filled
+# decode caches one masking rule instead of three.
+EMPTY_SLOT = 2 ** 30                           # "no token in this slot"
+
+
+def attend(q, k, v, q_positions, kv_positions, window, shard,
+           score_dtype=jnp.float32):
+    """Length-agnostic grouped-query attention.
+
+    q (B,Sq,H,Dh) at absolute positions ``q_positions`` (B,Sq) against
+    keys/values (B,Sk,KV,Dh) whose slot j holds absolute position
+    ``kv_positions[b, j]`` (EMPTY_SLOT if unwritten).  Scores AND the
+    value-weighted sum accumulate in ``score_dtype`` (f32 by default)
+    with a single rounding to q.dtype at the end, so a (B,1) decode
+    step reproduces the corresponding row of a (B,S) forward to within
+    one final-rounding ulp — exactly, in f32.
+    """
     B, Sq, H, Dh = q.shape
     KV = k.shape[2]
     G = H // KV
-    scale = 1.0 / math.sqrt(Dh)
+    scale = jnp.asarray(1.0 / math.sqrt(Dh), score_dtype)
     qg = q.reshape(B, Sq, KV, G, Dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=score_dtype) * scale
+    qpos = q_positions[:, :, None]                      # (B,Sq,1)
+    kpos = kv_positions[:, None, :]                     # (B,1,Sk)
+    mask = kpos <= qpos                                 # EMPTY_SLOT fails
+    if window:
+        mask = mask & (kpos > qpos - window)
     neg = jnp.finfo(score_dtype).min / 2
-    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
-                        k).astype(score_dtype) * scale
-    scores = jnp.where(mask[None, None, None, :, :], scores, neg)
-    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(B, Sq, H, Dh)
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    w = jax.nn.softmax(scores, axis=-1)                 # score_dtype
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v,
+                     preferred_element_type=score_dtype)
+    out = out.reshape(B, Sq, H, Dh).astype(q.dtype)
     return shard(out, "act_batch", "act_seq", "act_heads", None)
 
 
-def _causal_mask(sq: int, sk: int, q_offset: int, window: int):
-    """mask[i, j] = may q-position (q_offset+i) attend to k-position j."""
-    qpos = q_offset + jnp.arange(sq)[:, None]
-    kpos = jnp.arange(sk)[None, :]
-    m = kpos <= qpos
+def _cache_write(cache, k, v, positions, window):
+    """Scatter freshly projected K/V into the cache at per-row slots.
+
+    positions (B,S) absolute; window>0 uses a ring buffer of ``window``
+    slots (slot = pos % window), else slot = pos.  Rows may sit at
+    different positions (continuous batching) — the scatter is fully
+    batched.  Returns the updated cache dict.
+    """
+    B, S = positions.shape
     if window:
-        m = m & (kpos > qpos - window)
-    return m
+        w = cache["k"].shape[1]                 # min(window, max_len)
+        if S > w:                               # only the last w survive
+            k, v, positions = k[:, -w:], v[:, -w:], positions[:, -w:]
+        slots = positions % window
+    else:
+        slots = positions
+    b = jnp.arange(B)[:, None]
+    new = dict(cache)
+    new["k"] = cache["k"].at[b, slots].set(k.astype(cache["k"].dtype))
+    new["v"] = cache["v"].at[b, slots].set(v.astype(cache["v"].dtype))
+    new["kv_pos"] = cache["kv_pos"].at[b, slots].set(positions)
+    new["pos"] = positions[:, -1] + 1
+    return new
 
 
-def attention_train(cfg, p, x, positions, shard, runtime: Runtime,
-                    window: int = 0):
-    """Self-attention over a full sequence (training / prefill)."""
+def attention(cfg, p, x, positions, shard, runtime: Runtime,
+              window: int = 0, cache=None, q_offset: int = 0):
+    """The unified attention layer: one code path for all three modes.
+
+    * ``cache is None``  — training / plain forward over x (B,S,D);
+    * ``cache`` given, S>1 — prefill (or suffix-prefill at an offset):
+      K/V are written into the cache and attention runs AGAINST the
+      cache, i.e. prefill is literally forward with ``position=0``;
+    * ``cache`` given, S==1 — decode: same code, Sq=1.
+
+    Returns (out, new_cache-or-None).
+    """
     B, S, _ = x.shape
     q, k, v = _qkv(cfg, p, x, positions, shard)
+    sdt = jnp.dtype(runtime.score_dtype)
+    # pos_keys: key index i holds position q_offset+i exactly, so the
+    # chunked path may slice keys to the causal band
+    if cache is not None:
+        new_cache = _cache_write(cache, k, v, positions, window)
+        if window and S > 1 and q_offset == 0:
+            # ring prefill: the post-write ring only serves the LAST
+            # window of queries (later tokens overwrite slots earlier
+            # queries still need) — attend the full fresh K/V instead,
+            # exactly like the no-cache forward
+            ck, cv, kv_pos = k, v, positions
+            pos_keys = True
+        elif window and S > 1:
+            # ring SUFFIX prefill: earlier in-window keys live only in
+            # the pre-write ring; attend (old ring ∪ fresh keys), with
+            # kv_pos masking staleness/duplicates
+            ck = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=1)
+            cv = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=1)
+            kv_pos = jnp.concatenate([cache["kv_pos"], positions], axis=1)
+            pos_keys = False
+        else:
+            ck = shard(new_cache["k"], "act_batch", "kv_seq", None, None)
+            cv = shard(new_cache["v"], "act_batch", "kv_seq", None, None)
+            kv_pos = new_cache["kv_pos"]
+            pos_keys = not window       # window==0 cache: slot == pos
+    else:
+        new_cache = None
+        ck, cv, kv_pos = k, v, positions
+        pos_keys = True
+
     impl = runtime.attn_impl
     if impl == "auto":
         impl = "full" if S <= runtime.full_attn_threshold else "chunked"
-    sdt = jnp.dtype(runtime.score_dtype)
     if impl == "full" or S <= runtime.q_chunk:
-        out = _sdpa(cfg, q, k, v, _causal_mask(S, S, 0, window), shard,
-                    score_dtype=sdt)
+        if pos_keys and cache is not None and S > 1:
+            # prefill into a wide cache: only slots [0, q_offset+S)
+            # can be written — slice so cost tracks prompt length, not
+            # buffer width (decode S==1 still attends the full cache)
+            hi = q_offset + S
+            ck, cv, kv_pos = ck[:, :hi], cv[:, :hi], kv_pos[:, :hi]
+        out = attend(q, ck, cv, positions, kv_pos, window, shard, sdt)
     else:
+        # q-chunked (python-unrolled: exact HLO cost accounting).  When
+        # key index == position (pos_keys), keys are sliced to the
+        # causal band per chunk; otherwise (ring buffers, width =
+        # window) the whole small buffer is attended and kv_pos masks.
         qc = runtime.q_chunk
         assert S % qc == 0, f"seq {S} not divisible by q_chunk {qc}"
         outs = []
-        for i in range(S // qc):            # unrolled: exact HLO costs
-            lo = i * qc
-            hi = lo + qc
-            klo = max(0, lo - window + 1) if window else 0
-            kv_hi = hi
-            mask = _causal_mask(qc, kv_hi - klo, lo - klo, window)
-            outs.append(
-                _sdpa(cfg, q[:, lo:hi], k[:, klo:kv_hi], v[:, klo:kv_hi],
-                      mask, shard, score_dtype=sdt)
-            )
+        for i in range(S // qc):
+            lo, hi = i * qc, (i + 1) * qc
+            if pos_keys:    # q_offset is 0 whenever keys are the raw k/v
+                klo = max(0, q_offset + lo - window + 1) if window else 0
+                khi = q_offset + hi
+            else:
+                klo, khi = 0, ck.shape[1]
+            outs.append(attend(
+                q[:, lo:hi], ck[:, klo:khi], cv[:, klo:khi],
+                positions[:, lo:hi], kv_pos[:, klo:khi], window, shard,
+                sdt))
         out = jnp.concatenate(outs, axis=1)
     y = jnp.einsum("bshk,hkd->bsd", out,
                    getattr(shard, "use", lambda w: w)(p["wo"]))
     if cfg.attn_out_bias:
         y = y + p["bo"].astype(y.dtype)
-    return shard(y, "act_batch", "act_seq", None)
-
-
-def attention_prefill(cfg, p, x, positions, shard, runtime, cache,
-                      window: int = 0):
-    """Prefill: run attention_train AND populate the KV cache."""
-    q, k, v = _qkv(cfg, p, x, positions, shard)
-    B, S, KV, Dh = k.shape
-    new_cache = dict(cache)
-    if window:
-        # ring buffer keeps the last `window` tokens at slot = pos % window
-        w = min(window, S)
-        last_pos = positions[0, -w:]                       # (w,) absolute
-        slots = last_pos % window                          # scatter slots
-        new_cache["k"] = cache["k"].at[:, slots].set(
-            k[:, -w:].astype(cache["k"].dtype))
-        new_cache["v"] = cache["v"].at[:, slots].set(
-            v[:, -w:].astype(cache["v"].dtype))
-    else:
-        new_cache["k"] = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
-        new_cache["v"] = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
-    new_cache["pos"] = jnp.asarray(S, jnp.int32)
-    out = attention_train(cfg, p, x, positions, shard, runtime, window)
-    return out, new_cache
-
-
-def attention_decode(cfg, p, x, pos, shard, runtime, cache, window: int = 0):
-    """One-token decode against the cache.
-
-    cache["k"/"v"]: (B, S_cache, KV, Dh) — sequence axis sharded over
-    'model' (logical "kv_seq"); cache["pos"]: tokens already present.
-    """
-    B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32) if jnp.ndim(pos) == 0 else pos
-    q, k, v = _qkv(cfg, p, x, positions, shard)
-    Sc = cache["k"].shape[1]
-    if window:
-        slot = pos % window
-    else:
-        slot = pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
-    ck = shard(ck, "act_batch", "kv_seq", None, None)
-    cv = shard(cv, "act_batch", "kv_seq", None, None)
-    new_cache = dict(cache, k=ck, v=cv, pos=pos + 1)
-
-    KV, Dh, H = ck.shape[2], ck.shape[3], q.shape[2]
-    G = H // KV
-    qg = q.reshape(B, KV, G, Dh)
-    scale = 1.0 / math.sqrt(Dh)
-    scores = jnp.einsum("bkgd,btkd->bkgt", qg,
-                        ck.astype(q.dtype)).astype(jnp.float32) * scale
-    kpos = jnp.arange(Sc)
-    if window:
-        # slots fill in order until the ring wraps; then all are valid
-        valid = kpos < jnp.minimum(pos + 1, window)
-    else:
-        valid = kpos <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
-    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bkgt,btkd->bkgd", w, cv.astype(q.dtype))
-    out = out.reshape(B, 1, H, Dh)
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
-    if cfg.attn_out_bias:
-        y = y + p["bo"].astype(y.dtype)
-    return y, new_cache
+    return shard(y, "act_batch", "act_seq", None), new_cache
 
 
 # ----------------------------------------------------------------------- MLP

@@ -6,8 +6,7 @@ architectures — block kinds come from ``cfg.layer_kinds()``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,32 +18,58 @@ from repro.distributed.sharding import NO_SHARD, ShardCtx
 
 
 # ------------------------------------------------------------------ blocks
-def block_forward(cfg: ModelConfig, kind: str, p, x, positions, shard,
-                  runtime: Runtime) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+def block_apply(cfg: ModelConfig, kind: str, p, x, positions, shard,
+                runtime: Runtime, cache=None, decode: bool = False,
+                q_offset: int = 0
+                ) -> Tuple[jnp.ndarray, Dict[str, Any], Any]:
+    """One block, any mode: forward (cache=None), prefill (cache given),
+    decode (cache given, decode=True, S==1).  Attention needs no decode
+    flag at all — forward, prefill and decode are the SAME unified path
+    (layers.attention); only the recurrent families keep a specialized
+    single-step kernel.  Returns (x, aux_losses, new_cache)."""
     aux: Dict[str, Any] = {}
+    new_cache = None
     window = cfg.local_window if kind == "local" else 0
-    if kind in ("attn", "local"):
-        h = L.attention_train(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
-                              positions, shard, runtime, window)
+    if kind in ("attn", "local", "moe"):
+        h, new_cache = L.attention(cfg, p["attn"],
+                                   L.apply_norm(cfg, p["ln1"], x),
+                                   positions, shard, runtime, window, cache,
+                                   q_offset)
         x = x + h
-        x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x), shard)
-    elif kind == "moe":
-        h = L.attention_train(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
-                              positions, shard, runtime, 0)
-        x = x + h
-        m, aux = L.moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x), shard)
-        x = x + m
+        if kind == "moe":
+            m, aux = L.moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x),
+                           shard)
+            x = x + m
+        else:
+            x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x),
+                          shard)
     elif kind == "ssd":
-        h, _ = L.ssd_forward(cfg, p["ssd"], L.apply_norm(cfg, p["ln1"], x),
-                             shard)
+        if decode:
+            h, new_cache = L.ssd_decode_step(
+                cfg, p["ssd"], L.apply_norm(cfg, p["ln1"], x), cache, shard)
+        else:
+            h, new_cache = L.ssd_forward(
+                cfg, p["ssd"], L.apply_norm(cfg, p["ln1"], x), shard, cache)
         x = x + h
     elif kind == "rglru":
-        h, _ = L.rglru_forward(cfg, p["rglru"],
-                               L.apply_norm(cfg, p["ln1"], x), shard)
+        if decode:
+            h, new_cache = L.rglru_decode_step(
+                cfg, p["rglru"], L.apply_norm(cfg, p["ln1"], x), cache,
+                shard)
+        else:
+            h, new_cache = L.rglru_forward(
+                cfg, p["rglru"], L.apply_norm(cfg, p["ln1"], x), shard,
+                cache)
         x = x + h
         x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x), shard)
     else:
         raise ValueError(kind)
+    return x, aux, new_cache
+
+
+def block_forward(cfg: ModelConfig, kind: str, p, x, positions, shard,
+                  runtime: Runtime) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    x, aux, _ = block_apply(cfg, kind, p, x, positions, shard, runtime)
     return x, aux
 
 
@@ -246,12 +271,14 @@ def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
         if kind in ("attn", "moe"):
             s = {"k": ((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt),
                  "v": ((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt),
-                 "pos": ((), jnp.int32)}
+                 "kv_pos": ((batch, max_len), jnp.int32),
+                 "pos": ((batch,), jnp.int32)}
         elif kind == "local":
             w = min(cfg.local_window, max_len)
             s = {"k": ((batch, w, cfg.num_kv_heads, cfg.head_dim), dt),
                  "v": ((batch, w, cfg.num_kv_heads, cfg.head_dim), dt),
-                 "pos": ((), jnp.int32)}
+                 "kv_pos": ((batch, w), jnp.int32),
+                 "pos": ((batch,), jnp.int32)}
         elif kind == "ssd":
             s = {"conv": ((batch, cfg.ssm_conv - 1,
                            cfg.d_inner + 2 * cfg.ssm_state), dt),
@@ -264,10 +291,17 @@ def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
     return spec
 
 
+def _init_leaf(name: str, shape, dtype):
+    # kv_pos slots start EMPTY (masked out), not at position 0
+    if name == "kv_pos":
+        return jnp.full(shape, L.EMPTY_SLOT, dtype)
+    return jnp.zeros(shape, dtype)
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                cache_dtype: str = ""):
     return [
-        {k: jnp.zeros(shape, dtype) for k, (shape, dtype) in s.items()}
+        {k: _init_leaf(k, shape, dtype) for k, (shape, dtype) in s.items()}
         for s in cache_spec(cfg, batch, max_len, cache_dtype)
     ]
 
@@ -288,7 +322,8 @@ def cache_logical_axes(cfg: ModelConfig):
         if kind in ("attn", "moe", "local"):
             s = {"k": ("act_batch", "kv_seq", "act_kv", None),
                  "v": ("act_batch", "kv_seq", "act_kv", None),
-                 "pos": ()}
+                 "kv_pos": ("act_batch", "kv_seq"),
+                 "pos": ("act_batch",)}
         elif kind == "ssd":
             s = {"conv": ("act_batch", None, "ssm_conv_ch"),
                  "ssm": ("act_batch", None, None, None)}
@@ -300,92 +335,61 @@ def cache_logical_axes(cfg: ModelConfig):
 
 
 # ------------------------------------------------------------- serve steps
-def _block_decode(cfg, kind, p, x, pos, cache, shard, runtime):
-    window = cfg.local_window if kind == "local" else 0
-    if kind in ("attn", "local", "moe"):
-        h, cache = L.attention_decode(cfg, p["attn"],
-                                      L.apply_norm(cfg, p["ln1"], x),
-                                      pos, shard, runtime, cache, window)
-        x = x + h
-        if kind == "moe":
-            m, _ = L.moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x),
-                         shard)
-            x = x + m
-        else:
-            x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x),
-                          shard)
-    elif kind == "ssd":
-        h, cache = L.ssd_decode_step(cfg, p["ssd"],
-                                     L.apply_norm(cfg, p["ln1"], x),
-                                     cache, shard)
-        x = x + h
-    elif kind == "rglru":
-        h, cache = L.rglru_decode_step(cfg, p["rglru"],
-                                       L.apply_norm(cfg, p["ln1"], x),
-                                       cache, shard)
-        x = x + h
-        x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x), shard)
-    return x, cache
-
-
 def decode_step(cfg: ModelConfig, params, tokens, cache, pos,
-                runtime: Runtime = Runtime(), shard: ShardCtx = NO_SHARD):
-    """One decode step.  tokens (B,1) int32; pos scalar int32 (current
-    position = number of tokens already in the cache)."""
+                runtime: Runtime = Runtime(), shard: ShardCtx = NO_SHARD,
+                active=None):
+    """One decode step for a (possibly continuous) batch.
+
+    tokens (B,1) int32; ``pos`` is the current position of each row —
+    a scalar (all rows aligned, the classic case) or a (B,) vector
+    (continuous batching: every generation at its own depth).  With
+    ``active`` (B,) bool given, inactive rows are carried through
+    UNCHANGED — their cache/recurrent state is re-selected from the old
+    cache — so one fixed-shape jitted dispatch serves a fluctuating set
+    of live generations.
+    """
     B = tokens.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = (jnp.full((B, 1), pos, jnp.int32) if pos.ndim == 0
+                 else pos.reshape(B, 1))
     x, _ = embed_inputs(cfg, params, tokens, None, positions, shard)
     new_cache = []
     for kind, p, c in zip(cfg.layer_kinds(), params["layers"], cache):
-        x, c2 = _block_decode(cfg, kind, p, x, pos, c, shard, runtime)
+        x, _, c2 = block_apply(cfg, kind, p, x, positions, shard, runtime,
+                               cache=c, decode=True)
+        if active is not None:
+            c2 = jax.tree.map(
+                lambda n, o: jnp.where(
+                    active.reshape((B,) + (1,) * (n.ndim - 1)), n, o),
+                c2, c)
         new_cache.append(c2)
     x = L.apply_norm(cfg, params["final_norm"], x)
-    head = (params["embed"]["tokens"].T if cfg.tie_embeddings
-            else params["lm_head"]["w"])
+    head = _head(cfg, params, shard)
     logits = jnp.einsum("bsd,dv->bsv", x, head)
     if cfg.logit_softcap:
         logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
     return logits[:, 0], new_cache
 
 
-def _prefill_block(cfg: ModelConfig, kind: str, p, x, positions, c,
-                   shard, runtime: Runtime):
-    window = cfg.local_window if kind == "local" else 0
-    if kind in ("attn", "local", "moe"):
-        h, c2 = L.attention_prefill(cfg, p["attn"],
-                                    L.apply_norm(cfg, p["ln1"], x),
-                                    positions, shard, runtime, c, window)
-        x = x + h
-        if kind == "moe":
-            m, _ = L.moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x),
-                         shard)
-            x = x + m
-        else:
-            x = x + L.mlp(cfg, p["mlp"],
-                          L.apply_norm(cfg, p["ln2"], x), shard)
-    elif kind == "ssd":
-        h, c2 = L.ssd_forward(cfg, p["ssd"],
-                              L.apply_norm(cfg, p["ln1"], x), shard, c)
-        x = x + h
-    elif kind == "rglru":
-        h, c2 = L.rglru_forward(cfg, p["rglru"],
-                                L.apply_norm(cfg, p["ln1"], x), shard, c)
-        x = x + h
-        x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x), shard)
-    return x, c2
-
-
-def _zero_cache_for(cfg: ModelConfig, kind: str, batch: int, max_len: int):
-    """Single-layer zero cache of the given kind."""
+def _fresh_cache_for(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    """Single-layer initial cache of the given kind."""
     idx = cfg.layer_kinds().index(kind)
     spec = cache_spec(cfg, batch, max_len)[idx]
-    return {k: jnp.zeros(shape, dtype) for k, (shape, dtype) in spec.items()}
+    return {k: _init_leaf(k, shape, dtype)
+            for k, (shape, dtype) in spec.items()}
 
 
 def prefill(cfg: ModelConfig, params, tokens=None, *, embeds=None,
-            cache=None, runtime: Runtime = Runtime(),
-            shard: ShardCtx = NO_SHARD):
+            cache=None, start_pos: int = 0,
+            runtime: Runtime = Runtime(), shard: ShardCtx = NO_SHARD):
     """Run the prompt through the model, filling the cache.
+
+    Prefill is forward on the unified attention path: K/V land in the
+    cache and attention reads back THROUGH the cache, so decode steps
+    continue the identical computation.  ``start_pos`` allows suffix
+    prefill: continue a restored prefix cache from position
+    ``start_pos`` without recomputing the cached tokens (the engine's
+    partial prefix-cache hits).
 
     Returns (last-token logits, cache).  With ``runtime.scan_layers``
     the stack runs as one lax.scan over pattern units and the cache
@@ -393,40 +397,53 @@ def prefill(cfg: ModelConfig, params, tokens=None, *, embeds=None,
     pytrees with a leading (num_units,) axis — the production layout
     big models serve with.  Otherwise the cache is a per-layer list.
     """
-    x, positions = embed_inputs(cfg, params, tokens, embeds, None, shard)
+    positions = None
+    if start_pos:
+        # suffix prefill: absolute positions must be offset BEFORE the
+        # positional embedding is applied (sinusoidal) and rope'd
+        assert tokens is not None and embeds is None
+        B0, S0 = tokens.shape
+        positions = jnp.broadcast_to(
+            start_pos + jnp.arange(S0, dtype=jnp.int32), (B0, S0))
+    x, positions = embed_inputs(cfg, params, tokens, embeds, positions,
+                                shard)
     B, S, _ = x.shape
     kinds = cfg.layer_kinds()
 
     if runtime.scan_layers and len(kinds) > len(cfg.block_pattern or (1,)):
-        assert cache is None, "scan-prefill builds its own cache"
+        assert cache is None and not start_pos, \
+            "scan-prefill builds its own cache from position 0"
         pat, stacked, tail = _stack_units(cfg, params["layers"])
         max_len = S
 
         def body(xx, unit_params):
             caches = []
             for j, kind in enumerate(pat):
-                c0 = _zero_cache_for(cfg, kind, B, max_len)
-                xx, c2 = _prefill_block(cfg, kind, unit_params[j], xx,
-                                        positions, c0, shard, runtime)
+                c0 = _fresh_cache_for(cfg, kind, B, max_len)
+                xx, _, c2 = block_apply(cfg, kind, unit_params[j], xx,
+                                        positions, shard, runtime, cache=c0)
                 caches.append(c2)
             return xx, tuple(caches)
 
         x, new_cache = jax.lax.scan(body, x, stacked)
         tail_caches = []
         for kind, p in zip(pat, tail):              # unrolled remainder
-            c0 = _zero_cache_for(cfg, kind, B, max_len)
-            x, c2 = _prefill_block(cfg, kind, p, x, positions, c0,
-                                   shard, runtime)
+            c0 = _fresh_cache_for(cfg, kind, B, max_len)
+            x, _, c2 = block_apply(cfg, kind, p, x, positions, shard,
+                                   runtime, cache=c0)
             tail_caches.append(c2)
         if tail_caches:
             new_cache = (new_cache, tuple(tail_caches))
     else:
         if cache is None:
+            assert not start_pos, (
+                "start_pos without a cache would attend an EMPTY "
+                "prefix: pass the cache holding positions [0, start_pos)")
             cache = init_cache(cfg, B, S)
         new_cache = []
         for kind, p, c in zip(kinds, params["layers"], cache):
-            x, c2 = _prefill_block(cfg, kind, p, x, positions, c, shard,
-                                   runtime)
+            x, _, c2 = block_apply(cfg, kind, p, x, positions, shard,
+                                   runtime, cache=c, q_offset=start_pos)
             new_cache.append(c2)
 
     x = L.apply_norm(cfg, params["final_norm"], x)

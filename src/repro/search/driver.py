@@ -1,7 +1,7 @@
 """One-call drivers assembling the full stacks (benchmarks/examples)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.clock import EventLoop
 from repro.core.controller import SpecController, SpecGenConfig, TaskResult
@@ -85,3 +85,44 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
         ctls.append(c)
     loop.run(stop=lambda: all(c.done for c in ctls))
     return sched, ctls
+
+
+def run_engine_pool(arch: str = "qwen2-1.5b", n_workflows: int = 10,
+                    prompt_len: int = 16, reasoning_tokens: int = 24,
+                    forks_per_workflow: int = 1, fork_tokens: int = 6,
+                    max_len: int = 160, seed: int = 0,
+                    ) -> Tuple["object", Dict[int, List[int]]]:
+    """The paper's serving-side setting on the REAL model: N concurrent
+    kernel-refinement workflows (one reasoning generation each, plus
+    speculative forks mid-stream) share ONE continuous-batched engine.
+    Every step is a single jitted dispatch over all live rows; forks
+    copy-on-write their parent's row with zero prefill recompute.
+
+    Returns (engine, {gen_id: emitted tokens}).
+    """
+    import numpy as np
+    import jax as _jax
+    from repro.models import schema
+    from repro.models.layers import Runtime
+    from repro.models.registry import get_smoke
+    from repro.serving.engine import Engine
+
+    cfg = get_smoke(arch)
+    params = schema.init_params(cfg, _jax.random.PRNGKey(seed))
+    eng = Engine(cfg, params, Runtime(), max_len=max_len,
+                 max_batch=n_workflows * (1 + forks_per_workflow))
+    rs = np.random.RandomState(seed)
+    roots = [eng.submit(list(rs.randint(0, cfg.vocab_size, prompt_len)),
+                        max_new_tokens=reasoning_tokens, temperature=0.7,
+                        reasoning=True, seed=seed + i)
+             for i in range(n_workflows)]
+    fork_at = max(2, reasoning_tokens // 3)
+    for _ in range(fork_at):
+        eng.step_all()
+    for i, r in enumerate(roots):           # mid-reasoning speculation
+        if eng.generation(r).status != "running":
+            continue                        # already retired: no parent
+        for j in range(forks_per_workflow):
+            eng.fork(r, max_new_tokens=fork_tokens, temperature=0.9,
+                     seed=seed + 100 * i + j)
+    return eng, eng.run_all()

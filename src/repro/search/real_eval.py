@@ -31,9 +31,26 @@ class RealEvalBackend:
     def __init__(self, atol: float = 2e-2):
         self.atol = atol
         self._rs = np.random.RandomState(0)
+        # check inputs + oracle output are candidate-independent: cache
+        # them per (task shape, epilogue, mask) so a 10-agent workflow
+        # validating hundreds of candidates pays RNG + reference cost
+        # once per task instead of once per candidate
+        self._check_cache: dict = {}
 
     def _task(self, cand: KernelCandidate) -> KernelTaskDef:
         return TASKS.get(cand.task_id, TASKS["T6"])
+
+    def _check_inputs(self, task: KernelTaskDef):
+        key = (task.check_M, task.check_N, task.check_K,
+               task.epilogue, task.mask)
+        hit = self._check_cache.get(key)
+        if hit is None:
+            M, N, K = task.check_M, task.check_N, task.check_K
+            a = jnp.asarray(self._rs.randn(M, K), jnp.float32)
+            b = jnp.asarray(self._rs.randn(K, N), jnp.float32)
+            ref = matmul_ref(a, b, epilogue=task.epilogue, mask=task.mask)
+            hit = self._check_cache[key] = (a, b, ref)
+        return hit
 
     def validate(self, cand: KernelCandidate
                  ) -> Tuple[float, ValidationResult]:
@@ -47,11 +64,9 @@ class RealEvalBackend:
             if M % bm or N % bn or K % bk:
                 raise ValueError(
                     f"block {(bm, bn, bk)} does not divide {(M, N, K)}")
-            a = jnp.asarray(self._rs.randn(M, K), jnp.float32)
-            b = jnp.asarray(self._rs.randn(K, N), jnp.float32)
+            a, b, ref = self._check_inputs(task)
             out = matmul(a, b, bm=bm, bn=bn, bk=bk,
                          epilogue=task.epilogue, mask=task.mask)
-            ref = matmul_ref(a, b, epilogue=task.epilogue, mask=task.mask)
         except (ValueError, AssertionError) as e:
             return (time.perf_counter() - t0,
                     ValidationResult(ok=False, failure="compile"))

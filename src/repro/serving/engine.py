@@ -1,16 +1,36 @@
-"""Generation engine: prefill/decode with prefix-cache fork semantics.
+"""Generation engine: continuous-batched decode with copy-on-write forks.
 
 This is the real-model path of the system (examples/serve_spec.py runs
 it on a reduced config).  SpecGen's SpecController talks to engines
 through the ``GenerationStream`` protocol, which the simulated LLM in
 ``repro.search.llm_sim`` also implements — the controller cannot tell
 the difference (the paper's "no changes to the underlying LLM" claim).
+
+Architecture
+------------
+All live generations share ONE pre-allocated decode cache of
+``max_batch`` rows; every generation owns a row (slot).  Each step is a
+single fixed-shape jitted dispatch over the whole batch — per-row
+positions and an ``active`` mask let generations sit at different
+depths and admit/retire without recompilation (continuous batching).
+Because the model's forward/prefill/decode all lower to the same
+attention path (repro.models.layers.attend), a row's trajectory is
+bit-identical whichever batch composition or slot it executes in —
+which is what makes speculative forks trustworthy:
+
+  * ``fork()`` copies the parent's row inside the donated cache buffer
+    (one in-place row write; the pre-allocated pool means only the
+    child's divergent suffix consumes new capacity), and
+  * suspended prefixes are shared STRUCTURALLY through the two-tier
+    ``PrefixCacheStore`` (immutable jax arrays: a stored entry serves
+    any number of later admissions; partial hits suffix-prefill only
+    the divergent remainder).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 import jax
@@ -29,25 +49,27 @@ class Generation:
     gen_id: int
     tokens: List[int]                 # full context (prompt + emitted)
     prompt_len: int
-    cache: Any = None
+    slot: int = -1                    # row in the shared decode cache
     pos: int = 0
     status: str = "pending"           # pending|running|done|cancelled
     max_new_tokens: int = 64
     temperature: float = 0.7
     reasoning: bool = True            # reasoning vs speculative fork
-    shares_cache: bool = False        # copy-on-write pending
+    parent: Optional[int] = None      # forked from (None = root)
     emitted: List[int] = dataclasses.field(default_factory=list)
     rng_seed: int = 0
+    final_row: Any = None             # retained row when not auto-parked
 
 
 class Engine:
-    """Single-model generation engine with prefix-cache reuse + forks."""
+    """Single-model engine: continuous batching + prefix reuse + forks."""
 
     def __init__(self, cfg: ModelConfig, params, runtime: Runtime = Runtime(),
                  max_len: int = 512, cache_store: PrefixCacheStore = None,
-                 store_prefixes: bool = True):
+                 store_prefixes: bool = True, max_batch: int = 8):
         self.cfg, self.params, self.runtime = cfg, params, runtime
         self.max_len = max_len
+        self.max_batch = max_batch
         # NOTE: `cache_store or ...` would discard an EMPTY store
         # (PrefixCacheStore defines __len__) — compare to None instead
         self.store = cache_store if cache_store is not None else \
@@ -56,52 +78,72 @@ class Engine:
         self.store_prefixes = store_prefixes
         self._gens: Dict[int, Generation] = {}
         self._ids = itertools.count()
+        self._cache = None                      # (max_batch, max_len) rows
+        self._free: List[int] = list(range(max_batch))
         self.tokens_prefilled = 0
         self.tokens_decoded = 0
+        self.decode_dispatches = 0              # jitted decode calls
 
-        rt = runtime
-        self._prefill = jax.jit(
-            lambda p, toks, cache: T.prefill(
-                cfg, p, toks, cache=cache, runtime=rt, shard=NO_SHARD))
-        # two decode variants: donating (exclusive cache — in-place) and
-        # non-donating (first step after a fork: copy-on-write)
-        self._decode_cow = jax.jit(
-            lambda p, tok, cache, pos: T.decode_step(
-                cfg, p, tok, cache, pos, rt, NO_SHARD))
-        self._decode_inplace = jax.jit(
-            lambda p, tok, cache, pos: T.decode_step(
-                cfg, p, tok, cache, pos, rt, NO_SHARD),
+        cfg_, rt = cfg, runtime
+        self._prefills: Dict[int, Any] = {}     # start_pos -> jitted fn
+        # the one decode dispatch: whole batch, per-row positions,
+        # active mask; the cache is donated (updated in place)
+        self._decode = jax.jit(
+            lambda p, tok, cache, pos, act: T.decode_step(
+                cfg_, p, tok, cache, pos, rt, NO_SHARD, active=act),
             donate_argnums=(2,))
+        self._admit_row = jax.jit(
+            lambda full, row, i: jax.tree.map(
+                lambda f, r: f.at[i].set(r[0]), full, row),
+            donate_argnums=(0,))
+        self._copy_row = jax.jit(
+            lambda full, src, dst: jax.tree.map(
+                lambda a: a.at[dst].set(a[src]), full),
+            donate_argnums=(0,))
+        self._read_row = jax.jit(
+            lambda full, i: jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, i, 1, 0), full))
 
     # ----------------------------------------------------------- lifecycle
     def submit(self, prompt_tokens: List[int], *, max_new_tokens: int = 64,
                temperature: float = 0.7, reasoning: bool = True,
                seed: int = 0) -> int:
+        assert prompt_tokens, "empty prompt: nothing to condition on"
+        assert len(prompt_tokens) < self.max_len, (
+            f"prompt of {len(prompt_tokens)} tokens does not fit "
+            f"max_len={self.max_len}: the scatter cache write would "
+            f"silently drop out-of-range positions")
         gid = next(self._ids)
-        self._gens[gid] = Generation(
+        g = Generation(
             gen_id=gid, tokens=list(prompt_tokens),
             prompt_len=len(prompt_tokens), max_new_tokens=max_new_tokens,
             temperature=temperature, reasoning=reasoning, rng_seed=seed)
+        if max_new_tokens <= 0:             # nothing to decode: done
+            g.status = "done"
+        self._gens[gid] = g
         return gid
 
     def fork(self, parent_id: int, *, max_new_tokens: int = 64,
              temperature: float = 0.7, seed: int = 0) -> int:
         """Fork a speculative generation from the parent's CURRENT prefix.
 
-        The child shares the parent's cache arrays (immutable => free);
-        its first decode step copies-on-write.  No prefill recompute —
-        the paper's prefix-conditioned non-reasoning generation.
+        Copy-on-write at row granularity: one in-place row copy inside
+        the shared (pre-allocated) cache claims a slot for the child;
+        no prefill recompute, no new cache allocation — the paper's
+        prefix-conditioned non-reasoning generation.
         """
         parent = self._gens[parent_id]
         assert parent.status == "running", "fork requires a live parent"
         gid = next(self._ids)
+        slot = self._claim_slot()
+        self._cache = self._copy_row(
+            self._cache, jnp.int32(parent.slot), jnp.int32(slot))
         child = Generation(
             gen_id=gid, tokens=list(parent.tokens),
-            prompt_len=len(parent.tokens), cache=parent.cache,
+            prompt_len=len(parent.tokens), slot=slot,
             pos=parent.pos, status="running",
             max_new_tokens=max_new_tokens, temperature=temperature,
-            reasoning=False, shares_cache=True, rng_seed=seed)
-        parent.shares_cache = True        # parent must also CoW next step
+            reasoning=False, parent=parent_id, rng_seed=seed)
         self._gens[gid] = child
         self.store.stats.tokens_reused += parent.pos
         return gid
@@ -109,64 +151,144 @@ class Engine:
     def cancel(self, gen_id: int) -> None:
         g = self._gens.get(gen_id)
         if g and g.status in ("pending", "running"):
-            g.status = "cancelled"
-            g.cache = None
+            self._retire(g, "cancelled")
 
     def suspend_to_store(self, gen_id: int) -> None:
         """Park a generation's prefix in the cache store (local tier; the
-        store migrates it remote under memory pressure)."""
+        store migrates it remote under memory pressure).  Works for live
+        generations (row read from the batch cache) and finished ones
+        (row retained at retirement when it wasn't auto-parked)."""
         g = self._gens[gen_id]
-        if g.cache is not None:
-            self.store.put(g.tokens[: g.pos], g.cache, length=g.pos)
+        if g.slot >= 0:
+            row = self._read_row(self._cache, jnp.int32(g.slot))
+        elif g.final_row is not None:
+            row = g.final_row
+        else:
+            return
+        self.store.put(g.tokens[: g.pos], row, length=g.pos)
 
-    # ----------------------------------------------------------- execution
-    def _ensure_prefilled(self, g: Generation) -> None:
+    # ----------------------------------------------------------- slot mgmt
+    def _ensure_cache(self) -> None:
+        if self._cache is None:
+            self._cache = T.init_cache(self.cfg, self.max_batch,
+                                       self.max_len,
+                                       self.runtime.cache_dtype)
+
+    def _claim_slot(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                f"engine full: {self.max_batch} rows live; retire or "
+                f"cancel a generation before admitting another")
+        self._ensure_cache()
+        return self._free.pop(0)
+
+    def _retire(self, g: Generation, status: str) -> None:
+        g.status = status
+        if g.slot >= 0:
+            if status == "done" and g.pos > 0:
+                # the finished prefix must survive the row recycle:
+                # auto-park it (later forks/extensions restore instead
+                # of re-prefilling), or retain it on the generation so
+                # an explicit suspend_to_store still works
+                row = self._read_row(self._cache, jnp.int32(g.slot))
+                if self.store_prefixes:
+                    self.store.put(g.tokens[: g.pos], row, length=g.pos)
+                else:
+                    g.final_row = row
+            self._free.append(g.slot)
+            g.slot = -1
+
+    # ----------------------------------------------------------- admission
+    def _admit(self, g: Generation) -> None:
         """Prefill all but the last context token; decode consumes it.
 
         Invariant maintained by ``step``:  g.pos == len(g.tokens) - 1,
-        i.e. the cache holds tokens[:pos] and tokens[pos] is the next
-        token to feed."""
-        if g.cache is not None:
-            return
+        i.e. the cache row holds tokens[:pos] and tokens[pos] is the
+        next token to feed.  The prefix store is consulted first: a
+        full hit restores the row with zero recompute; a partial hit
+        suffix-prefills only the divergent remainder.
+        """
         n = g.prompt_len - 1
-        cached, clen = self.store.get(g.tokens[:n])
-        if cached is not None and clen == n:
-            g.cache = cached
-            g.shares_cache = True
+        slot = self._claim_slot()
+        if n == 0:                              # single-token prompt:
+            cached, clen = None, 0              # nothing to prefill
         else:
-            self.store.note_recompute(n)
-            cache = T.init_cache(self.cfg, 1, self.max_len)
-            toks = jnp.asarray([g.tokens[:n]], jnp.int32)
-            _, cache = self._prefill(self.params, toks, cache)
-            g.cache = cache
-            self.tokens_prefilled += n
+            cached, clen = self.store.get_longest(g.tokens[:n])
+        row = cached if cached is not None \
+            else T.init_cache(self.cfg, 1, self.max_len,
+                              self.runtime.cache_dtype)
+        if clen < n:                            # miss / partial hit
+            self.store.note_recompute(n - clen)
+            toks = jnp.asarray([g.tokens[clen:n]], jnp.int32)
+            _, row = self._suffix_prefill(clen)(self.params, toks, row)
+            self.tokens_prefilled += n - clen
             if self.store_prefixes:
-                self.store.put(g.tokens[:n], cache, length=n)
-                g.shares_cache = True
-        g.pos = n
-        g.status = "running"
+                self.store.put(g.tokens[:n], row, length=n)
+        self._cache = self._admit_row(self._cache, row, jnp.int32(slot))
+        g.slot, g.pos, g.status = slot, n, "running"
+
+    def _suffix_prefill(self, start_pos: int):
+        """Jitted prefill continuing from ``start_pos`` (0 = cold).
+        Memoized per offset: jax.jit caches executables on the wrapper
+        object, so a fresh lambda per call would recompile every
+        admission."""
+        fn = self._prefills.get(start_pos)
+        if fn is None:
+            cfg, rt = self.cfg, self.runtime
+            fn = self._prefills[start_pos] = jax.jit(
+                lambda p, t, c, sp=start_pos: T.prefill(
+                    cfg, p, t, cache=c, start_pos=sp, runtime=rt,
+                    shard=NO_SHARD))
+        return fn
+
+    # ----------------------------------------------------------- execution
+    def _dispatch(self, gens: Sequence[Generation]) -> None:
+        """ONE jitted decode step advancing every generation in ``gens``."""
+        B = self.max_batch
+        tok = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        act = np.zeros((B,), bool)
+        for g in gens:
+            tok[g.slot, 0] = g.tokens[g.pos]
+            pos[g.slot] = g.pos
+            act[g.slot] = True
+        logits, self._cache = self._decode(
+            self.params, jnp.asarray(tok), self._cache,
+            jnp.asarray(pos), jnp.asarray(act))
+        logits = np.asarray(logits)
+        self.decode_dispatches += 1
+        for g in gens:
+            nxt = sample_token(logits[g.slot], g.temperature,
+                               seed=g.rng_seed + g.pos)
+            g.tokens.append(int(nxt))
+            g.emitted.append(int(nxt))
+            g.pos += 1
+            self.tokens_decoded += 1
+            if len(g.emitted) >= g.max_new_tokens or \
+                    g.pos >= self.max_len - 1:
+                self._retire(g, "done")
 
     def step(self, gen_id: int) -> Optional[int]:
         """Advance one generation by one token; returns it (or None)."""
         g = self._gens[gen_id]
         if g.status == "pending":
-            self._ensure_prefilled(g)
+            self._admit(g)
         if g.status != "running":
             return None
-        tok = jnp.asarray([[g.tokens[g.pos]]], jnp.int32)
-        decode = self._decode_cow if g.shares_cache else self._decode_inplace
-        logits, cache = decode(self.params, tok, g.cache, jnp.int32(g.pos))
-        g.cache = cache
-        g.shares_cache = False
-        nxt = sample_token(np.asarray(logits[0]), g.temperature,
-                           seed=g.rng_seed + g.pos)
-        g.tokens.append(int(nxt))
-        g.emitted.append(int(nxt))
-        g.pos += 1
-        self.tokens_decoded += 1
-        if len(g.emitted) >= g.max_new_tokens or g.pos >= self.max_len - 1:
-            g.status = "done"
-        return int(nxt)
+        self._dispatch([g])
+        return g.tokens[-1]
+
+    def step_all(self) -> List[int]:
+        """One decode step for EVERY live generation in a single batched
+        dispatch (admitting pending ones as slots allow).  Returns the
+        gen_ids that advanced."""
+        for g in list(self._gens.values()):
+            if g.status == "pending" and self._free:
+                self._admit(g)
+        live = [g for g in self._gens.values() if g.status == "running"]
+        if live:
+            self._dispatch(live)
+        return [g.gen_id for g in live]
 
     def run(self, gen_id: int) -> List[int]:
         g = self._gens[gen_id]
@@ -174,5 +296,20 @@ class Engine:
             self.step(gen_id)
         return g.emitted
 
+    def run_all(self) -> Dict[int, List[int]]:
+        """Drain every submitted generation via batched stepping."""
+        while any(g.status in ("pending", "running")
+                  for g in self._gens.values()):
+            if not self.step_all():
+                break                            # only blocked pendings
+        return {gid: g.emitted for gid, g in self._gens.items()}
+
     def generation(self, gen_id: int) -> Generation:
         return self._gens[gen_id]
+
+    @property
+    def live(self) -> int:
+        return sum(g.status == "running" for g in self._gens.values())
+
+    def cache_bytes(self) -> int:
+        return tree_bytes(self._cache) if self._cache is not None else 0

@@ -140,6 +140,34 @@ class PrefixCacheStore:
     def get(self, tokens) -> Tuple[Optional[Any], int]:
         """Return (payload-on-device | None, cached_length)."""
         key = prefix_key(tokens)
+        got = self._lookup(key)
+        if got is not None:
+            return got
+        self.stats.misses += 1
+        return None, 0
+
+    def get_longest(self, tokens) -> Tuple[Optional[Any], int]:
+        """Longest cached prefix of ``tokens`` (either tier).
+
+        Serving admission uses this: a generation whose exact prompt is
+        not cached can still reuse a shorter reasoning prefix and
+        suffix-prefill only the divergent remainder (paper §6.2.3 —
+        fork-from-reasoning-prefix).  Counts one hit or one miss total,
+        regardless of how many candidate lengths were probed.
+        """
+        toks = list(tokens)
+        lengths = sorted(
+            {e.length for tier in (self._local, self._remote)
+             for e in tier.values() if e.length <= len(toks)},
+            reverse=True)
+        for ln in lengths:
+            got = self._lookup(prefix_key(toks[:ln]))
+            if got is not None:
+                return got
+        self.stats.misses += 1
+        return None, 0
+
+    def _lookup(self, key: str) -> Optional[Tuple[Any, int]]:
         if key in self._local:
             e = self._local[key]
             self._local.move_to_end(key)
@@ -155,8 +183,7 @@ class PrefixCacheStore:
             self.stats.hits_remote += 1
             self.stats.tokens_reused += e.length
             return payload, e.length
-        self.stats.misses += 1
-        return None, 0
+        return None
 
     def note_recompute(self, tokens_recomputed: int) -> None:
         self.stats.tokens_recomputed += tokens_recomputed
@@ -176,6 +203,19 @@ class PrefixCacheStore:
             return True
         self.stats.evictions_local += 1
         return False
+
+    def flush_to_remote(self) -> int:
+        """Migrate every local entry to the remote tier (operator-driven
+        memory-pressure drill; entries that don't fit remotely are
+        evicted).  An EXPLICIT flush migrates even when automatic
+        migrate-on-pressure is disabled.  Returns entries migrated."""
+        before = self.stats.migrations
+        prev, self.migrate_on_pressure = self.migrate_on_pressure, True
+        try:
+            self._evict_until(self._local, 0, migrating=True)
+        finally:
+            self.migrate_on_pressure = prev
+        return self.stats.migrations - before
 
     def __contains__(self, tokens) -> bool:
         key = prefix_key(tokens)

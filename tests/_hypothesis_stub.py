@@ -1,0 +1,102 @@
+"""Minimal offline stand-in for the `hypothesis` property-testing API.
+
+The CI container has no network access, so `hypothesis` may not be
+installable.  Test modules import it as
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, strategies as st
+
+This stub reproduces just the surface those tests use — ``given``,
+``settings``, and ``strategies.integers/floats/sampled_from/lists/
+booleans`` — by running each property over ``max_examples`` seeded
+pseudo-random draws.  Draws are deterministic per test name, so
+failures reproduce; there is no shrinking.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.RandomState], Any]):
+        self._draw = draw
+
+    def example(self, rs: np.random.RandomState) -> Any:
+        return self._draw(rs)
+
+
+class strategies:  # noqa: N801 - mirrors `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rs: int(rs.randint(min_value,
+                                                   max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        def draw(rs):
+            # hit the endpoints occasionally: they are the usual bugs
+            r = rs.rand()
+            if r < 0.05:
+                return float(min_value)
+            if r < 0.10:
+                return float(max_value)
+            return float(min_value + rs.rand() * (max_value - min_value))
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rs: elements[rs.randint(len(elements))])
+
+    @staticmethod
+    def lists(element: _Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Strategy(lambda rs: [
+            element.example(rs)
+            for _ in range(rs.randint(min_size, max_size + 1))])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rs: bool(rs.randint(2)))
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_ignored):
+    """Order-independent with ``given``: records the example budget on
+    whichever function object it decorates."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        def runner():
+            n = getattr(runner, "_stub_max_examples", None) or \
+                getattr(fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode()) & 0x7FFFFFFF
+            rs = np.random.RandomState(seed)
+            for i in range(n):
+                drawn = {k: s.example(rs)
+                         for k, s in strategy_kwargs.items()}
+                try:
+                    fn(**drawn)
+                except BaseException as e:  # noqa: BLE001 - re-raise below
+                    raise AssertionError(
+                        f"property failed on example {i}: {drawn!r}"
+                    ) from e
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__module__ = fn.__module__
+        runner.__doc__ = fn.__doc__
+        return runner
+    return deco

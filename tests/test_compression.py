@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_mesh
 from repro.distributed.compression import _quantize, compressed_psum_pod
 
 
@@ -19,8 +20,7 @@ def test_quantize_error_bound():
 def test_compressed_psum_single_pod_identity_ish():
     """With one pod, compressed psum ~= identity up to quantization,
     and error feedback carries the residual exactly."""
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",))
     rs = np.random.RandomState(1)
     grads = {"w": jnp.asarray(rs.randn(64, 8) * 0.01, jnp.float32)}
     out, err = compressed_psum_pod(grads, mesh)
@@ -34,8 +34,7 @@ def test_compressed_psum_single_pod_identity_ish():
 def test_error_feedback_accumulates_to_truth():
     """Over repeated steps with a CONSTANT gradient, error feedback makes
     the averaged compressed estimate converge to the true gradient."""
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",))
     rs = np.random.RandomState(2)
     g = {"w": jnp.asarray(rs.randn(128) * 1e-3, jnp.float32)}
     err = None

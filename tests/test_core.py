@@ -1,7 +1,10 @@
 """SpecController / triggers / termination / workload-model tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline CI: no PyPI access
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.termination import CRITERIA, get_criterion
 from repro.core.triggers import StreamTriggerParser

@@ -1,7 +1,10 @@
 """ElasticScheduler invariants (paper Algorithm 2) — unit + property."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline CI: no PyPI access
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.clock import EventLoop
 from repro.core.scheduler import ElasticScheduler, SchedulerConfig

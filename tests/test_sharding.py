@@ -3,13 +3,13 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_abstract_mesh, make_mesh
 from repro.distributed.sharding import ShardCtx, TRAIN_RULES, SERVE_RULES
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_spec_basic(mesh):
@@ -33,9 +33,7 @@ def test_spec_drops_missing_mesh_axes(mesh):
 
 def test_sized_spec_divisibility(mesh):
     # AbstractMesh carries shape without needing 8 real devices
-    big = jax.sharding.AbstractMesh(
-        (2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    big = make_abstract_mesh((2, 4), ("data", "model"))
     ctx = ShardCtx(mesh=big, rules=TRAIN_RULES)
     # heads=6 over model=4: not divisible -> replicated
     spec = ctx._sized_spec(("heads", "head_dim"), (6, 64))
