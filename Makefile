@@ -7,11 +7,13 @@
 #                  kernel-optimization task
 #   make serve   - continuous-batched real-model serving demo with
 #                  speculative forks + two-tier prefix cache
+#   make bench-smoke - work-stealing scheduler table on a reduced grid
+#                  (3 workflows, 4 devices, 10 iterations)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 smoke serve
+.PHONY: tier1 smoke serve bench-smoke
 
 tier1:
 	$(PY) -m pytest -x -q
@@ -21,3 +23,6 @@ smoke:
 
 serve:
 	$(PY) examples/serve_spec.py
+
+bench-smoke:
+	$(PY) -m benchmarks.table_work_stealing --smoke

@@ -21,6 +21,7 @@ MODULES = [
     "fig11_feedback",
     "fig12_inflight_specgen",
     "table4_utilization",
+    "table_work_stealing",
     "table5_breakdown",
     "table6_kernel_speedup",
     "table7_tokens",

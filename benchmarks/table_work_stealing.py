@@ -1,0 +1,61 @@
+"""Work-stealing teeth (ROADMAP item) — steal rate & pool utilization.
+
+The BEYOND-PAPER ``SchedulerConfig.work_stealing`` knob lets an idle
+device serve the other pool's queue within an iteration (the paper only
+rebalances between iterations).  This table measures what that buys on
+the paper's evaluation setting — the 10-workflow shared pool — against
+the static one-GPU-per-phase split and the elastic (Algorithm 2) split:
+
+    steal_rate   fraction of dispatches an idle device served from the
+                 OTHER pool's queue (0 when stealing is off),
+    util_any     paper Table-4 utilization (fraction of E2E time >= 1
+                 device busy),
+    util_devsec  device-seconds utilization (busy / devices*elapsed).
+
+Run standalone (``python -m benchmarks.table_work_stealing``), via
+``make bench-smoke`` (reduced grid), or as part of benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks._data import SEED, T10, timed
+from repro.search.driver import run_shared_pool
+
+GRID = [  # (label, scheduler_mode, work_stealing)
+    ("static", "static", False),
+    ("static_steal", "static", True),
+    ("elastic", "elastic", False),
+    ("elastic_steal", "elastic", True),
+]
+
+
+def rows(iterations: int = 100, tasks=None, devices: int = 10):
+    tasks = list(T10 if tasks is None else tasks)
+    out = []
+    for label, mode, ws in GRID:
+        (sched, _ctls), us = timed(
+            run_shared_pool, tasks, model="glm", iterations=iterations,
+            devices=devices, seed=SEED, scheduler_mode=mode,
+            work_stealing=ws)
+        out.append((f"table_ws_steal_rate_{label}", us,
+                    round(sched.steal_rate, 4)))
+        out.append((f"table_ws_steals_{label}", us, sched.steals))
+        out.append((f"table_ws_util_any_{label}", us,
+                    round(sched.utilization_any(), 4)))
+        out.append((f"table_ws_util_devsec_{label}", us,
+                    round(sched.utilization(), 4)))
+    return out
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    print("name,us_per_call,derived")
+    kw = (dict(iterations=10, tasks=T10[:3], devices=4)
+          if smoke else {})
+    for name, us, derived in rows(**kw):
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

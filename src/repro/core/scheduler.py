@@ -71,6 +71,9 @@ class ElasticScheduler:
         self.timeline: List[tuple] = []      # (t, inflight_val, inflight_prof)
         self.completed: List[Request] = []
         self.aborted: List[Request] = []
+        self.dispatched = 0                  # requests started on a device
+        self.steals = 0                      # ...from the OTHER pool's queue
+        self.steals_by_pool = {"validation": 0, "profiling": 0}
         self._t0 = loop.now
         self._set_split(*self._initial_split())
 
@@ -167,12 +170,17 @@ class ElasticScheduler:
                     other = ("profiling" if kind == "validation"
                              else "validation")
                     req = self._pick(other)
+                    if req is not None:
+                        # an idle `kind` device served the other pool
+                        self.steals += 1
+                        self.steals_by_pool[kind] += 1
                 if req is None:
                     continue
                 self._start(d, req)
                 progressed = True
 
     def _start(self, d: _Device, req: Request) -> None:
+        self.dispatched += 1
         d.busy = True
         d.req = req
         d.busy_since = self.loop.now
@@ -238,6 +246,11 @@ class ElasticScheduler:
         if prev_busy and t_end > prev_t:
             busy_t += t_end - prev_t
         return busy_t / max(t_end - self._t0, 1e-9)
+
+    @property
+    def steal_rate(self) -> float:
+        """Fraction of dispatches served cross-pool (benchmarks table)."""
+        return self.steals / max(self.dispatched, 1)
 
     @property
     def idle_val(self) -> int:

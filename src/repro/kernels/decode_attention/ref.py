@@ -8,15 +8,31 @@ import jax.numpy as jnp
 
 
 def decode_attention_ref(q, k, v, cache_len):
-    """q (B,H,Dh); k/v (B,S,KV,Dh)."""
+    """q (B,H,Dh); k/v (B,S,KV,Dh); cache_len scalar or (B,) per-row."""
     B, H, Dh = q.shape
     S, KV = k.shape[1], k.shape[2]
     G = H // KV
     qg = q.reshape(B, KV, G, Dh)
     s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) / math.sqrt(Dh)
-    valid = jnp.arange(S) < cache_len
-    s = jnp.where(valid[None, None, None], s, -1e30)
+    clen = jnp.asarray(cache_len, jnp.int32).reshape(-1, 1)   # (B|1, 1)
+    valid = jnp.arange(S)[None, :] < clen
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(jnp.float32))
     return o.reshape(B, H, Dh).astype(q.dtype)
+
+
+def decode_attention_paged_ref(q, k_pages, v_pages, block_table,
+                               cache_lens):
+    """Paged oracle: gather the block table, then the dense oracle.
+
+    q (B,H,Dh); k/v_pages (num_pages, page_size, KV, Dh);
+    block_table (B, n_blocks) page ids in position order;
+    cache_lens (B,) valid positions per row.
+    """
+    B = q.shape[0]
+    KV, Dh = k_pages.shape[2], k_pages.shape[3]
+    k = k_pages[block_table].reshape(B, -1, KV, Dh)
+    v = v_pages[block_table].reshape(B, -1, KV, Dh)
+    return decode_attention_ref(q, k, v, cache_lens)

@@ -44,6 +44,12 @@ def serve_batch(arch: str = "qwen2-1.5b", *, num_requests: int = 8,
         print(f"[serve] {num_requests} requests x {max_new} tokens "
               f"in {dt:.2f}s ({num_requests*max_new/dt:.1f} tok/s, "
               f"{eng.decode_dispatches} batched dispatches)")
+        print(f"[serve] admission: {eng.suffix_prefill_rows} rows in "
+              f"{eng.suffix_prefill_dispatches} bucketed prefill "
+              f"dispatches ({eng.admission_dispatches_saved} saved); "
+              f"paged KV: {eng.pool.pages_in_use} pages in use "
+              f"({eng.cache_bytes()} B), {eng.pool.page_copies} CoW "
+              f"copies")
         print(f"[serve] prefix cache: hits={store.stats.hits} "
               f"misses={store.stats.misses} "
               f"tokens_reused={store.stats.tokens_reused} "

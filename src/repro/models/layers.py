@@ -319,6 +319,55 @@ def attention(cfg, p, x, positions, shard, runtime: Runtime,
     return shard(y, "act_batch", "act_seq", None), new_cache
 
 
+def attention_paged(cfg, p, x, positions, shard, runtime: Runtime,
+                    arenas, block_table, write_active=None):
+    """Decode attention against the PAGED cache (serving.pagepool).
+
+    x (B,1,D); ``arenas`` = {"k","v"} (num_pages, page_size, KV, Dh) and
+    "kv_pos" (num_pages, page_size); ``block_table`` (B, n_blocks) maps
+    block i of row b to the arena page holding positions
+    [i*page_size, (i+1)*page_size).  The fresh K/V is scattered into
+    page ``block_table[b, pos//page_size]`` at slot ``pos % page_size``
+    (rows with ``write_active`` False scatter out of range and DROP —
+    their pages stay untouched), then attention runs over the block
+    table's gathered pages through the same ``attend`` core as the
+    dense path: gathered slots are in position order and the extra
+    padding slots are EMPTY, so the masked-softmax contributions are
+    exact zeros and the dense/paged paths agree bitwise.
+
+    Returns (out, new_arenas).
+    """
+    B, S, _ = x.shape
+    assert S == 1, "paged attention is the decode path (use prefill + " \
+                   "pagepool.write_rows for prompt ingestion)"
+    q, k, v = _qkv(cfg, p, x, positions, shard)
+    sdt = jnp.dtype(runtime.score_dtype)
+    num_pages, ps = arenas["kv_pos"].shape
+    pos = positions[:, 0]
+    page = jnp.take_along_axis(block_table, (pos // ps)[:, None],
+                               axis=1)[:, 0]
+    if write_active is not None:
+        page = jnp.where(write_active, page, num_pages)     # drop writes
+    slot = pos % ps
+    new = {
+        "k": arenas["k"].at[page, slot].set(
+            k[:, 0].astype(arenas["k"].dtype), mode="drop"),
+        "v": arenas["v"].at[page, slot].set(
+            v[:, 0].astype(arenas["v"].dtype), mode="drop"),
+        "kv_pos": arenas["kv_pos"].at[page, slot].set(pos, mode="drop"),
+    }
+    KV, Dh = new["k"].shape[2], new["k"].shape[3]
+    ck = new["k"][block_table].reshape(B, -1, KV, Dh)
+    cv = new["v"][block_table].reshape(B, -1, KV, Dh)
+    kv_pos = new["kv_pos"][block_table].reshape(B, -1)
+    out = attend(q, ck, cv, positions, kv_pos, 0, shard, sdt)
+    y = jnp.einsum("bshk,hkd->bsd", out,
+                   getattr(shard, "use", lambda w: w)(p["wo"]))
+    if cfg.attn_out_bias:
+        y = y + p["bo"].astype(y.dtype)
+    return shard(y, "act_batch", "act_seq", None), new
+
+
 # ----------------------------------------------------------------------- MLP
 def mlp(cfg: ModelConfig, p, x, shard):
     use = getattr(shard, "use", lambda w: w)

@@ -20,21 +20,31 @@ from repro.distributed.sharding import NO_SHARD, ShardCtx
 # ------------------------------------------------------------------ blocks
 def block_apply(cfg: ModelConfig, kind: str, p, x, positions, shard,
                 runtime: Runtime, cache=None, decode: bool = False,
-                q_offset: int = 0
+                q_offset: int = 0, block_table=None, write_active=None
                 ) -> Tuple[jnp.ndarray, Dict[str, Any], Any]:
     """One block, any mode: forward (cache=None), prefill (cache given),
     decode (cache given, decode=True, S==1).  Attention needs no decode
     flag at all — forward, prefill and decode are the SAME unified path
     (layers.attention); only the recurrent families keep a specialized
-    single-step kernel.  Returns (x, aux_losses, new_cache)."""
+    single-step kernel.  With ``block_table`` given (paged decode), the
+    attention cache is the page-pool arena set instead of a dense row
+    and inactive rows mask their write via ``write_active`` (the arena
+    has no per-row leading axis to reselect).  Returns
+    (x, aux_losses, new_cache)."""
     aux: Dict[str, Any] = {}
     new_cache = None
     window = cfg.local_window if kind == "local" else 0
     if kind in ("attn", "local", "moe"):
-        h, new_cache = L.attention(cfg, p["attn"],
-                                   L.apply_norm(cfg, p["ln1"], x),
-                                   positions, shard, runtime, window, cache,
-                                   q_offset)
+        if block_table is not None and kind != "local":
+            h, new_cache = L.attention_paged(
+                cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
+                positions, shard, runtime, cache, block_table,
+                write_active)
+        else:
+            h, new_cache = L.attention(cfg, p["attn"],
+                                       L.apply_norm(cfg, p["ln1"], x),
+                                       positions, shard, runtime, window,
+                                       cache, q_offset)
         x = x + h
         if kind == "moe":
             m, aux = L.moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x),
@@ -337,7 +347,7 @@ def cache_logical_axes(cfg: ModelConfig):
 # ------------------------------------------------------------- serve steps
 def decode_step(cfg: ModelConfig, params, tokens, cache, pos,
                 runtime: Runtime = Runtime(), shard: ShardCtx = NO_SHARD,
-                active=None):
+                active=None, block_tables=None):
     """One decode step for a (possibly continuous) batch.
 
     tokens (B,1) int32; ``pos`` is the current position of each row —
@@ -347,6 +357,13 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, pos,
     UNCHANGED — their cache/recurrent state is re-selected from the old
     cache — so one fixed-shape jitted dispatch serves a fluctuating set
     of live generations.
+
+    ``block_tables`` (B, n_blocks) switches global-attention layers to
+    the PAGED cache: those entries of ``cache`` are page-pool arenas
+    (serving.pagepool) addressed through the per-row block table, and
+    inactive rows simply drop their arena write instead of re-selecting
+    (the arena's leading axis is pages, not rows).  Local-window,
+    SSD and RG-LRU layers keep their dense per-row state either way.
     """
     B = tokens.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -355,9 +372,12 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, pos,
     x, _ = embed_inputs(cfg, params, tokens, None, positions, shard)
     new_cache = []
     for kind, p, c in zip(cfg.layer_kinds(), params["layers"], cache):
+        paged = block_tables is not None and kind in ("attn", "moe")
         x, _, c2 = block_apply(cfg, kind, p, x, positions, shard, runtime,
-                               cache=c, decode=True)
-        if active is not None:
+                               cache=c, decode=True,
+                               block_table=block_tables if paged else None,
+                               write_active=active if paged else None)
+        if active is not None and not paged:
             c2 = jax.tree.map(
                 lambda n, o: jnp.where(
                     active.reshape((B,) + (1,) * (n.ndim - 1)), n, o),

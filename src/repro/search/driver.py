@@ -95,8 +95,10 @@ def run_engine_pool(arch: str = "qwen2-1.5b", n_workflows: int = 10,
     """The paper's serving-side setting on the REAL model: N concurrent
     kernel-refinement workflows (one reasoning generation each, plus
     speculative forks mid-stream) share ONE continuous-batched engine.
-    Every step is a single jitted dispatch over all live rows; forks
-    copy-on-write their parent's row with zero prefill recompute.
+    Every step is a single jitted dispatch over all live rows with
+    on-device sampling; forks share their parent's KV pages via
+    block-table copy (zero KV copies, zero prefill recompute) and
+    pages copy-on-write lazily as children diverge.
 
     Returns (engine, {gen_id: emitted tokens}).
     """

@@ -1,4 +1,4 @@
-"""Generation engine: continuous-batched decode with copy-on-write forks.
+"""Generation engine: continuous-batched decode over a PAGED KV cache.
 
 This is the real-model path of the system (examples/serve_spec.py runs
 it on a reduced config).  SpecGen's SpecController talks to engines
@@ -6,31 +6,43 @@ through the ``GenerationStream`` protocol, which the simulated LLM in
 ``repro.search.llm_sim`` also implements — the controller cannot tell
 the difference (the paper's "no changes to the underlying LLM" claim).
 
-Architecture
-------------
-All live generations share ONE pre-allocated decode cache of
-``max_batch`` rows; every generation owns a row (slot).  Each step is a
-single fixed-shape jitted dispatch over the whole batch — per-row
-positions and an ``active`` mask let generations sit at different
-depths and admit/retire without recompilation (continuous batching).
-Because the model's forward/prefill/decode all lower to the same
-attention path (repro.models.layers.attend), a row's trajectory is
-bit-identical whichever batch composition or slot it executes in —
-which is what makes speculative forks trustworthy:
+Architecture (DESIGN.md §Paged-KV)
+----------------------------------
+Attention K/V lives in a global page pool (``serving.pagepool``): each
+live generation owns a *block table* — an ordered page-id list covering
+its positions — instead of a dense ``(max_len,)`` cache row, so
 
-  * ``fork()`` copies the parent's row inside the donated cache buffer
-    (one in-place row write; the pre-allocated pool means only the
-    child's divergent suffix consumes new capacity), and
-  * suspended prefixes are shared STRUCTURALLY through the two-tier
-    ``PrefixCacheStore`` (immutable jax arrays: a stored entry serves
-    any number of later admissions; partial hits suffix-prefill only
-    the divergent remainder).
+  * ``fork()`` is a block-table copy plus refcount bumps: ZERO KV bytes
+    move at fork time.  Pages copy lazily (copy-on-write at page
+    granularity) only when a writer reaches a page some other holder —
+    parent, sibling fork, or stored prefix — still references, so B
+    forks of one parent cost ``unique divergent pages``, not
+    ``B * max_len``;
+  * suspended prefixes are parked in the two-tier ``PrefixCacheStore``
+    as PAGE LISTS (``pagepool.PagedPrefix``): stored prefixes sharing a
+    reasoning stem share the stem's pages, local->remote migration
+    moves pages rather than rows, and a partial hit restores shared
+    pages and suffix-prefills only into fresh ones.
+
+Every decode step is still ONE fixed-shape jitted dispatch over the
+whole ``max_batch`` batch — per-row positions, an ``active`` mask and
+the padded block-table matrix let generations sit at different depths
+and admit/retire without recompilation — and now the dispatch also
+samples ON DEVICE (per-row fold-in keys; serving.sampler), so only a
+(B,) token vector crosses the host boundary per step.  Admissions are
+bucketed: pending generations with the same (cached-prefix, suffix)
+shape batch into one suffix-prefill dispatch.  Because the model's
+forward/prefill/decode all lower to the same attention core
+(repro.models.layers.attend) and paged gathers only append exact-zero
+masked slots, a row's trajectory is bit-identical whichever batch
+composition, slot, or page placement it executes in — which is what
+makes speculative forks trustworthy.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -41,7 +53,9 @@ from repro.models.config import ModelConfig
 from repro.models.layers import Runtime
 from repro.distributed.sharding import NO_SHARD
 from repro.serving.kvcache import PrefixCacheStore, tree_bytes
-from repro.serving.sampler import sample_token
+from repro.serving.pagepool import PagePool, PagedPrefix, \
+    PagePoolExhausted, _ceil_div, _pow2_pad
+from repro.serving.sampler import sample_tokens
 
 
 @dataclasses.dataclass
@@ -49,7 +63,7 @@ class Generation:
     gen_id: int
     tokens: List[int]                 # full context (prompt + emitted)
     prompt_len: int
-    slot: int = -1                    # row in the shared decode cache
+    slot: int = -1                    # row in the batched dispatch
     pos: int = 0
     status: str = "pending"           # pending|running|done|cancelled
     max_new_tokens: int = 64
@@ -58,7 +72,8 @@ class Generation:
     parent: Optional[int] = None      # forked from (None = root)
     emitted: List[int] = dataclasses.field(default_factory=list)
     rng_seed: int = 0
-    final_row: Any = None             # retained row when not auto-parked
+    pages: List[int] = dataclasses.field(default_factory=list)
+    final_prefix: Any = None          # retained PagedPrefix when not parked
 
 
 class Engine:
@@ -66,10 +81,17 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, runtime: Runtime = Runtime(),
                  max_len: int = 512, cache_store: PrefixCacheStore = None,
-                 store_prefixes: bool = True, max_batch: int = 8):
+                 store_prefixes: bool = True, max_batch: int = 8,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 top_k: int = 0):
         self.cfg, self.params, self.runtime = cfg, params, runtime
         self.max_len = max_len
         self.max_batch = max_batch
+        self.top_k = top_k
+        self.pool = PagePool(cfg, max_batch=max_batch, max_len=max_len,
+                             page_size=page_size, num_pages=num_pages,
+                             cache_dtype=runtime.cache_dtype)
+        self.pool.reclaim = self._reclaim_pages
         # NOTE: `cache_store or ...` would discard an EMPTY store
         # (PrefixCacheStore defines __len__) — compare to None instead
         self.store = cache_store if cache_store is not None else \
@@ -78,31 +100,40 @@ class Engine:
         self.store_prefixes = store_prefixes
         self._gens: Dict[int, Generation] = {}
         self._ids = itertools.count()
-        self._cache = None                      # (max_batch, max_len) rows
+        self._cache = None                      # pagepool cache pytree
         self._free: List[int] = list(range(max_batch))
         self.tokens_prefilled = 0
         self.tokens_decoded = 0
         self.decode_dispatches = 0              # jitted decode calls
+        self.suffix_prefill_dispatches = 0      # batched admission calls
+        self.suffix_prefill_rows = 0            # generations admitted via them
 
         cfg_, rt = cfg, runtime
         self._prefills: Dict[int, Any] = {}     # start_pos -> jitted fn
-        # the one decode dispatch: whole batch, per-row positions,
-        # active mask; the cache is donated (updated in place)
+        # THE decode dispatch: whole batch, per-row positions/block
+        # tables, active mask, fused on-device sampling; the cache
+        # (arenas + dense rows) is donated and updated in place
         self._decode = jax.jit(
-            lambda p, tok, cache, pos, act: T.decode_step(
-                cfg_, p, tok, cache, pos, rt, NO_SHARD, active=act),
+            lambda p, tok, cache, bt, pos, act, temp, seeds: (
+                lambda lg_c: (sample_tokens(lg_c[0], temp, seeds, pos,
+                                            top_k=top_k), lg_c[1])
+            )(T.decode_step(cfg_, p, tok, cache, pos, rt, NO_SHARD,
+                            active=act, block_tables=bt)),
             donate_argnums=(2,))
-        self._admit_row = jax.jit(
-            lambda full, row, i: jax.tree.map(
-                lambda f, r: f.at[i].set(r[0]), full, row),
-            donate_argnums=(0,))
-        self._copy_row = jax.jit(
-            lambda full, src, dst: jax.tree.map(
-                lambda a: a.at[dst].set(a[src]), full),
-            donate_argnums=(0,))
-        self._read_row = jax.jit(
-            lambda full, i: jax.tree.map(
-                lambda a: jax.lax.dynamic_slice_in_dim(a, i, 1, 0), full))
+        dense = set(self.pool.dense_layers)
+        if dense:
+            self._dense_copy = jax.jit(
+                lambda cache, s, d: [
+                    jax.tree.map(lambda a: a.at[d].set(a[s]), c)
+                    if i in dense else c for i, c in enumerate(cache)],
+                donate_argnums=(0,))
+            self._dense_admit = jax.jit(
+                lambda cache, rows, slots: [
+                    jax.tree.map(
+                        lambda full, r: full.at[slots].set(
+                            r[: slots.shape[0]]), c, rows[i])
+                    if i in dense else c for i, c in enumerate(cache)],
+                donate_argnums=(0,))
 
     # ----------------------------------------------------------- lifecycle
     def submit(self, prompt_tokens: List[int], *, max_new_tokens: int = 64,
@@ -127,23 +158,29 @@ class Engine:
              temperature: float = 0.7, seed: int = 0) -> int:
         """Fork a speculative generation from the parent's CURRENT prefix.
 
-        Copy-on-write at row granularity: one in-place row copy inside
-        the shared (pre-allocated) cache claims a slot for the child;
-        no prefill recompute, no new cache allocation — the paper's
-        prefix-conditioned non-reasoning generation.
+        Block-table copy + per-page refcount bumps: ZERO KV-array
+        copies, zero prefill recompute — the divergent suffix only
+        starts consuming pages when the child (or parent) next writes
+        into a shared page and copy-on-write peels that one page off.
+        (Recurrent / ring-buffer layers hold fixed-size per-row state —
+        a single "page" — which IS copied here; attention KV is not.)
         """
         parent = self._gens[parent_id]
         assert parent.status == "running", "fork requires a live parent"
         gid = next(self._ids)
         slot = self._claim_slot()
-        self._cache = self._copy_row(
-            self._cache, jnp.int32(parent.slot), jnp.int32(slot))
+        pages = list(parent.pages)
+        self.pool.ref(pages)
+        if self.pool.dense_layers:
+            self._cache = self._dense_copy(
+                self._cache, jnp.int32(parent.slot), jnp.int32(slot))
         child = Generation(
             gen_id=gid, tokens=list(parent.tokens),
             prompt_len=len(parent.tokens), slot=slot,
             pos=parent.pos, status="running",
             max_new_tokens=max_new_tokens, temperature=temperature,
-            reasoning=False, parent=parent_id, rng_seed=seed)
+            reasoning=False, parent=parent_id, rng_seed=seed,
+            pages=pages)
         self._gens[gid] = child
         self.store.stats.tokens_reused += parent.pos
         return gid
@@ -156,23 +193,30 @@ class Engine:
     def suspend_to_store(self, gen_id: int) -> None:
         """Park a generation's prefix in the cache store (local tier; the
         store migrates it remote under memory pressure).  Works for live
-        generations (row read from the batch cache) and finished ones
-        (row retained at retirement when it wasn't auto-parked)."""
+        generations (pages shared with the running row) and finished
+        ones (prefix retained at retirement when it wasn't auto-parked).
+        """
         g = self._gens[gen_id]
-        if g.slot >= 0:
-            row = self._read_row(self._cache, jnp.int32(g.slot))
-        elif g.final_row is not None:
-            row = g.final_row
+        if g.slot >= 0 and g.pos > 0:
+            payload = self._capture_prefix(g)
+        elif g.final_prefix is not None:
+            payload, g.final_prefix = g.final_prefix, None
         else:
             return
-        self.store.put(g.tokens[: g.pos], row, length=g.pos)
+        self.store.put(g.tokens[: g.pos], payload, length=g.pos)
+
+    def _reclaim_pages(self, need: int) -> None:
+        """Page-pool pressure: shed LRU stored prefixes (they migrate to
+        the remote tier — host memory — or evict) until ``need`` pages
+        are free or the local store tier is empty.  Live generations'
+        pages are never touched."""
+        while self.pool.pages_free < need and self.store.shed_oldest():
+            pass
 
     # ----------------------------------------------------------- slot mgmt
     def _ensure_cache(self) -> None:
         if self._cache is None:
-            self._cache = T.init_cache(self.cfg, self.max_batch,
-                                       self.max_len,
-                                       self.runtime.cache_dtype)
+            self._cache = self.pool.init_cache()
 
     def _claim_slot(self) -> int:
         if not self._free:
@@ -182,56 +226,178 @@ class Engine:
         self._ensure_cache()
         return self._free.pop(0)
 
+    def _capture_prefix(self, g: Generation) -> PagedPrefix:
+        n_pages = _ceil_div(g.pos, self.pool.page_size)
+        return PagedPrefix.capture(self, g.pages[:n_pages],
+                                   self._read_dense_row(g.slot), g.pos)
+
+    def _read_dense_row(self, slot: int):
+        if not self.pool.dense_layers:
+            return None
+        dense = set(self.pool.dense_layers)
+        return [jax.tree.map(lambda a: a[slot: slot + 1], c)
+                if i in dense else None
+                for i, c in enumerate(self._cache)]
+
     def _retire(self, g: Generation, status: str) -> None:
         g.status = status
         if g.slot >= 0:
             if status == "done" and g.pos > 0:
                 # the finished prefix must survive the row recycle:
-                # auto-park it (later forks/extensions restore instead
-                # of re-prefilling), or retain it on the generation so
-                # an explicit suspend_to_store still works
-                row = self._read_row(self._cache, jnp.int32(g.slot))
+                # auto-park its pages (later forks/extensions restore
+                # instead of re-prefilling), or retain them on the
+                # generation so an explicit suspend_to_store still works
+                payload = self._capture_prefix(g)
                 if self.store_prefixes:
-                    self.store.put(g.tokens[: g.pos], row, length=g.pos)
+                    self.store.put(g.tokens[: g.pos], payload,
+                                   length=g.pos)
                 else:
-                    g.final_row = row
+                    g.final_prefix = payload
+            if g.pages:
+                self.pool.release(g.pages)
+                g.pages = []
             self._free.append(g.slot)
             g.slot = -1
 
     # ----------------------------------------------------------- admission
-    def _admit(self, g: Generation) -> None:
-        """Prefill all but the last context token; decode consumes it.
+    def _admit_all(self, pending: Sequence[Generation]) -> None:
+        """Admit pending generations, BUCKETED: same (cached-prefix len,
+        prompt len) admissions share one batched suffix-prefill dispatch
+        (row counts are padded to powers of two so trace counts stay
+        bounded on bursty arrivals).  The prefix store is consulted
+        first: a full hit restores shared pages with zero recompute; a
+        partial hit suffix-prefills only the divergent remainder into
+        fresh pages."""
+        take = list(pending)[: len(self._free)]
+        if not take:
+            return
+        self._ensure_cache()
+        groups: Dict[Tuple[int, int], List] = {}
+        for g in take:
+            n = g.prompt_len - 1        # decode consumes the last token
+            if n == 0:
+                payload, clen = None, 0
+            else:
+                payload, clen = self.store.get_longest(g.tokens[:n])
+            if payload is not None:
+                pages, extra = payload.acquire()
+            else:
+                pages, extra, clen = [], None, 0
+            if clen >= n:                           # full hit / 1-token
+                self._admit_ready(g, n, pages, extra)
+            else:
+                self.store.note_recompute(n - clen)
+                groups.setdefault((clen, n), []).append(
+                    (g, pages, extra))
+        ordered = sorted(groups.items())
+        for gi, ((clen, n), items) in enumerate(ordered):
+            try:
+                self._admit_group(clen, n, items)
+            except PagePoolExhausted:
+                # _admit_group rolled its own items back; drop the
+                # acquired store refs of the still-unprocessed groups
+                # too so exhaustion never strands refcounts (the gens
+                # stay "pending" and can re-admit after pressure eases)
+                for _, later in ordered[gi + 1:]:
+                    for g, pages, _extra in later:
+                        if pages:
+                            self.pool.release(pages)
+                raise
 
-        Invariant maintained by ``step``:  g.pos == len(g.tokens) - 1,
-        i.e. the cache row holds tokens[:pos] and tokens[pos] is the
-        next token to feed.  The prefix store is consulted first: a
-        full hit restores the row with zero recompute; a partial hit
-        suffix-prefills only the divergent remainder.
-        """
-        n = g.prompt_len - 1
-        slot = self._claim_slot()
-        if n == 0:                              # single-token prompt:
-            cached, clen = None, 0              # nothing to prefill
-        else:
-            cached, clen = self.store.get_longest(g.tokens[:n])
-        row = cached if cached is not None \
-            else T.init_cache(self.cfg, 1, self.max_len,
-                              self.runtime.cache_dtype)
-        if clen < n:                            # miss / partial hit
-            self.store.note_recompute(n - clen)
-            toks = jnp.asarray([g.tokens[clen:n]], jnp.int32)
-            _, row = self._suffix_prefill(clen)(self.params, toks, row)
-            self.tokens_prefilled += n - clen
-            if self.store_prefixes:
-                self.store.put(g.tokens[:n], row, length=n)
-        self._cache = self._admit_row(self._cache, row, jnp.int32(slot))
+    def _admit_ready(self, g: Generation, n: int, pages, extra) -> None:
+        g.pages = pages
+        slot = self._free.pop(0)
+        if extra is not None and self.pool.dense_layers:
+            self._cache = self._dense_admit(
+                self._cache, extra, jnp.asarray([slot], jnp.int32))
         g.slot, g.pos, g.status = slot, n, "running"
+
+    def _admit_group(self, clen: int, n: int, items) -> None:
+        pool, ps = self.pool, self.pool.page_size
+        W = pool.pages_per_row
+        G = len(items)
+        Gp = _pow2_pad(G)
+        first = clen // ps
+        n_new = _ceil_div(n, ps) - first
+        fresh = []
+        try:
+            for _ in items:
+                fresh.append(pool.alloc(n_new))
+        except PagePoolExhausted:
+            # transactional rollback: earlier items' fresh pages and
+            # every acquired store ref go back, or cancel/retire could
+            # never actually free the pool (orphaned refcounts)
+            for f in fresh:
+                pool.release(f)
+            for _g, pages, _extra in items:
+                if pages:
+                    pool.release(pages)
+            raise
+        self._cache = pool.flush_scrub(self._cache)
+        page_mat = np.zeros((Gp, W), np.int64)      # pad: null page 0
+        toks = np.zeros((Gp, n - clen), np.int32)
+        for i, (g, pages, _) in enumerate(items):
+            page_mat[i, : len(pages)] = pages
+            toks[i] = g.tokens[clen:n]
+        rows = pool.gather_rows(self._cache, page_mat,
+                                np.full((Gp,), clen, np.int64))
+        rows = self._overlay_extras(rows, items)
+        _, rows = self._suffix_prefill(clen)(
+            self.params, jnp.asarray(toks), rows)
+        self.suffix_prefill_dispatches += 1
+        self.suffix_prefill_rows += G
+        write_mat = np.full((Gp, n_new), pool.num_pages, np.int64)
+        for i in range(G):
+            write_mat[i] = fresh[i]
+        self._cache = pool.write_rows(self._cache, rows, write_mat, first)
+        slots = []
+        for i, (g, pages, _) in enumerate(items):
+            if pages[first:]:
+                # the shared boundary page was merged into a fresh page
+                # by the prefill write — drop the acquired ref on it
+                pool.release(pages[first:])
+            g.pages = pages[:first] + fresh[i]
+            slot = self._free.pop(0)
+            slots.append(slot)
+            g.slot, g.pos, g.status = slot, n, "running"
+        if pool.dense_layers:
+            self._cache = self._dense_admit(
+                self._cache, rows, jnp.asarray(slots, jnp.int32))
+        self.tokens_prefilled += (n - clen) * G
+        if self.store_prefixes:
+            for i, (g, _, _) in enumerate(items):
+                payload = PagedPrefix.capture(
+                    self, g.pages, self._slice_dense_rows(rows, i), n)
+                self.store.put(g.tokens[:n], payload, length=n)
+
+    def _overlay_extras(self, rows, items):
+        """Write stored recurrent/ring state into the gathered row batch
+        (no-op for pure-attention stacks)."""
+        dense = self.pool.dense_layers
+        if not dense:
+            return rows
+        for i, (_, _, extra) in enumerate(items):
+            if extra is None:
+                continue
+            for li in dense:
+                rows[li] = jax.tree.map(
+                    lambda full, e: full.at[i].set(e[0]),
+                    rows[li], extra[li])
+        return rows
+
+    def _slice_dense_rows(self, rows, i: int):
+        if not self.pool.dense_layers:
+            return None
+        dense = set(self.pool.dense_layers)
+        return [jax.tree.map(lambda a: a[i: i + 1], c)
+                if li in dense else None
+                for li, c in enumerate(rows)]
 
     def _suffix_prefill(self, start_pos: int):
         """Jitted prefill continuing from ``start_pos`` (0 = cold).
         Memoized per offset: jax.jit caches executables on the wrapper
-        object, so a fresh lambda per call would recompile every
-        admission."""
+        object (one per (rows, suffix) shape), so a fresh lambda per
+        call would recompile every admission."""
         fn = self._prefills.get(start_pos)
         if fn is None:
             cfg, rt = self.cfg, self.runtime
@@ -241,27 +407,62 @@ class Engine:
                     shard=NO_SHARD))
         return fn
 
+    @property
+    def admission_dispatches_saved(self) -> int:
+        """Suffix-prefill dispatches bucketing avoided vs one-at-a-time
+        admission (each batched group of G rows saves G-1)."""
+        return self.suffix_prefill_rows - self.suffix_prefill_dispatches
+
     # ----------------------------------------------------------- execution
+    def _prepare_writes(self, gens: Sequence[Generation]) -> None:
+        """Make every writer's target page exclusively owned BEFORE the
+        dispatch: append a fresh page at a page boundary, and
+        copy-on-write a page some other holder still references.  All
+        page copies of the step batch into one scatter."""
+        pool, ps = self.pool, self.pool.page_size
+        srcs, dsts = [], []
+        for g in gens:
+            wp = g.pos // ps
+            if wp >= len(g.pages):
+                g.pages.append(pool.alloc(1)[0])
+            elif pool.refcount[g.pages[wp]] > 1:
+                new = pool.alloc(1)[0]
+                srcs.append(g.pages[wp])
+                dsts.append(new)
+                pool.release([g.pages[wp]])
+                g.pages[wp] = new
+        self._cache = pool.flush_scrub(self._cache)
+        if srcs:
+            self._cache = pool.copy_pages(self._cache, srcs, dsts)
+
     def _dispatch(self, gens: Sequence[Generation]) -> None:
-        """ONE jitted decode step advancing every generation in ``gens``."""
-        B = self.max_batch
+        """ONE jitted decode step advancing every generation in ``gens``
+        (decode + on-device sampling fused)."""
+        self._prepare_writes(gens)
+        B, W = self.max_batch, self.pool.pages_per_row
         tok = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
         act = np.zeros((B,), bool)
+        temp = np.zeros((B,), np.float32)
+        seeds = np.zeros((B,), np.uint32)
+        bt = np.zeros((B, W), np.int32)             # pad: null page 0
         for g in gens:
             tok[g.slot, 0] = g.tokens[g.pos]
             pos[g.slot] = g.pos
             act[g.slot] = True
-        logits, self._cache = self._decode(
-            self.params, jnp.asarray(tok), self._cache,
-            jnp.asarray(pos), jnp.asarray(act))
-        logits = np.asarray(logits)
+            temp[g.slot] = g.temperature
+            seeds[g.slot] = np.uint32(g.rng_seed & 0xFFFFFFFF)
+            bt[g.slot, : len(g.pages)] = g.pages
+        nxt, self._cache = self._decode(
+            self.params, jnp.asarray(tok), self._cache, jnp.asarray(bt),
+            jnp.asarray(pos), jnp.asarray(act), jnp.asarray(temp),
+            jnp.asarray(seeds))
+        nxt = np.asarray(nxt)
         self.decode_dispatches += 1
         for g in gens:
-            nxt = sample_token(logits[g.slot], g.temperature,
-                               seed=g.rng_seed + g.pos)
-            g.tokens.append(int(nxt))
-            g.emitted.append(int(nxt))
+            t = int(nxt[g.slot])
+            g.tokens.append(t)
+            g.emitted.append(t)
             g.pos += 1
             self.tokens_decoded += 1
             if len(g.emitted) >= g.max_new_tokens or \
@@ -272,7 +473,11 @@ class Engine:
         """Advance one generation by one token; returns it (or None)."""
         g = self._gens[gen_id]
         if g.status == "pending":
-            self._admit(g)
+            if not self._free:
+                raise RuntimeError(
+                    f"engine full: {self.max_batch} rows live; retire or "
+                    f"cancel a generation before admitting another")
+            self._admit_all([g])
         if g.status != "running":
             return None
         self._dispatch([g])
@@ -280,11 +485,11 @@ class Engine:
 
     def step_all(self) -> List[int]:
         """One decode step for EVERY live generation in a single batched
-        dispatch (admitting pending ones as slots allow).  Returns the
-        gen_ids that advanced."""
-        for g in list(self._gens.values()):
-            if g.status == "pending" and self._free:
-                self._admit(g)
+        dispatch (admitting pending ones, bucketed, as slots allow).
+        Returns the gen_ids that advanced."""
+        pending = [g for g in self._gens.values() if g.status == "pending"]
+        if pending and self._free:
+            self._admit_all(pending)
         live = [g for g in self._gens.values() if g.status == "running"]
         if live:
             self._dispatch(live)
@@ -312,4 +517,12 @@ class Engine:
         return sum(g.status == "running" for g in self._gens.values())
 
     def cache_bytes(self) -> int:
-        return tree_bytes(self._cache) if self._cache is not None else 0
+        """KV bytes actually IN USE: allocated pages (shared pages count
+        once — the paged fork economics) plus the fixed-size dense rows
+        of recurrent/ring layers.  The arena reservation itself is not
+        usage, exactly like an allocator's arena."""
+        if self._cache is None:
+            return 0
+        dense = sum(tree_bytes(self._cache[i])
+                    for i in self.pool.dense_layers)
+        return self.pool.bytes_in_use + dense

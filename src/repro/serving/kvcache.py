@@ -1,16 +1,21 @@
 """Prefix KV-cache store with local/remote tiers (paper §6.2.3).
 
-JAX arrays are immutable, so *forking* a generation from a reasoning
-prefix is structural sharing — zero copy, zero tokens recomputed.  What
-costs memory is keeping suspended prefixes alive in the serving pool;
-SpecGen's insight is that the validation/profiling pool has spare memory
-that can hold them.  This module implements exactly that accounting:
+*Forking* a generation from a reasoning prefix is structural sharing —
+zero copy, zero tokens recomputed: paged engines store PAGE LISTS
+(``pagepool.PagedPrefix``), so entries extending the same reasoning
+stem share the stem's refcounted pages outright (DESIGN.md
+§Paged-store).  What costs memory is keeping suspended prefixes alive
+in the serving pool; SpecGen's insight is that the validation/profiling
+pool has spare memory that can hold them.  This module implements
+exactly that accounting:
 
   * ``local``  tier = serving-pool memory (budgeted),
   * ``remote`` tier = spare validation/profiling-pool memory (budgeted),
-  * on local pressure, entries MIGRATE local->remote (device-to-device
-    RDMA in the paper via Mooncake; here ``device_get``/``device_put``
-    between the serving device and the pool store),
+  * on local pressure (byte budget OR the page pool running dry),
+    entries MIGRATE local->remote (device-to-device RDMA in the paper
+    via Mooncake; here ``device_get``/``device_put`` between the
+    serving device and the pool store) — paged payloads move pages,
+    not whole rows, releasing their device pages immediately,
   * a fork that finds its prefix (either tier) restores the cached state
     instead of recomputing prefill — the hit/miss/recompute counters are
     what benchmarks/table5 and §8.5 measure.
@@ -64,6 +69,12 @@ class CacheStats:
     bytes_migrated: int = 0
     evictions_local: int = 0
     evictions_remote: int = 0
+    # paged payloads (serving.pagepool.PagedPrefix) only:
+    pages_stored: int = 0       # pages referenced by entries at put time
+    pages_shared: int = 0       # of those, pages some OTHER holder also
+    #                             referenced (live row, sibling entry) —
+    #                             the store-level structural sharing a
+    #                             dense-row store cannot have
 
     @property
     def hits(self) -> int:
@@ -95,11 +106,23 @@ class PrefixCacheStore:
     def remote_bytes(self) -> int:
         return self._tier_bytes(self._remote)
 
+    def _dispose(self, payload) -> None:
+        """True eviction: paged payloads must drop their page refs (the
+        pool reclaims unshared pages); plain pytrees just get GC'd."""
+        release = getattr(payload, "release", None)
+        if release is not None:
+            release()
+
     def _to_remote(self, entry: CacheEntry) -> None:
         """Migrate: move payload out of serving memory into the pool store
-        (host/device_get stands in for Mooncake RDMA on this container)."""
-        entry.payload = jax.tree.map(
-            lambda l: np.asarray(jax.device_get(l)), entry.payload)
+        (host/device_get stands in for Mooncake RDMA on this container).
+        Paged payloads move PAGES — page contents go host-side and the
+        device pages are released immediately — not whole rows."""
+        if hasattr(entry.payload, "migrate_out"):
+            entry.payload = entry.payload.migrate_out()
+        else:
+            entry.payload = jax.tree.map(
+                lambda l: np.asarray(jax.device_get(l)), entry.payload)
         entry.tier = "remote"
         self._remote[entry.key] = entry
         self._remote.move_to_end(entry.key)
@@ -110,6 +133,8 @@ class PrefixCacheStore:
         if entry.tier == "remote":
             self.stats.restores += 1
             self.stats.bytes_migrated += entry.nbytes
+            if hasattr(entry.payload, "migrate_in"):
+                return entry.payload.migrate_in()
             return jax.tree.map(jax.device_put, entry.payload)
         return entry.payload
 
@@ -123,13 +148,23 @@ class PrefixCacheStore:
                 self._to_remote(entry)
             elif migrating:
                 self.stats.evictions_local += 1
+                self._dispose(entry.payload)
             else:
                 self.stats.evictions_remote += 1
+                self._dispose(entry.payload)
 
     # ----------------------------------------------------------------- API
     def put(self, tokens, payload, *, length: Optional[int] = None) -> str:
         key = prefix_key(tokens)
-        nbytes = tree_bytes(payload)
+        nbytes = getattr(payload, "nbytes", None)
+        if nbytes is None:
+            nbytes = tree_bytes(payload)
+        old = self._local.pop(key, None) or self._remote.pop(key, None)
+        if old is not None and old.payload is not payload:
+            self._dispose(old.payload)      # re-put: drop the stale entry
+        if hasattr(payload, "shared_page_count"):
+            self.stats.pages_stored += payload.num_pages
+            self.stats.pages_shared += payload.shared_page_count()
         entry = CacheEntry(key=key, length=length or len(list(tokens)),
                            nbytes=nbytes, tier="local", payload=payload)
         self._local[key] = entry
@@ -176,10 +211,21 @@ class PrefixCacheStore:
             return e.payload, e.length
         if key in self._remote:
             e = self._remote.pop(key)
-            payload = self._restore_payload(e)
+            try:
+                payload = self._restore_payload(e)
+            except Exception:
+                self._remote[key] = e       # e.g. page-pool exhaustion:
+                raise                       # keep the entry restorable
             e.payload, e.tier = payload, "local"
-            self._local[key] = e
+            # rebalance to budget around the restored entry but NEVER
+            # evict it in this call: migrating it back out would MUTATE
+            # the payload object the caller is about to acquire (paged
+            # payloads release their device pages on migrate_out).  It
+            # may leave local transiently over budget; the next put()
+            # evicts it normally, after the caller holds its own refs.
             self._evict_until(self._local, self.local_budget, migrating=True)
+            self._local[key] = e
+            self._local.move_to_end(key)
             self.stats.hits_remote += 1
             self.stats.tokens_reused += e.length
             return payload, e.length
@@ -202,7 +248,25 @@ class PrefixCacheStore:
                               migrating=False)
             return True
         self.stats.evictions_local += 1
+        self._dispose(e.payload)
         return False
+
+    def shed_oldest(self) -> bool:
+        """Pressure hook: drop the LRU *local* entry's device residency
+        — migrate it remote when it fits (host memory, restorable), else
+        evict it.  The paged engine calls this when the page pool runs
+        dry, so stored prefixes yield pages to live generations instead
+        of starving admission.  Returns False once local is empty."""
+        if not self._local:
+            return False
+        _key, entry = self._local.popitem(last=False)
+        if self.remote_budget > 0 and \
+                entry.nbytes + self.remote_bytes <= self.remote_budget:
+            self._to_remote(entry)
+        else:
+            self.stats.evictions_local += 1
+            self._dispose(entry.payload)
+        return True
 
     def flush_to_remote(self) -> int:
         """Migrate every local entry to the remote tier (operator-driven

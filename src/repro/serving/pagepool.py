@@ -1,0 +1,435 @@
+"""Paged KV-cache pool: block tables, refcounts, copy-on-write pages.
+
+The engine's fork economics (DESIGN.md §Paged-KV) rest on this module:
+instead of one dense ``(max_batch, max_len)`` K/V row per generation,
+every attention layer owns a global arena of ``num_pages`` pages of
+``page_size`` key slots, and each generation holds a *block table* — an
+ordered list of page ids covering positions ``[0, pos)``.  Forking a
+speculative child is then a block-table copy plus refcount bumps: ZERO
+KV bytes move at fork time.  Pages copy lazily, only when a writer is
+about to scatter into a page some other holder (parent, sibling fork,
+or a stored prefix) still references.
+
+``PagePool`` itself is a host-side accountant (refcounts, free list,
+copy/write counters) plus a factory of jitted arena ops; the arena
+arrays themselves live in the engine's donated cache pytree so every
+mutation is an in-place XLA scatter, never a pool-wide copy.  Page 0 is
+the permanently-empty *null page*: block tables are padded with it, so
+gathers of short tables bring only ``EMPTY_SLOT`` positions, which the
+unified attention mask (models.layers.attend) discards exactly.
+
+Recurrent state (SSD / RG-LRU) and ring-buffered local-attention state
+are fixed-size per generation — they "degenerate to one page" and stay
+slot-indexed dense rows (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.layers import EMPTY_SLOT
+
+
+class PagePoolExhausted(RuntimeError):
+    """Raised instead of silently scattering out of the arena."""
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pow2_pad(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+class PagePool:
+    """Page accounting + jitted arena ops for one model's decode cache.
+
+    The cache pytree this pool manages is a per-layer list:
+
+      * attention / MoE layers: ``{"k","v"}`` arenas of shape
+        ``(num_pages, page_size, KV, Dh)`` and a ``(num_pages,
+        page_size)`` ``kv_pos`` arena (EMPTY_SLOT = unwritten);
+      * every other kind (local ring, SSD, RG-LRU): the dense
+        ``(max_batch, ...)`` per-slot state from ``T.cache_spec``.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, max_batch: int, max_len: int,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 cache_dtype: str = ""):
+        assert page_size > 0
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_row = _ceil_div(max_len, page_size)
+        if num_pages is None:
+            # enough for every slot to run unshared to max_len, plus the
+            # same again for stored prefixes; sharing means real usage
+            # sits far below this (and it is 2x pages, not 2x rows, that
+            # an operator tunes — the max_len*max_batch preallocation is
+            # gone)
+            num_pages = 1 + 2 * max_batch * self.pages_per_row
+        self.num_pages = num_pages
+        self.cache_dtype_str = cache_dtype
+        self.dtype = (jnp.dtype(cache_dtype) if cache_dtype
+                      else jnp.dtype(cfg.dtype))
+        kinds = cfg.layer_kinds()
+        self._attn_set = {i for i, k in enumerate(kinds)
+                          if k in ("attn", "moe")}
+        self.dense_layers = [i for i in range(len(kinds))
+                             if i not in self._attn_set]
+        kv_bytes = (page_size * cfg.num_kv_heads * cfg.head_dim
+                    * self.dtype.itemsize)
+        self.page_bytes = len(self._attn_set) * (2 * kv_bytes
+                                                 + page_size * 4)
+        # ---- host-side accounting.  refcount[p] == 0 <=> p is free.
+        self.refcount = np.zeros((num_pages,), np.int64)
+        self.refcount[0] = 1                    # null page: never handed out
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._scrub_pending: List[int] = []     # reused pages, stale kv_pos
+        self._dirty: set = set()                # freed-with-content pages
+        self.page_copies = 0                    # CoW page copies (device)
+        self.page_writes = 0                    # pages scattered into arenas
+        self.reclaim = None                     # pressure hook: (need)->None
+        # ---- jitted arena ops (memoized executables live on the pool)
+        self._scrub_op = jax.jit(self._scrub_impl, donate_argnums=(0,))
+        self._copy_op = jax.jit(self._copy_impl, donate_argnums=(0,))
+        self._gather_op = jax.jit(self._gather_impl)
+        self._write_op = jax.jit(self._write_impl, static_argnums=(3,),
+                                 donate_argnums=(0,))
+        self._read_op = jax.jit(self._read_impl)
+        self._upload_op = jax.jit(self._upload_impl, donate_argnums=(0,))
+
+    # ------------------------------------------------------------- layout
+    def init_cache(self):
+        """Arenas for attention layers; dense per-slot rows otherwise."""
+        cfg, P, ps = self.cfg, self.num_pages, self.page_size
+        spec = T.cache_spec(cfg, self.max_batch, self.max_len,
+                            self.cache_dtype_str)
+        cache = []
+        for i, s in enumerate(spec):
+            if i in self._attn_set:
+                cache.append({
+                    "k": jnp.zeros((P, ps, cfg.num_kv_heads, cfg.head_dim),
+                                   self.dtype),
+                    "v": jnp.zeros((P, ps, cfg.num_kv_heads, cfg.head_dim),
+                                   self.dtype),
+                    "kv_pos": jnp.full((P, ps), EMPTY_SLOT, jnp.int32),
+                })
+            else:
+                cache.append({k: T._init_leaf(k, shape, dt)
+                              for k, (shape, dt) in s.items()})
+        return cache
+
+    # -------------------------------------------------------- accounting
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
+    @property
+    def bytes_in_use(self) -> int:
+        return self.pages_in_use * self.page_bytes
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free) and self.reclaim is not None:
+            # local pressure: let the owner shed stored prefixes (the
+            # engine migrates LRU store entries to the remote tier,
+            # whose budget is host memory, not pool pages)
+            self.reclaim(n)
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"page pool exhausted: need {n} page(s) but only "
+                f"{len(self._free)} of {self.num_pages - 1} are free "
+                f"({self.pages_in_use} in use across live generations and "
+                f"stored prefixes). Retire/cancel generations, shrink the "
+                f"prefix store budgets, or raise Engine(num_pages=...).")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self.refcount[p] = 1
+            if p in self._dirty:
+                self._dirty.discard(p)
+                self._scrub_pending.append(p)
+        return pages
+
+    def _unschedule_scrub(self, pages: Sequence[int]) -> None:
+        """A full-page overwrite (CoW copy, prefill write, remote
+        upload) makes the pending scrub not just redundant but WRONG —
+        flushed later it would erase the new kv_pos."""
+        if self._scrub_pending:
+            drop = set(pages)
+            self._scrub_pending = [p for p in self._scrub_pending
+                                   if p not in drop]
+
+    def ref(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert self.refcount[p] > 0, f"ref of free page {p}"
+            self.refcount[p] += 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert self.refcount[p] > 0, f"double release of page {p}"
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                self._dirty.add(p)
+
+    # -------------------------------------------------------- arena ops
+    # Every op takes the engine's cache pytree and returns the updated
+    # one (mutating ops donate, so the arenas update in place on device).
+
+    def flush_scrub(self, cache):
+        """Reset kv_pos of reallocated pages BEFORE they are attended.
+
+        Freshly reallocated decode-append pages get one slot written per
+        step; the other slots must read EMPTY, not whatever a previous
+        owner left behind.  Must run before copies/writes of the same
+        step (a scrub after a CoW copy would erase it)."""
+        if not self._scrub_pending:
+            return cache
+        pages = self._scrub_pending
+        self._scrub_pending = []
+        width = _pow2_pad(len(pages))
+        arr = np.full((width,), self.num_pages, np.int64)   # pad -> drop
+        arr[: len(pages)] = pages
+        return self._scrub_op(cache, jnp.asarray(arr))
+
+    def _scrub_impl(self, cache, pages):
+        out = []
+        for i, c in enumerate(cache):
+            if i in self._attn_set:
+                c = dict(c)
+                c["kv_pos"] = c["kv_pos"].at[pages].set(
+                    EMPTY_SLOT, mode="drop")
+            out.append(c)
+        return out
+
+    def copy_pages(self, cache, srcs: Sequence[int], dsts: Sequence[int]):
+        """Batched CoW page copies (one scatter per arena leaf)."""
+        if not srcs:
+            return cache
+        assert len(srcs) == len(dsts)
+        width = _pow2_pad(max(len(srcs), 1))
+        s = np.zeros((width,), np.int64)                    # pad src: page 0
+        d = np.full((width,), self.num_pages, np.int64)     # pad dst: drop
+        s[: len(srcs)] = srcs
+        d[: len(dsts)] = dsts
+        self._unschedule_scrub(dsts)
+        self.page_copies += len(srcs)
+        return self._copy_op(cache, jnp.asarray(s), jnp.asarray(d))
+
+    def _copy_impl(self, cache, srcs, dsts):
+        out = []
+        for i, c in enumerate(cache):
+            if i in self._attn_set:
+                c = {k: a.at[dsts].set(a[srcs], mode="drop")
+                     for k, a in c.items()}
+            out.append(c)
+        return out
+
+    def gather_rows(self, cache, page_mat: np.ndarray,
+                    lengths: np.ndarray):
+        """Materialize dense single-row caches from block tables.
+
+        page_mat (G, pages_per_row) int (padded with the null page),
+        lengths (G,).  Returns a per-layer dense cache batch: attention
+        layers become (G, pages_per_row*page_size, KV, Dh) rows ready
+        for suffix prefill; other layers come back zero-initialized for
+        the caller to overlay stored state."""
+        return self._gather_op(cache, jnp.asarray(page_mat, jnp.int32),
+                               jnp.asarray(lengths, jnp.int32))
+
+    def _gather_impl(self, cache, page_mat, lengths):
+        cfg = self.cfg
+        G = page_mat.shape[0]
+        spec = T.cache_spec(cfg, G, self.max_len, self.cache_dtype_str)
+        rows = []
+        for i, c in enumerate(cache):
+            if i in self._attn_set:
+                rows.append({
+                    "k": c["k"][page_mat].reshape(
+                        G, -1, cfg.num_kv_heads, cfg.head_dim),
+                    "v": c["v"][page_mat].reshape(
+                        G, -1, cfg.num_kv_heads, cfg.head_dim),
+                    "kv_pos": c["kv_pos"][page_mat].reshape(G, -1),
+                    "pos": lengths,
+                })
+            else:
+                rows.append({k: T._init_leaf(k, shape, dt)
+                             for k, (shape, dt) in spec[i].items()})
+        return rows
+
+    def write_rows(self, cache, rows, page_mat: np.ndarray,
+                   first_page: int):
+        """Scatter prefilled dense rows back into arena pages.
+
+        page_mat (G, n_new) destination pages per row (pad rows with
+        ``num_pages`` to drop them — G-bucketed admission padding);
+        ``first_page`` is the first block-table index being written, so
+        row slice [first_page*ps, (first_page+n_new)*ps) lands on the
+        pages.  Whole pages are overwritten (kv_pos included), so the
+        written pages need no scrub."""
+        real_pages = np.asarray(page_mat)[np.asarray(page_mat)[:, 0]
+                                          < self.num_pages]
+        self._unschedule_scrub(real_pages.ravel().tolist())
+        self.page_writes += int(real_pages.size)
+        return self._write_op(cache, rows,
+                              jnp.asarray(page_mat, jnp.int32),
+                              int(first_page))
+
+    def _write_impl(self, cache, rows, page_mat, first_page):
+        cfg, ps = self.cfg, self.page_size
+        G, n_new = page_mat.shape
+        lo, hi = first_page * ps, (first_page + n_new) * ps
+        out = []
+        for i, c in enumerate(cache):
+            if i in self._attn_set:
+                r = rows[i]
+                c = {
+                    "k": c["k"].at[page_mat].set(
+                        r["k"][:, lo:hi].reshape(
+                            G, n_new, ps, cfg.num_kv_heads, cfg.head_dim),
+                        mode="drop"),
+                    "v": c["v"].at[page_mat].set(
+                        r["v"][:, lo:hi].reshape(
+                            G, n_new, ps, cfg.num_kv_heads, cfg.head_dim),
+                        mode="drop"),
+                    "kv_pos": c["kv_pos"].at[page_mat].set(
+                        r["kv_pos"][:, lo:hi].reshape(G, n_new, ps),
+                        mode="drop"),
+                }
+            out.append(c)
+        return out
+
+    # ------------------------------------------------- migration support
+    def _read_impl(self, cache, pages):
+        out = []
+        for i, c in enumerate(cache):
+            if i in self._attn_set:
+                out.append({k: a[pages] for k, a in c.items()})
+        return out
+
+    def read_pages(self, cache, pages: Sequence[int]):
+        """Page contents -> host numpy (one dict per attention layer),
+        the RDMA-out half of the store's local->remote migration."""
+        got = self._read_op(cache, jnp.asarray(list(pages), jnp.int32))
+        return [jax.tree.map(lambda a: np.asarray(jax.device_get(a)), d)
+                for d in got]
+
+    def _upload_impl(self, cache, host, pages):
+        out = []
+        j = 0
+        for i, c in enumerate(cache):
+            if i in self._attn_set:
+                c = {k: a.at[pages].set(jnp.asarray(host[j][k]))
+                     for k, a in c.items()}
+                j += 1
+            out.append(c)
+        return out
+
+    def upload_pages(self, cache, host, pages: Sequence[int]):
+        """Host page payloads -> freshly allocated arena pages (the
+        restore half of remote migration).  Uploaded pages are written
+        whole, so no scrub is needed."""
+        self._unschedule_scrub(pages)
+        self.page_writes += len(pages)
+        return self._upload_op(cache, host,
+                               jnp.asarray(list(pages), jnp.int32))
+
+
+# --------------------------------------------------------------- prefixes
+@dataclasses.dataclass
+class PagedPrefix:
+    """A stored prefix = a refcounted page list (+ dense extras).
+
+    This is the PrefixCacheStore payload for paged engines: the entry
+    holds one reference per page, so two stored prefixes sharing a
+    reasoning stem share the stem's pages outright, and a store entry
+    can outlive (or be forked from) the generation that produced it.
+    ``extra`` carries the non-paged layers' per-row state (recurrent /
+    ring buffers) as a per-layer list of (1, ...) pytrees, or None.
+
+    The store drives migration through the three hooks below:
+    ``migrate_out`` (device pages -> host copies, pages released),
+    ``migrate_in`` (fresh pages allocated + uploaded) and ``release``
+    (drop the refs on eviction).
+    """
+    engine: Any
+    pages: List[int]
+    extra: Any
+    length: int
+    host: Any = None                    # host payload when migrated out
+
+    @classmethod
+    def capture(cls, engine, pages: Sequence[int], extra, length: int):
+        engine.pool.ref(pages)
+        return cls(engine=engine, pages=list(pages), extra=extra,
+                   length=length)
+
+    @property
+    def on_device(self) -> bool:
+        return self.host is None
+
+    @property
+    def num_pages(self) -> int:
+        return len(self.pages) if self.on_device else len(self.host["n"])
+
+    @property
+    def nbytes(self) -> int:
+        from repro.serving.kvcache import tree_bytes     # cycle-free
+        n = self.num_pages * self.engine.pool.page_bytes
+        if self.extra is not None:
+            n += sum(tree_bytes(e) for e in self.extra if e is not None)
+        return n
+
+    def shared_page_count(self) -> int:
+        """Pages some OTHER holder also references (refcount > 1)."""
+        if not self.on_device:
+            return 0
+        rc = self.engine.pool.refcount
+        return int(sum(1 for p in self.pages if rc[p] > 1))
+
+    def acquire(self):
+        """Hand a holder its own refs; returns (pages copy, extra)."""
+        assert self.on_device, "acquire() before migrate_in()"
+        self.engine.pool.ref(self.pages)
+        return list(self.pages), self.extra
+
+    def release(self) -> None:
+        if self.on_device and self.pages:
+            self.engine.pool.release(self.pages)
+        self.pages, self.host, self.extra = [], None, None
+
+    def migrate_out(self):
+        eng = self.engine
+        data = eng.pool.read_pages(eng._cache, self.pages)
+        self.host = {"data": data, "n": list(self.pages)}
+        if self.extra is not None:
+            self.extra = jax.tree.map(
+                lambda l: np.asarray(jax.device_get(l)), self.extra)
+        eng.pool.release(self.pages)
+        self.pages = []
+        return self
+
+    def migrate_in(self):
+        eng = self.engine
+        pages = eng.pool.alloc(len(self.host["n"]))
+        eng._cache = eng.pool.upload_pages(eng._cache, self.host["data"],
+                                           pages)
+        self.pages, self.host = pages, None
+        if self.extra is not None:
+            self.extra = jax.tree.map(jnp.asarray, self.extra)
+        return self

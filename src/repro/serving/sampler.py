@@ -1,11 +1,31 @@
-"""Token sampling (numpy-side: logits are tiny vs the model step)."""
+"""Token sampling: fused on-device batch sampler + host references.
+
+``sample_tokens`` is the production path — it runs INSIDE the engine's
+jitted decode dispatch, so the only thing crossing the host boundary
+each step is a (B,) int32 token vector instead of (B, vocab) logits
+(the ROADMAP "sampler on-device" item).  Per-row PRNG keys are derived
+as ``fold_in(PRNGKey(seed), position)``: sampling is a pure function of
+(seed, position, logits), so a generation's stream is reproducible in
+any batch composition or slot — the same property the unified attention
+path gives the cache.
+
+Inverse-CDF sampling was chosen over ``jax.random.categorical`` so the
+device draw has an exact host-side mirror (``sample_token_ref`` below,
+same uniform -> same index), which is what the reference tests pin.
+``sample_token`` is the original host/numpy reference: greedy decoding
+(temperature <= 0) matches it token-for-token by construction (both
+take the first argmax).
+"""
 from __future__ import annotations
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
 
 def sample_token(logits: np.ndarray, temperature: float, *,
                  top_k: int = 0, seed: int = 0) -> int:
+    """Host reference sampler (numpy RandomState stream)."""
     logits = np.asarray(logits, np.float64)
     if temperature <= 0.0:
         return int(np.argmax(logits))
@@ -18,3 +38,59 @@ def sample_token(logits: np.ndarray, temperature: float, *,
     p /= p.sum()
     rs = np.random.RandomState(seed % (2 ** 31 - 1))
     return int(rs.choice(len(p), p=p))
+
+
+def sample_token_ref(logits: np.ndarray, temperature: float, u: float, *,
+                     top_k: int = 0) -> int:
+    """Host mirror of the on-device draw: same uniform ``u`` in, same
+    token out (inverse-CDF over the f32 softmax)."""
+    logits = np.asarray(logits, np.float32)
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    logits = logits / np.float32(max(temperature, 1e-6))
+    if top_k:
+        kth = np.partition(logits, -top_k)[-top_k]
+        logits = np.where(logits < kth, -np.inf, logits)
+    logits = logits - logits.max()
+    p = np.exp(logits, dtype=np.float32)
+    cdf = np.cumsum(p, dtype=np.float32)
+    draw = np.float32(u) * cdf[-1]          # scale by total: fp sum != 1
+    return int(min(np.sum(cdf <= draw), len(cdf) - 1))
+
+
+def fold_in_keys(seeds: jnp.ndarray, positions: jnp.ndarray):
+    """(B,) per-row keys: fold_in(PRNGKey(seed), position)."""
+    return jax.vmap(
+        lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
+    )(seeds, positions)
+
+
+def sample_tokens(logits: jnp.ndarray, temperature: jnp.ndarray,
+                  seeds: jnp.ndarray, positions: jnp.ndarray, *,
+                  top_k: int = 0) -> jnp.ndarray:
+    """Batched on-device sampler (jit-fused into the decode dispatch).
+
+    logits (B, V); temperature/seeds/positions (B,).  Rows with
+    temperature <= 0 decode greedily (first argmax, matching the
+    ``sample_token`` reference bitwise); stochastic rows draw one
+    uniform from their fold-in key and invert the f32 CDF.  Returns
+    (B,) int32.
+    """
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    temperature = jnp.asarray(temperature, jnp.float32)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    if top_k:
+        kth = jax.lax.top_k(scaled, top_k)[0][:, -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    scaled = scaled - jnp.max(scaled, axis=-1, keepdims=True)
+    p = jnp.exp(scaled)
+    cdf = jnp.cumsum(p, axis=-1)
+    keys = fold_in_keys(jnp.asarray(seeds, jnp.uint32),
+                        jnp.asarray(positions, jnp.int32))
+    u = jax.vmap(lambda k: jax.random.uniform(k, (), jnp.float32))(keys)
+    draw = u[:, None] * cdf[:, -1:]
+    sampled = jnp.minimum(jnp.sum((cdf <= draw).astype(jnp.int32), -1),
+                          V - 1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)

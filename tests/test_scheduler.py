@@ -139,6 +139,29 @@ def test_static_one_gpu_per_kernel_serves_both():
     assert loop.now == pytest.approx(10.0)   # sequential on one device
 
 
+def test_steal_counters_measure_cross_pool_dispatches():
+    """work_stealing=True: an idle validation device draining the
+    profiling queue counts as a steal; steal_rate = steals/dispatches;
+    the counters stay zero with stealing off."""
+    loop, s = mk(n=2, mode="static", static_split=(1, 1),
+                 work_stealing=True)
+    for _ in range(4):
+        s.submit(req("profiling", 5.0))      # validation pool idle
+    loop.run()
+    assert s.dispatched == 4
+    assert s.steals == 2                     # val device took every other
+    assert s.steals_by_pool == {"validation": 2, "profiling": 0}
+    assert s.steal_rate == pytest.approx(0.5)
+
+    loop2, s2 = mk(n=2, mode="static", static_split=(1, 1),
+                   work_stealing=False)
+    for _ in range(4):
+        s2.submit(req("profiling", 5.0))
+    loop2.run()
+    assert s2.steals == 0 and s2.steal_rate == 0.0
+    assert loop2.now > loop.now              # stealing finished sooner
+
+
 # --------------------------------------------------------- property
 @settings(max_examples=20, deadline=None)
 @given(durs=st.lists(st.floats(0.5, 30.0), min_size=1, max_size=20),
