@@ -7,13 +7,16 @@
 #                  kernel-optimization task
 #   make serve   - continuous-batched real-model serving demo with
 #                  speculative forks + two-tier prefix cache
-#   make bench-smoke - work-stealing scheduler table on a reduced grid
-#                  (3 workflows, 4 devices, 10 iterations)
+#   make bench-smoke - work-stealing + async-eval-plane tables on a
+#                  reduced grid (3 workflows, 4 devices, 10 iterations)
+#   make smoke-real - real-eval deferred plane end to end: bounded
+#                  kernel_search with interpret-mode builds executing
+#                  at device dispatch
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 smoke serve bench-smoke
+.PHONY: tier1 smoke serve bench-smoke smoke-real
 
 tier1:
 	$(PY) -m pytest -x -q
@@ -26,3 +29,7 @@ serve:
 
 bench-smoke:
 	$(PY) -m benchmarks.table_work_stealing --smoke
+	$(PY) -m benchmarks.table_async_overlap --smoke
+
+smoke-real:
+	$(PY) examples/kernel_search.py T6 3

@@ -22,6 +22,7 @@ MODULES = [
     "fig12_inflight_specgen",
     "table4_utilization",
     "table_work_stealing",
+    "table_async_overlap",
     "table5_breakdown",
     "table6_kernel_speedup",
     "table7_tokens",

@@ -1,0 +1,75 @@
+"""Async evaluation plane vs the legacy eager plane (ISSUE 3 table).
+
+Compares, on the paper's evaluation setting (the 10-workflow shared
+pool), the PR-2 legacy plane — iteration-boundary queue-max
+reallocation, pure LAF/FIFO queues — against the async plane this PR
+lands: continuous arrival-rate reallocation + fallback-over-speculative
+priority (the deferred-execution substrate is identical for both; under
+the virtual clock deferral alone is trace-invariant, which the
+golden-trace tests pin).  Metrics:
+
+    fb_latency   mean feedback latency (seconds): VALIDATION submit ->
+                 PROFILE completion per candidate that reached
+                 profiling — the eval-feedback latency KernelSkill /
+                 STARK identify as the multi-agent bottleneck,
+    util_any     paper Table-4 utilization (fraction of E2E time >= 1
+                 device busy),
+    early_terms  total early terminations across the pool (faster
+                 feedback => criteria fire while reasoning still runs).
+
+Run standalone (``python -m benchmarks.table_async_overlap``), via
+``make bench-smoke`` (reduced grid), or as part of benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks._data import SEED, T10, timed
+from repro.search.driver import run_shared_pool
+
+GRID = [  # (label, realloc, priority)
+    ("eager_legacy", "queue-max", False),
+    ("async_plane", "arrival-rate", True),
+]
+
+
+def feedback_latency(sched) -> float:
+    """Mean submit->profile-done latency over profiled candidates."""
+    val_arrival = {r.candidate.kernel_id: r.arrival
+                   for r in sched.completed if r.kind == "validation"}
+    lats = [r.finished - val_arrival[r.candidate.kernel_id]
+            for r in sched.completed
+            if r.kind == "profiling"
+            and r.candidate.kernel_id in val_arrival]
+    return float(np.mean(lats)) if lats else 0.0
+
+
+def rows(iterations: int = 100, tasks=None, devices: int = 10):
+    tasks = list(T10 if tasks is None else tasks)
+    out = []
+    for label, realloc, prio in GRID:
+        (sched, ctls), us = timed(
+            run_shared_pool, tasks, model="glm", iterations=iterations,
+            devices=devices, seed=SEED, realloc=realloc, priority=prio)
+        terms = sum(c.result.early_terminations for c in ctls)
+        out.append((f"table_async_fb_latency_{label}", us,
+                    round(feedback_latency(sched), 2)))
+        out.append((f"table_async_util_any_{label}", us,
+                    round(sched.utilization_any(), 4)))
+        out.append((f"table_async_early_terms_{label}", us, terms))
+    return out
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    print("name,us_per_call,derived")
+    kw = (dict(iterations=10, tasks=T10[:3], devices=4)
+          if smoke else {})
+    for name, us, derived in rows(**kw):
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

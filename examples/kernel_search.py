@@ -7,6 +7,11 @@ interpret mode; profiling prices it with the TPU roofline cost model.
 The search therefore optimizes a genuine kernel: watch the best block
 configuration improve over iterations.
 
+Evaluation is DEFERRED (DESIGN.md §Async-eval-plane): submission only
+queues a thunk, the interpret-mode build runs when the elastic pool
+grants a device — overlapping the still-streaming reasoning trace —
+and same-build requests co-resident in the queue share one build.
+
     PYTHONPATH=src python examples/kernel_search.py [task] [iterations]
 """
 import sys
@@ -24,12 +29,27 @@ task = sys.argv[1] if len(sys.argv) > 1 else "T6"
 iters = int(sys.argv[2]) if len(sys.argv) > 2 else 12
 
 loop = EventLoop()
-sched = ElasticScheduler(loop, SchedulerConfig(num_devices=2))
+sched = ElasticScheduler(loop, SchedulerConfig(
+    num_devices=4, realloc="arrival-rate"))
+evaluator = RealEvalBackend()
 ctl = SpecController(
     loop, sched, SimLLMBackend(WorkloadModel("glm", seed=0)),
-    RealEvalBackend(), FeedbackSearch(),
+    evaluator, FeedbackSearch(),
     SpecGenConfig(iterations=iters))
 res = ctl.run_task(task)
+
+# deferred-plane accounting: speculative validations GRANTED a device
+# (thunk executed: a build, or a batched replay of one) while the
+# iteration's reasoning generation was still streaming
+overlapped = 0
+for rec in res.records:
+    if not rec.gen_time:
+        continue
+    lo, hi = rec.t_start, rec.t_start + rec.gen_time
+    overlapped += sum(
+        1 for r in sched.completed
+        if r.kind == "validation" and r.candidate.origin == "spec"
+        and r.started is not None and lo <= r.started < hi)
 
 td = TASKS[task]
 print(f"\ntask {task} ({td.name}), {iters} iterations, "
@@ -48,3 +68,6 @@ if best is not None:
           f"(VMEM {cost.vmem_bytes/2**20:.1f} MiB, "
           f"aligned={cost.mxu_aligned})")
 print(f"history: {[round(h, 2) for h in res.history[1:]]}")
+print(f"deferred eval plane: {evaluator.builds_started} builds "
+      f"({evaluator.batched_hits} batched) of {evaluator.submits} "
+      f"submits; {overlapped} spec evals granted during live reasoning")

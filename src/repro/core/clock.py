@@ -6,13 +6,56 @@ traces replay in milliseconds; under ``WallClock`` the same code runs
 real work (tiny-model engine + interpret-mode kernels) and the measured
 durations drive the identical event semantics — so benchmarks and the
 real-path examples exercise the same controller/scheduler code.
+
+``Future`` is the loop's completion primitive (DESIGN.md
+§Async-eval-plane): resolve-once, callbacks fire synchronously at
+resolution — resolution always happens inside an event handler, so
+"synchronous" is deterministic under the virtual clock (no extra events
+means no event-ordering perturbation between equivalent runs).
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-import time
-from typing import Callable, List, Optional
+from typing import Any, Callable, List, Optional
+
+
+class Future:
+    """Resolve-once future with synchronous callbacks.
+
+    Callbacks receive the future itself; one registered after resolution
+    fires immediately.  ``cancel()`` drops all callbacks — a cancelled
+    future never fires (the scheduler cancels futures of requests
+    aborted at iteration boundaries)."""
+
+    __slots__ = ("done", "value", "cancelled", "_cbs")
+
+    def __init__(self):
+        self.done = False
+        self.value: Any = None
+        self.cancelled = False
+        self._cbs: List[Callable[["Future"], None]] = []
+
+    def add_done_callback(self, fn: Callable[["Future"], None]) -> None:
+        if self.cancelled:
+            return
+        if self.done:
+            fn(self)
+        else:
+            self._cbs.append(fn)
+
+    def resolve(self, value: Any) -> None:
+        if self.cancelled or self.done:
+            return
+        self.done = True
+        self.value = value
+        cbs, self._cbs = self._cbs, []
+        for fn in cbs:
+            fn(self)
+
+    def cancel(self) -> None:
+        self.cancelled = True
+        self._cbs = []
 
 
 class Event:
@@ -66,14 +109,3 @@ class EventLoop:
 
     def drain(self) -> None:
         self._heap.clear()
-
-
-class StopWatch:
-    """Wall-clock duration measurement for real-mode tasks."""
-
-    def __enter__(self):
-        self.t0 = time.perf_counter()
-        return self
-
-    def __exit__(self, *a):
-        self.elapsed = time.perf_counter() - self.t0

@@ -8,9 +8,13 @@ no changes to the underlying LLM or search algorithm).  Per iteration:
   * parse trigger signals (``core.triggers``) — or fork on idle devices,
   * fork K = max(1, min(C.val, C.prof)) non-reasoning speculative
     generations conditioned on the reasoning prefix (prefix KV reuse via
-    the two-tier store => near-zero re-prefill token cost),
-  * dispatch emitted kernels to the ElasticScheduler for validation
-    (LAF) and profiling (FIFO),
+    the two-tier store => near-zero re-prefill token cost), throttled by
+    the scheduler's backpressure signal (``sched.pressure``),
+  * submit emitted kernels to the ElasticScheduler as DEFERRED requests:
+    the evaluation thunk runs when a device is granted (real mode: the
+    interpret-mode build overlaps the still-streaming reasoning
+    generation) and the EvalFuture resolves at completion; fallback
+    kernels carry PRIO_FALLBACK and outrank queued speculative ones,
   * early-terminate the reasoning generation when a speculative kernel
     meets the termination criterion (default: historical mean speedup),
   * at the iteration boundary abort in-flight work, update the search
@@ -33,8 +37,10 @@ from repro.core.clock import EventLoop
 from repro.core.scheduler import ElasticScheduler
 from repro.core.termination import get_criterion
 from repro.core.triggers import StreamTriggerParser
-from repro.core.types import (IterationRecord, KernelCandidate,
-                              ProfileResult, Request, ValidationResult)
+from repro.core.types import (PRIO_FALLBACK, PRIO_SPEC, EvalFuture,
+                              IterationRecord, KernelCandidate,
+                              ProfileResult, ValidationResult,
+                              make_eval_request)
 
 
 # ------------------------------------------------------------- protocols
@@ -64,10 +70,44 @@ class LLMBackend(Protocol):
 
 
 class EvalBackend(Protocol):
+    """Synchronous evaluation: returns (latency, result) when called.
+
+    The controller never calls these eagerly — they are wrapped into
+    deferred thunks (``submit_validate`` below) that run when the
+    scheduler grants a device."""
     def validate(self, cand: KernelCandidate
                  ) -> Tuple[float, ValidationResult]: ...
     def profile(self, cand: KernelCandidate
                 ) -> Tuple[float, ProfileResult]: ...
+
+
+class AsyncEvalBackend(Protocol):
+    """Deferred evaluation: submit_* package the work as a Request whose
+    thunk executes at device dispatch; the returned EvalFuture resolves
+    when the scheduler completes the request.  Backends implement this
+    directly when submission itself has cross-request structure (the
+    real backend batches same-shape builds co-resident in a queue)."""
+    def submit_validate(self, cand: KernelCandidate) -> EvalFuture: ...
+    def submit_profile(self, cand: KernelCandidate) -> EvalFuture: ...
+
+
+def submit_validate(evaluator, cand: KernelCandidate) -> EvalFuture:
+    """Deferred validation via the backend's async protocol, or by
+    wrapping a synchronous backend's ``validate`` into a dispatch-time
+    thunk."""
+    sub = getattr(evaluator, "submit_validate", None)
+    if sub is not None:
+        return sub(cand)
+    return make_eval_request("validation", cand,
+                             lambda: evaluator.validate(cand))
+
+
+def submit_profile(evaluator, cand: KernelCandidate) -> EvalFuture:
+    sub = getattr(evaluator, "submit_profile", None)
+    if sub is not None:
+        return sub(cand)
+    return make_eval_request("profiling", cand,
+                             lambda: evaluator.profile(cand))
 
 
 class SearchAlgorithm(Protocol):
@@ -223,7 +263,7 @@ class SpecController:
         # is the currently *idle* split — "enough candidates to keep GPUs
         # busy without overloading the queues" (§6.1.1).  Under queue
         # pressure (shared pool, bursty arrivals) forking pauses.
-        if len(self.sched.q_val) >= self.sched.cfg.num_devices:
+        if self.sched.pressure >= 1.0:
             return
         cval = max(self.sched.idle_val, 1 if self.sched.idle_prof else 0)
         cprof = max(self.sched.idle_prof, 1 if self.sched.idle_val else 0)
@@ -242,14 +282,18 @@ class SpecController:
             # prefix-cache accounting (paper §6.2.3): fork prompt KV is
             # shared with the live reasoning generation; without the
             # remote cache the fork re-prefills its prompt (token cost
-            # AND latency at the serving prefill rate)
+            # AND latency at the serving prefill rate).  The re-prefill
+            # latency is accounted LOCALLY — the SpecScript belongs to
+            # the backend (it may serve cached/shared scripts) and must
+            # not be mutated here.
+            fork_delay = spec.duration
             if self.cfg.prefix_cache:
                 self._tok["cached"] += spec.prompt_tokens
                 rec.cached_prefix_tokens += spec.prompt_tokens
             else:
                 self._tok["spec"] += spec.prompt_tokens
                 rec.spec_tokens += spec.prompt_tokens
-                spec.duration += spec.prompt_tokens / 2500.0
+                fork_delay += spec.prompt_tokens / 2500.0
 
             def on_spec_done(s=spec):
                 state["spec_live"] -= 1
@@ -264,16 +308,25 @@ class SpecController:
                     self._submit_validation(s.candidate, state,
                                             fallback=False)
             state["spec_events"].append(
-                self.loop.schedule(spec.duration, on_spec_done, tag="spec"))
+                self.loop.schedule(fork_delay, on_spec_done, tag="spec"))
 
     # ------------------------------------------------- validation/profiling
+    # Deferred execution: submission only QUEUES a thunk — the kernel
+    # build / latency draw happens when the scheduler grants a device
+    # (Request.thunk inside _start), and the EvalFuture resolves at the
+    # completion event.  Aborted requests' futures are cancelled by the
+    # scheduler, so the callbacks below never see aborted work.
     def _submit_validation(self, cand, state, fallback: bool) -> None:
         rec = state["rec"]
-        dur, res = self.evaluator.validate(cand)
+        fut = submit_validate(self.evaluator, cand)
+        req = fut.request
+        req.owner = self.name
+        req.priority = PRIO_FALLBACK if fallback else PRIO_SPEC
 
-        def done(req: Request):
-            if req.cancelled or state["done"]:
+        def done(f: EvalFuture):
+            if state["done"]:
                 return
+            res: ValidationResult = f.value
             if res.ok:
                 rec.validated += 1
                 self._submit_profile(cand, state, fallback)
@@ -282,17 +335,20 @@ class SpecController:
                 if fallback:
                     state["fallback_pending"] = False
                     self._maybe_finish(state)
-        self.sched.submit(Request(kind="validation", candidate=cand,
-                                  duration=dur, on_complete=done,
-                                  owner=self.name))
+        fut.add_done_callback(done)
+        self.sched.submit(req)
 
     def _submit_profile(self, cand, state, fallback: bool) -> None:
         rec = state["rec"]
-        dur, res = self.evaluator.profile(cand)
+        fut = submit_profile(self.evaluator, cand)
+        req = fut.request
+        req.owner = self.name
+        req.priority = PRIO_FALLBACK if fallback else PRIO_SPEC
 
-        def done(req: Request):
-            if req.cancelled or state["done"]:
+        def done(f: EvalFuture):
+            if state["done"]:
                 return
+            res: ProfileResult = f.value
             rec.profiled += 1
             rec.status = "success"
             speedup = res.speedup
@@ -306,9 +362,8 @@ class SpecController:
                 return
             if not state["terminated"] and self.criterion(prior, speedup):
                 self._terminate(state)
-        self.sched.submit(Request(kind="profiling", candidate=cand,
-                                  duration=dur, on_complete=done,
-                                  owner=self.name))
+        fut.add_done_callback(done)
+        self.sched.submit(req)
 
     # ----------------------------------------------------------- completion
     def _terminate(self, state) -> None:

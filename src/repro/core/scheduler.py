@@ -1,16 +1,35 @@
-"""ElasticScheduler (paper Algorithm 2).
+"""ElasticScheduler (paper Algorithm 2) + the async evaluation plane.
 
 One elastic device pool, dynamically split between validation and
-profiling from the previous iteration's max queue lengths:
+profiling.  Two reallocation policies:
 
-    G_prof = min(G-1, max(1, ceil(G * L_p / (L_v + L_p)))),
-    G_val  = G - G_prof          (even split when L_v + L_p == 0)
+  * ``queue-max`` (Algorithm 2): recompute at iteration boundaries from
+    the previous iteration's max queue lengths,
 
-Queues: validation LAF (later candidates carry more reasoning prefix),
-profiling FIFO (oldest validated kernel first => freshest feedback
-latency bound).  At an iteration boundary, in-flight requests are
-aborted and both queues cleared so speculative tails never delay the
-next iteration.
+        G_prof = min(G-1, max(1, ceil(G * L_p / (L_v + L_p)))),
+        G_val  = G - G_prof          (even split when L_v + L_p == 0);
+
+  * ``arrival-rate``: CONTINUOUS reallocation from per-pool arrival
+    rates (exponentially-weighted, ``rate_halflife``).  The same bounded
+    formula is applied to the smoothed rates on every submit and
+    completion, so the split tracks bursty speculative load mid-
+    iteration instead of reacting one iteration late.  Only idle
+    devices ever change pool (busy ones keep their request).
+
+Queues are priority heaps: the primary key is ``Request.priority``
+(reasoning-fallback kernels outrank speculative ones) and the secondary
+key encodes the per-pool policy — LAF (newest first: later candidates
+carry more reasoning prefix) is a key, not a deque end.  ``priority
+=False`` restores the PR-2 pure-LAF/FIFO ordering (the golden-trace
+compat mode).
+
+Deferred execution: a request's ``thunk`` — the evaluation work itself
+— runs when a device is GRANTED, not at submit time.  The thunk returns
+(duration, result); the completion event fires ``duration`` later and
+resolves ``request.future``.  At an iteration boundary in-flight
+requests are aborted: completion events and futures are cancelled, so
+no callback of an aborted request ever fires (results of already-run
+thunks are discarded — see DESIGN.md §Async-eval-plane).
 
 ``static`` mode reproduces the legacy "one GPU per kernel-phase"
 partitioning used by the baselines and the SKG-w/o-ES ablation.
@@ -22,11 +41,12 @@ the paper's Table 4 metric: fraction of elapsed time devices are busy.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 import math
-from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import List, Optional
 
-from repro.core.clock import EventLoop, StopWatch
+from repro.core.clock import EventLoop
 from repro.core.types import Request
 
 
@@ -37,11 +57,59 @@ class SchedulerConfig:
     validation_policy: str = "laf"   # laf | fifo
     profiling_policy: str = "fifo"   # fifo | laf
     static_split: Optional[tuple] = None   # (val, prof) for static mode
+    # Reallocation policy: "queue-max" (Algorithm 2, iteration-boundary)
+    # or "arrival-rate" (continuous EWMA-rate split, §6.2.1 upgrade).
+    realloc: str = "queue-max"
+    rate_halflife: float = 240.0     # EWMA halflife (virtual seconds)
+    # Fallback-over-speculative request ordering.  False restores the
+    # PR-2 pure LAF/FIFO queues (golden-trace compat).
+    priority: bool = True
     # BEYOND-PAPER: let an idle device serve the other pool's queue
     # within an iteration (the paper only rebalances between iterations).
     # Off by default to keep the paper-faithful ablation clean; measured
     # separately in EXPERIMENTS.md §Perf.
     work_stealing: bool = False
+
+
+class _PriorityQueue:
+    """Priority heap with the deque surface end_iteration/tests rely on
+    (len, arrival-order iteration, clear, extend).
+
+    Pop order: (priority-if-enabled, policy key) — LAF's key is the
+    negated submission sequence (newest first), FIFO's the sequence
+    itself.  Re-pushing after an owner-scoped abort re-keys from the
+    preserved ``Request.priority``, so relative order survives."""
+
+    __slots__ = ("_heap", "_seq", "policy", "use_priority")
+
+    def __init__(self, policy: str, use_priority: bool):
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+        self.policy = policy
+        self.use_priority = use_priority
+
+    def push(self, req: Request) -> None:
+        s = next(self._seq)
+        key = (req.priority if self.use_priority else 0,
+               -s if self.policy == "laf" else s)
+        heapq.heappush(self._heap, (key, s, req))
+
+    def pop(self) -> Request:
+        return heapq.heappop(self._heap)[2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __iter__(self):
+        # arrival order (deque-equivalent), NOT pop order
+        return (r for _, s, r in sorted(self._heap, key=lambda e: e[1]))
+
+    def clear(self) -> None:
+        self._heap.clear()
+
+    def extend(self, reqs) -> None:
+        for r in reqs:
+            self.push(r)
 
 
 class _Device:
@@ -63,8 +131,8 @@ class ElasticScheduler:
         self.loop = loop
         self.cfg = cfg
         self.devices = [_Device(i) for i in range(cfg.num_devices)]
-        self.q_val: Deque[Request] = deque()
-        self.q_prof: Deque[Request] = deque()
+        self.q_val = _PriorityQueue(cfg.validation_policy, cfg.priority)
+        self.q_prof = _PriorityQueue(cfg.profiling_policy, cfg.priority)
         self.L_val = 0
         self.L_prof = 0
         self.iteration = 0
@@ -74,6 +142,9 @@ class ElasticScheduler:
         self.dispatched = 0                  # requests started on a device
         self.steals = 0                      # ...from the OTHER pool's queue
         self.steals_by_pool = {"validation": 0, "profiling": 0}
+        # EWMA arrival rates (events/second) for "arrival-rate" realloc
+        self._rate = {"validation": 0.0, "profiling": 0.0}
+        self._rate_t = loop.now
         self._t0 = loop.now
         self._set_split(*self._initial_split())
 
@@ -94,16 +165,56 @@ class ElasticScheduler:
                 d.pool = "validation" if i < n_val else "profiling"
         self.n_val, self.n_prof = n_val, n_prof
 
-    def allocate(self) -> tuple:
-        """Paper §6.2.1 reallocation from last iteration's queue maxima."""
+    def _split_from(self, lv: float, lp: float) -> tuple:
+        """The paper's bounded split formula over any pair of loads."""
         g = self.cfg.num_devices
-        if self.cfg.mode == "static":
-            return self._initial_split()
-        lv, lp = self.L_val, self.L_prof
-        if lv + lp == 0:
+        if lv + lp <= 0:
             return (g - g // 2, g // 2) if g > 1 else (1, 0)
         n_prof = min(g - 1, max(1, math.ceil(g * lp / (lv + lp))))
         return g - n_prof, n_prof
+
+    def allocate(self) -> tuple:
+        """Reallocation target under the configured policy."""
+        if self.cfg.mode == "static":
+            return self._initial_split()
+        if self.cfg.realloc == "arrival-rate":
+            self._decay_rates()
+            return self._split_from(self._rate["validation"],
+                                    self._rate["profiling"])
+        # paper §6.2.1: last iteration's queue maxima
+        return self._split_from(self.L_val, self.L_prof)
+
+    # ------------------------------------------------------- arrival rates
+    def _decay_rates(self) -> None:
+        dt = self.loop.now - self._rate_t
+        if dt > 0.0:
+            tau = self.cfg.rate_halflife / math.log(2.0)
+            decay = math.exp(-dt / tau)
+            self._rate["validation"] *= decay
+            self._rate["profiling"] *= decay
+            self._rate_t = self.loop.now
+
+    def _note_arrival(self, kind: str) -> None:
+        self._decay_rates()
+        tau = self.cfg.rate_halflife / math.log(2.0)
+        self._rate[kind] += 1.0 / tau
+
+    @property
+    def arrival_rates(self) -> tuple:
+        """Smoothed (validation, profiling) arrivals/second, decayed to
+        now — the signal "arrival-rate" reallocation splits on."""
+        self._decay_rates()
+        return (self._rate["validation"], self._rate["profiling"])
+
+    @property
+    def pressure(self) -> float:
+        """Fork-throttle backpressure: queued (not yet granted)
+        validation requests per device.  >= 1.0 means a full pool's
+        worth of backlog — the controller pauses forking there.  The
+        validation queue is the binding signal: speculative floods land
+        on it first, and profiling backlog is bounded by validation
+        throughput (every profile request was a validation pass)."""
+        return len(self.q_val) / max(self.cfg.num_devices, 1)
 
     # ------------------------------------------------------------ lifecycle
     def begin_iteration(self, index: int) -> None:
@@ -116,22 +227,30 @@ class ElasticScheduler:
         """Abort in-flight requests, clear queues (paper Alg. 2 line 10).
 
         With a shared pool (multiple concurrent workflows), only the
-        finishing workflow's requests are aborted (owner-scoped)."""
+        finishing workflow's requests are aborted (owner-scoped).
+        Aborted requests' futures are cancelled — their callbacks never
+        fire, and a busy device's already-executed thunk result is
+        discarded with the request."""
         def match(r: Request) -> bool:
             return not owner or r.owner == owner
+
+        def abort(r: Request) -> None:
+            r.cancelled = True
+            if r.future is not None:
+                r.future.cancel()
+            self.aborted.append(r)
+
         for d in self.devices:
             if d.busy and d.req is not None and match(d.req):
-                d.req.cancelled = True
+                abort(d.req)
                 if d.completion is not None:
                     d.completion.cancel()
-                self.aborted.append(d.req)
                 self._release(d, record=True)
         for q in (self.q_val, self.q_prof):
             keep = [r for r in q if not match(r)]
             for r in q:
                 if match(r):
-                    r.cancelled = True
-                    self.aborted.append(r)
+                    abort(r)
             q.clear()
             q.extend(keep)
         self._mark()
@@ -142,20 +261,21 @@ class ElasticScheduler:
         req.arrival = self.loop.now
         req.iteration = self.iteration
         q = self.q_val if req.kind == "validation" else self.q_prof
-        q.append(req)
+        q.push(req)
         self.L_val = max(self.L_val, len(self.q_val))
         self.L_prof = max(self.L_prof, len(self.q_prof))
+        if self.cfg.mode != "static" and self.cfg.realloc == "arrival-rate":
+            self._note_arrival(req.kind)
+            self._set_split(*self.allocate())    # continuous, idle-only
         self._mark()
         self._dispatch()
 
     # ------------------------------------------------------------ dispatch
     def _pick(self, kind: str) -> Optional[Request]:
         q = self.q_val if kind == "validation" else self.q_prof
-        pol = (self.cfg.validation_policy if kind == "validation"
-               else self.cfg.profiling_policy)
-        if not q:
+        if not len(q):
             return None
-        return q.pop() if pol == "laf" else q.popleft()
+        return q.pop()
 
     def _dispatch(self) -> None:
         progressed = True
@@ -185,10 +305,11 @@ class ElasticScheduler:
         d.req = req
         d.busy_since = self.loop.now
         req.started = self.loop.now
-        if req.run is not None and req.duration == 0.0:
-            with StopWatch() as sw:          # real mode: do the work now
-                req.result = req.run()
-            req.duration = sw.elapsed
+        if req.thunk is not None:
+            # deferred execution: the work happens NOW, on the device's
+            # turn — real-mode builds run here and their measured
+            # wall-clock is the request's duration
+            req.duration, req.result = req.thunk()
         d.completion = self.loop.schedule(
             req.duration, lambda dd=d, rr=req: self._complete(dd, rr),
             tag=f"{req.kind}-done")
@@ -198,7 +319,11 @@ class ElasticScheduler:
         req.finished = self.loop.now
         self._release(d, record=True)
         self.completed.append(req)
+        if self.cfg.mode != "static" and self.cfg.realloc == "arrival-rate":
+            self._set_split(*self.allocate())    # re-pool the freed device
         self._mark()
+        if req.future is not None:
+            req.future.resolve(req.result)
         if req.on_complete is not None:
             req.on_complete(req)
         self._dispatch()

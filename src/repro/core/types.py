@@ -3,9 +3,18 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.clock import Future
 
 _kid = itertools.count()
+
+# Request priorities (lower = more urgent).  Reasoning-fallback kernels
+# outrank speculative ones: the fallback gates the iteration boundary
+# (the controller cannot advance until it resolves), while a speculative
+# kernel only ever *accelerates* it (DESIGN.md §Async-eval-plane).
+PRIO_FALLBACK = 0
+PRIO_SPEC = 1
 
 
 @dataclasses.dataclass
@@ -34,12 +43,24 @@ class ProfileResult:
 
 @dataclasses.dataclass
 class Request:
-    """A validation or profiling request flowing through the scheduler."""
+    """A validation or profiling request flowing through the scheduler.
+
+    Deferred execution: ``thunk`` is the evaluation work itself and runs
+    exactly once, when the scheduler grants this request a device (not
+    at submit time).  It returns ``(duration, result)`` — the virtual
+    duration under the simulated backends, the measured wall-clock of
+    the actual build under the real backend.  ``future`` (if set) is
+    resolved with ``result`` at completion and cancelled on abort.
+    Pre-priced requests (``duration`` set, no thunk) are still accepted:
+    the scheduler just replays the given latency.
+    """
     kind: str                            # "validation" | "profiling"
     candidate: KernelCandidate
     arrival: float = 0.0
-    duration: float = 0.0                # filled by the workload backend
-    run: Optional[Callable[[], Any]] = None   # real-mode work
+    duration: float = 0.0                # pre-priced latency (no thunk)
+    thunk: Optional[Callable[[], Tuple[float, Any]]] = None
+    future: Optional["EvalFuture"] = None
+    priority: int = PRIO_SPEC            # lower = more urgent
     result: Any = None
     on_complete: Optional[Callable[["Request"], None]] = None
     started: Optional[float] = None
@@ -47,6 +68,32 @@ class Request:
     cancelled: bool = False
     iteration: int = 0
     owner: str = ""                      # workflow/task that submitted it
+
+
+class EvalFuture(Future):
+    """Future for one deferred evaluation; carries its Request so the
+    submitter can set owner/priority before handing it to the
+    scheduler."""
+
+    __slots__ = ("request",)
+
+    def __init__(self, request: Optional[Request] = None):
+        super().__init__()
+        self.request = request
+
+
+def make_eval_request(kind: str, candidate: KernelCandidate,
+                      thunk: Callable[[], Tuple[float, Any]],
+                      priority: int = PRIO_SPEC) -> EvalFuture:
+    """Package deferred evaluation work as a Request + EvalFuture.
+
+    The thunk is owned by the scheduler from submission on: it runs on
+    the device's turn and its ``(duration, result)`` drive the
+    completion event and the future's resolution."""
+    fut = EvalFuture()
+    fut.request = Request(kind=kind, candidate=candidate, thunk=thunk,
+                          future=fut, priority=priority)
+    return fut
 
 
 @dataclasses.dataclass

@@ -35,6 +35,14 @@ def main() -> None:
     ap.add_argument("--no-prefix-cache", action="store_true")
     ap.add_argument("--scheduler", default="elastic",
                     choices=["elastic", "static"])
+    ap.add_argument("--realloc", default="queue-max",
+                    choices=["queue-max", "arrival-rate"],
+                    help="pool reallocation: Algorithm-2 iteration-"
+                         "boundary queue maxima, or continuous EWMA "
+                         "arrival rates")
+    ap.add_argument("--no-priority", action="store_true",
+                    help="disable fallback-over-speculative ordering "
+                         "(PR-2 legacy LAF/FIFO queues)")
     ap.add_argument("--real-eval", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -42,7 +50,8 @@ def main() -> None:
     loop = EventLoop()
     wl = WorkloadModel(model=args.model, seed=args.seed)
     sched = ElasticScheduler(loop, SchedulerConfig(
-        num_devices=args.devices, mode=args.scheduler))
+        num_devices=args.devices, mode=args.scheduler,
+        realloc=args.realloc, priority=not args.no_priority))
     if args.real_eval:
         from repro.search.real_eval import RealEvalBackend
         evaluator = RealEvalBackend()
@@ -67,6 +76,10 @@ def main() -> None:
           f"{res.cached_prefix_tokens/1e6:.2f}M)")
     print(f"  pool busy-fraction={sched.utilization_any():.1%} "
           f"device-seconds={sched.utilization():.1%}")
+    if args.real_eval:
+        print(f"  real-eval (deferred): builds={evaluator.builds_started} "
+              f"batched={evaluator.batched_hits} "
+              f"submits={evaluator.submits}")
 
 
 if __name__ == "__main__":

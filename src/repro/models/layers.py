@@ -335,6 +335,16 @@ def attention_paged(cfg, p, x, positions, shard, runtime: Runtime,
     padding slots are EMPTY, so the masked-softmax contributions are
     exact zeros and the dense/paged paths agree bitwise.
 
+    With ``runtime.use_pallas`` the gather never happens: the
+    block-table-consuming flash-decoding kernel
+    (``decode_attention_paged_op``) DMAs arena pages straight off the
+    scalar-prefetched table.  Pages hold contiguous position-order
+    prefixes, so masking by valid length (``pos`` written tokens, +1 if
+    this row wrote) is equivalent to the dense path's kv_pos mask; the
+    kernel accumulates in f32 like ``attend`` but combines chunks
+    online, so the two lowerings agree to rounding (parity pinned in
+    tests/test_paged.py), not bitwise.
+
     Returns (out, new_arenas).
     """
     B, S, _ = x.shape
@@ -357,10 +367,24 @@ def attention_paged(cfg, p, x, positions, shard, runtime: Runtime,
         "kv_pos": arenas["kv_pos"].at[page, slot].set(pos, mode="drop"),
     }
     KV, Dh = new["k"].shape[2], new["k"].shape[3]
-    ck = new["k"][block_table].reshape(B, -1, KV, Dh)
-    cv = new["v"][block_table].reshape(B, -1, KV, Dh)
-    kv_pos = new["kv_pos"][block_table].reshape(B, -1)
-    out = attend(q, ck, cv, positions, kv_pos, 0, shard, sdt)
+    if runtime.use_pallas:
+        from repro.kernels.decode_attention.ops import \
+            decode_attention_paged_op
+        # valid length per row: tokens [0, pos), plus this step's token
+        # iff the row actually wrote it (dropped writes stay EMPTY and
+        # must stay masked, exactly as kv_pos masks them on the gather
+        # path)
+        wrote = (jnp.ones_like(pos) if write_active is None
+                 else write_active.astype(pos.dtype))
+        out = decode_attention_paged_op(
+            q[:, 0], new["k"], new["v"], block_table, pos + wrote,
+            use_pallas=True, interpret=True)[:, None].astype(q.dtype)
+        out = shard(out, "act_batch", "act_seq", "act_heads", None)
+    else:
+        ck = new["k"][block_table].reshape(B, -1, KV, Dh)
+        cv = new["v"][block_table].reshape(B, -1, KV, Dh)
+        kv_pos = new["kv_pos"][block_table].reshape(B, -1)
+        out = attend(q, ck, cv, positions, kv_pos, 0, shard, sdt)
     y = jnp.einsum("bshk,hkd->bsd", out,
                    getattr(shard, "use", lambda w: w)(p["wo"]))
     if cfg.attn_out_bias:

@@ -26,8 +26,8 @@ from typing import Dict, List, Optional
 
 from repro.core.clock import EventLoop
 from repro.core.scheduler import ElasticScheduler, SchedulerConfig
-from repro.core.types import IterationRecord, KernelCandidate, Request
-from repro.core.controller import TaskResult
+from repro.core.types import IterationRecord, KernelCandidate
+from repro.core.controller import TaskResult, submit_profile, submit_validate
 from repro.search.llm_sim import SimEvalBackend, SimLLMBackend
 from repro.search.workload import WorkloadModel, _rs
 
@@ -98,32 +98,34 @@ class BaselineHarness:
                 origin="reasoning", iteration=it)
 
             def submit_eval():
-                vdur, vres = self.eval.validate(cand)
+                # deferred plane: the evaluation thunks run when the
+                # task's (single) device picks them up, same as SpecGen
+                vfut = submit_validate(self.eval, cand)
 
-                def vdone(req: Request):
+                def vdone(f):
                     nonlocal best, best_speedup
+                    vres = f.value
                     rec.candidates += 1
                     if not vres.ok:
                         rec.status = vres.failure or "invalid"
                         state["done"] = True
                         return
                     rec.validated += 1
-                    pdur, pres = self.eval.profile(cand)
+                    pfut = submit_profile(self.eval, cand)
 
-                    def pdone(req2: Request):
+                    def pdone(f2):
                         nonlocal best, best_speedup
+                        pres = f2.value
                         rec.profiled += 1
                         rec.status = "success"
                         history.append(pres.speedup)
                         if pres.speedup > best_speedup:
                             best, best_speedup = cand, pres.speedup
                         state["done"] = True
-                    self.sched.submit(Request(
-                        kind="profiling", candidate=cand, duration=pdur,
-                        on_complete=pdone))
-                self.sched.submit(Request(
-                    kind="validation", candidate=cand, duration=vdur,
-                    on_complete=vdone))
+                    pfut.add_done_callback(pdone)
+                    self.sched.submit(pfut.request)
+                vfut.add_done_callback(vdone)
+                self.sched.submit(vfut.request)
 
             extra = self.spec.judge_latency + self.spec.verify_latency
             self.loop.schedule(gen_dur + extra, submit_eval, tag="gen")

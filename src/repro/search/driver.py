@@ -18,7 +18,9 @@ def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
                 scheduler_mode: str = "elastic",
                 validation_policy: str = "laf",
                 profiling_policy: str = "fifo",
+                realloc: str = "queue-max", priority: bool = True,
                 seed: int = 0, max_concurrent_spec: int = 8,
+                evaluator=None,
                 ) -> Tuple[TaskResult, ElasticScheduler, SpecController]:
     loop = EventLoop()
     wl = WorkloadModel(model=model, seed=seed)
@@ -26,10 +28,12 @@ def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
         num_devices=devices, mode=scheduler_mode,
         validation_policy=validation_policy,
         profiling_policy=profiling_policy,
+        realloc=realloc, priority=priority,
         static_split=((devices - devices // 2, devices // 2)
                       if scheduler_mode == "static" else None)))
     ctl = SpecController(
-        loop, sched, SimLLMBackend(wl), SimEvalBackend(wl),
+        loop, sched, SimLLMBackend(wl),
+        SimEvalBackend(wl) if evaluator is None else evaluator,
         FeedbackSearch(),
         SpecGenConfig(iterations=iterations, termination=termination,
                       enable_speculation=enable_speculation,
@@ -58,24 +62,34 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
                     scheduler_mode: str = "elastic",
                     validation_policy: str = "laf",
                     profiling_policy: str = "fifo",
+                    realloc: str = "arrival-rate", priority: bool = True,
                     work_stealing: bool = False,
                     enable_speculation: bool = True,
                     prefix_cache: bool = True,
-                    termination="hist-avg"):
-    """The paper's evaluation setting: N workflows sharing one pool."""
+                    termination="hist-avg", evaluator=None):
+    """The paper's evaluation setting: N workflows sharing one pool.
+
+    The pool runs the async evaluation plane by default: continuous
+    arrival-rate reallocation (the bursty multi-workflow setting it was
+    built for) and fallback-over-speculative priority.  ``realloc=
+    "queue-max", priority=False`` restores the PR-2 legacy plane
+    (benchmarks/table_async_overlap.py measures the difference).
+    """
     loop = EventLoop()
     wl = WorkloadModel(model=model, seed=seed)
     sched = ElasticScheduler(loop, SchedulerConfig(
         num_devices=devices, mode=scheduler_mode,
         validation_policy=validation_policy,
         profiling_policy=profiling_policy,
+        realloc=realloc, priority=priority,
         work_stealing=work_stealing,
         static_split=((devices - devices // 2, devices // 2)
                       if scheduler_mode == "static" else None)))
     ctls = []
     for i, task in enumerate(tasks):
         c = SpecController(
-            loop, sched, SimLLMBackend(wl), SimEvalBackend(wl),
+            loop, sched, SimLLMBackend(wl),
+            SimEvalBackend(wl) if evaluator is None else evaluator,
             FeedbackSearch(),
             SpecGenConfig(iterations=iterations, termination=termination,
                           enable_speculation=enable_speculation,

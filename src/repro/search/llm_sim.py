@@ -15,7 +15,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.controller import ReasoningScript, SpecScript
-from repro.core.types import KernelCandidate, ProfileResult, ValidationResult
+from repro.core.types import (EvalFuture, KernelCandidate, ProfileResult,
+                              ValidationResult, make_eval_request)
 from repro.search.workload import WorkloadModel, _rs
 
 _FILLER = [
@@ -154,10 +155,25 @@ class SimLLMBackend:
 
 
 class SimEvalBackend:
-    """Reveals the pre-decided outcome after calibrated latencies."""
+    """Reveals the pre-decided outcome after calibrated latencies.
+
+    Implements both eval protocols: the synchronous pair below (latency,
+    result) and the async ``submit_*`` pair whose thunks defer the draw
+    to device-dispatch time.  Outcomes and latencies hash off the
+    candidate alone (stateless), so deferring execution cannot change a
+    virtual-clock trace — the golden-trace determinism tests pin this.
+    """
 
     def __init__(self, model: WorkloadModel):
         self.model = model
+
+    def submit_validate(self, cand: KernelCandidate) -> EvalFuture:
+        return make_eval_request("validation", cand,
+                                 lambda: self.validate(cand))
+
+    def submit_profile(self, cand: KernelCandidate) -> EvalFuture:
+        return make_eval_request("profiling", cand,
+                                 lambda: self.profile(cand))
 
     def validate(self, cand: KernelCandidate
                  ) -> Tuple[float, ValidationResult]:

@@ -278,6 +278,75 @@ def test_device_sampler_top_k_restricts_support():
         assert out[i] in topk[i]
 
 
+def test_paged_pallas_kernel_parity_on_serving_path():
+    """layers.attention_paged behind Runtime.use_pallas lowers to the
+    block-table-consuming flash-decoding kernel (interpret mode) and
+    matches the gather-then-attend lowering; arena writes are bitwise
+    identical either way (one shared scatter path)."""
+    from repro.models import layers as L
+
+    rs = np.random.RandomState(3)
+    B, ps, nb = 3, 16, 4
+    num_pages = 1 + B * nb                       # page 0 = null page
+    KV, Dh, D = CFG.num_kv_heads, CFG.head_dim, CFG.d_model
+    lens = np.array([5, 37, 63])                 # per-row written tokens
+    bt = np.asarray(
+        [[1 + b * nb + j for j in range(nb)] for b in range(B)], np.int32)
+    kv_pos = np.full((num_pages, ps), L.EMPTY_SLOT, np.int64)
+    for b in range(B):                           # contiguous position order
+        for j in range(nb):
+            for i in range(ps):
+                pos = j * ps + i
+                if pos < lens[b]:
+                    kv_pos[bt[b, j], i] = pos
+    # unwritten slots keep GARBAGE K/V: both lowerings must mask them
+    arenas = {
+        "k": jnp.asarray(rs.randn(num_pages, ps, KV, Dh), jnp.float32),
+        "v": jnp.asarray(rs.randn(num_pages, ps, KV, Dh), jnp.float32),
+        "kv_pos": jnp.asarray(kv_pos, jnp.int32),
+    }
+    p = PARAMS["layers"][0]["attn"]
+    x = jnp.asarray(rs.randn(B, 1, D) * 0.3, jnp.float32)
+    positions = jnp.asarray(lens[:, None], jnp.int32)
+    bt = jnp.asarray(bt)
+
+    for active in (None, jnp.asarray([True, False, True])):
+        out_g, new_g = L.attention_paged(
+            CFG, p, x, positions, L.no_shard, Runtime(), arenas, bt,
+            write_active=active)
+        out_p, new_p = L.attention_paged(
+            CFG, p, x, positions, L.no_shard, Runtime(use_pallas=True),
+            arenas, bt, write_active=active)
+        np.testing.assert_allclose(np.asarray(out_g, np.float32),
+                                   np.asarray(out_p, np.float32),
+                                   atol=2e-4, rtol=2e-4)
+        for kk in ("k", "v", "kv_pos"):          # one shared write path
+            np.testing.assert_array_equal(np.asarray(new_g[kk]),
+                                          np.asarray(new_p[kk]))
+
+
+def test_engine_pallas_paged_decode_matches_gather_engine():
+    """The serving engine with Runtime(use_pallas=True) (paged kernel on
+    the decode path, forks included) emits the same greedy tokens as
+    the default gather-then-attend engine."""
+    def build(runtime):
+        store = PrefixCacheStore(local_budget_bytes=1 << 30,
+                                 remote_budget_bytes=1 << 30)
+        return Engine(CFG, PARAMS, runtime, max_len=96,
+                      cache_store=store, max_batch=4)
+
+    dense, pallas = build(Runtime()), build(Runtime(use_pallas=True))
+    outs = {}
+    for name, eng in (("dense", dense), ("pallas", pallas)):
+        g0 = eng.submit(prompt(11, 14), max_new_tokens=6, temperature=0.0)
+        g1 = eng.submit(prompt(12, 9), max_new_tokens=6, temperature=0.0)
+        eng.step_all()                           # admit + first token
+        f0 = eng.fork(g0, max_new_tokens=4, temperature=0.0)
+        outs[name] = {"g0": eng.run(g0), "g1": eng.run(g1),
+                      "f0": eng.run(f0)}
+    assert outs["dense"] == outs["pallas"]
+
+
 def test_engine_stochastic_streams_reproducible_per_seed():
     """Sampling is a pure function of (seed, position, logits): the
     same submission replays identically; a different seed diverges."""
