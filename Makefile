@@ -7,11 +7,12 @@
 #                  kernel-optimization task
 #   make serve   - continuous-batched real-model serving demo with
 #                  speculative forks + two-tier prefix cache
-#   make bench-smoke - work-stealing + async-eval-plane tables on a
-#                  reduced grid (3 workflows, 4 devices, 10 iterations)
+#   make bench-smoke - work-stealing + async-eval-plane + remote-KV
+#                  transport + paged-kernel tables on reduced grids
 #   make smoke-real - real-eval deferred plane end to end: bounded
 #                  kernel_search with interpret-mode builds executing
-#                  at device dispatch
+#                  at device dispatch; prints build-overlap AND
+#                  remote-KV migration/fetch-overlap stats
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
@@ -30,6 +31,8 @@ serve:
 bench-smoke:
 	$(PY) -m benchmarks.table_work_stealing --smoke
 	$(PY) -m benchmarks.table_async_overlap --smoke
+	$(PY) -m benchmarks.table_remote_kv --smoke
+	$(PY) -m benchmarks.table_paged_kernel --smoke
 
 smoke-real:
 	$(PY) examples/kernel_search.py T6 3

@@ -23,6 +23,8 @@ MODULES = [
     "table4_utilization",
     "table_work_stealing",
     "table_async_overlap",
+    "table_remote_kv",
+    "table_paged_kernel",
     "table5_breakdown",
     "table6_kernel_speedup",
     "table7_tokens",

@@ -10,7 +10,12 @@ configuration improve over iterations.
 Evaluation is DEFERRED (DESIGN.md §Async-eval-plane): submission only
 queues a thunk, the interpret-mode build runs when the elastic pool
 grants a device — overlapping the still-streaming reasoning trace —
-and same-build requests co-resident in the queue share one build.
+and same-build requests co-resident in the queue share one build;
+repeated configs across iterations replay from the bounded build-result
+cache.  The remote-KV transport plane (DESIGN.md §Remote-KV-transport)
+rides the same loop: every speculative fork fetches its reasoning
+prefix over the modeled link, and the fetch latency lands in the fork's
+availability time.
 
     PYTHONPATH=src python examples/kernel_search.py [task] [iterations]
 """
@@ -22,6 +27,7 @@ from repro.core.scheduler import ElasticScheduler, SchedulerConfig
 from repro.search.llm_sim import FeedbackSearch, SimLLMBackend
 from repro.search.real_eval import RealEvalBackend
 from repro.search.workload import WorkloadModel
+from repro.serving.transport import TransportPlane
 from repro.kernels.matmul.ops import estimate_cost, reference_cost
 from repro.search.tasks import TASKS
 
@@ -31,11 +37,13 @@ iters = int(sys.argv[2]) if len(sys.argv) > 2 else 12
 loop = EventLoop()
 sched = ElasticScheduler(loop, SchedulerConfig(
     num_devices=4, realloc="arrival-rate"))
+transport = TransportPlane(loop=loop)
+sched.attach_transport(transport)
 evaluator = RealEvalBackend()
 ctl = SpecController(
     loop, sched, SimLLMBackend(WorkloadModel("glm", seed=0)),
     evaluator, FeedbackSearch(),
-    SpecGenConfig(iterations=iters))
+    SpecGenConfig(iterations=iters), transport=transport)
 res = ctl.run_task(task)
 
 # deferred-plane accounting: speculative validations GRANTED a device
@@ -69,5 +77,23 @@ if best is not None:
           f"aligned={cost.mxu_aligned})")
 print(f"history: {[round(h, 2) for h in res.history[1:]]}")
 print(f"deferred eval plane: {evaluator.builds_started} builds "
-      f"({evaluator.batched_hits} batched) of {evaluator.submits} "
-      f"submits; {overlapped} spec evals granted during live reasoning")
+      f"({evaluator.batched_hits} batched, {evaluator.cache_hits} "
+      f"cache hits, {evaluator.cache_hit_rate():.0%} rate) of "
+      f"{evaluator.submits} submits; {overlapped} spec evals granted "
+      f"during live reasoning")
+
+# transport-plane accounting: fork-prefix fetches that rode the modeled
+# RDMA link, and how many started while reasoning was still streaming
+fetch_overlap = 0
+for rec in res.records:
+    if not rec.gen_time:
+        continue
+    lo, hi = rec.t_start, rec.t_start + rec.gen_time
+    fetch_overlap += sum(
+        1 for (t, ev, tag, _n) in transport.link.trace
+        if ev == "start" and tag.startswith("prefix") and lo <= t < hi)
+mean_fetch = res.prefix_fetch_s / max(res.prefix_fetches, 1)
+print(f"remote-KV transport: {res.prefix_fetches} prefix fetches "
+      f"({transport.link.bytes_moved / 2**20:.1f} MiB moved, mean "
+      f"{mean_fetch * 1e3:.2f} ms/fetch), {fetch_overlap} overlapped "
+      f"live reasoning; link util {sched.transport_utilization():.1%}")

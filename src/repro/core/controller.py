@@ -142,17 +142,30 @@ class TaskResult:
     profiling_feedback: int
     early_terminations: int
     history: List[float]
+    # remote-KV transport accounting (0 without a TransportPlane): how
+    # many fork-prefix fetches rode the modeled link, and their total
+    # modeled latency — the fetch cost prefix-store hits now carry
+    prefix_fetches: int = 0
+    prefix_fetch_s: float = 0.0
 
 
 class SpecController:
     def __init__(self, loop: EventLoop, scheduler: ElasticScheduler,
                  llm: LLMBackend, evaluator: EvalBackend,
                  search: SearchAlgorithm, cfg: SpecGenConfig,
-                 name: str = "w0"):
+                 name: str = "w0", transport=None):
         self.loop, self.sched = loop, scheduler
         self.llm, self.evaluator, self.search = llm, evaluator, search
         self.cfg = cfg
         self.name = name
+        # remote-KV transport plane (serving/transport.py): when set,
+        # prefix-store hits are no longer free — each speculative fork
+        # fetches its reasoning-prefix KV over the modeled link and the
+        # fetch latency lands in the fork's availability time
+        self.transport = transport
+        if transport is not None:
+            assert transport.loop is loop, \
+                "transport plane must share the controller's event loop"
         self.criterion = get_criterion(cfg.termination)
         self.gen_timeline: List[tuple] = []     # (t, reasoning+spec inflight)
         self.done = False
@@ -178,6 +191,7 @@ class SpecController:
         self._best_speedup = 0.0
         self._records: List[IterationRecord] = []
         self._tok = {"reason": 0.0, "spec": 0.0, "cached": 0.0}
+        self._fetch = {"n": 0, "s": 0.0}
         self._early_terms = 0
         self._feedback_total = 0
         self._t0 = self.loop.now
@@ -287,15 +301,42 @@ class SpecController:
             # the backend (it may serve cached/shared scripts) and must
             # not be mutated here.
             fork_delay = spec.duration
+            xfer = None
             if self.cfg.prefix_cache:
                 self._tok["cached"] += spec.prompt_tokens
                 rec.cached_prefix_tokens += spec.prompt_tokens
+                if self.transport is not None:
+                    # the prefix hit is served from the REMOTE tier over
+                    # the modeled link.  The transfer rides the shared
+                    # serial wire (utilization traces; it queues behind
+                    # migrations), and the fork's candidate becomes
+                    # available only once the prefix KV has ACTUALLY
+                    # landed — the queued completion below, not the
+                    # queue-free estimate.
+                    _lat, xfer = self.transport.prefix_fetch(
+                        spec.prompt_tokens, tag=f"prefix-{self.name}")
+                    self._fetch["n"] += 1
+
+                    def account(_f, x=xfer):
+                        self._fetch["s"] += x.finished - x.submitted
+                    xfer.future.add_done_callback(account)
             else:
                 self._tok["spec"] += spec.prompt_tokens
                 rec.spec_tokens += spec.prompt_tokens
                 fork_delay += spec.prompt_tokens / 2500.0
 
-            def on_spec_done(s=spec):
+            def on_spec_done(s=spec, x=xfer):
+                if x is not None and not x.done and \
+                        not (state["done"] or state["terminated"]):
+                    # the generation finished but its prefix KV is still
+                    # on the wire: availability waits for the tail (the
+                    # continuation re-checks the iteration state — a
+                    # terminated iteration ignores the late landing)
+                    x.future.add_done_callback(
+                        lambda _f: None
+                        if (state["done"] or state["terminated"])
+                        else on_spec_done(s, None))
+                    return
                 state["spec_live"] -= 1
                 self._mark_gen(state)
                 if state["done"] or state["terminated"]:
@@ -415,7 +456,9 @@ class SpecController:
             cached_prefix_tokens=self._tok["cached"],
             e2e_time=self.loop.now - self._t0,
             profiling_feedback=self._feedback_total,
-            early_terminations=self._early_terms, history=self._history)
+            early_terminations=self._early_terms, history=self._history,
+            prefix_fetches=self._fetch["n"],
+            prefix_fetch_s=self._fetch["s"])
         if self._on_done is not None:
             self._on_done(self)
 

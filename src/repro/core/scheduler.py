@@ -64,6 +64,14 @@ class SchedulerConfig:
     # Fallback-over-speculative request ordering.  False restores the
     # PR-2 pure LAF/FIFO queues (golden-trace compat).
     priority: bool = True
+    # PREDICTIVE backpressure (ROADMAP: arrival-rate-aware forking):
+    # fold the smoothed arrival rate into ``pressure`` so bursty
+    # co-tenant load throttles forks BEFORE the queue fills.  Only
+    # active under "arrival-rate" realloc (queue-max mode tracks no
+    # rates, keeping the PR-2/PR-3 golden traces byte-identical).
+    predictive_pressure: bool = True
+    svc_halflife_n: float = 5.0      # EWMA span (completions) for the
+    #                                  validation service-time estimate
     # BEYOND-PAPER: let an idle device serve the other pool's queue
     # within an iteration (the paper only rebalances between iterations).
     # Off by default to keep the paper-faithful ablation clean; measured
@@ -145,6 +153,12 @@ class ElasticScheduler:
         # EWMA arrival rates (events/second) for "arrival-rate" realloc
         self._rate = {"validation": 0.0, "profiling": 0.0}
         self._rate_t = loop.now
+        # EWMA validation service time (seconds) — the horizon over
+        # which predicted arrivals are folded into ``pressure``
+        self._svc_val = 0.0
+        self._svc_n = 0
+        # remote-KV transport links sharing this loop (attach_transport)
+        self.transport_links: List = []
         self._t0 = loop.now
         self._set_split(*self._initial_split())
 
@@ -213,8 +227,19 @@ class ElasticScheduler:
         worth of backlog — the controller pauses forking there.  The
         validation queue is the binding signal: speculative floods land
         on it first, and profiling backlog is bounded by validation
-        throughput (every profile request was a validation pass)."""
-        return len(self.q_val) / max(self.cfg.num_devices, 1)
+        throughput (every profile request was a validation pass).
+
+        Under ``predictive_pressure`` (arrival-rate realloc only) the
+        signal additionally counts the arrivals EXPECTED within one
+        mean validation service time — ``rate x service`` is the
+        backlog a burst is about to create, so co-tenant floods
+        throttle forks BEFORE the queue physically fills."""
+        queued = float(len(self.q_val))
+        if self.cfg.predictive_pressure and self.cfg.mode != "static" \
+                and self.cfg.realloc == "arrival-rate":
+            rate_v, _ = self.arrival_rates
+            queued += rate_v * self._svc_val
+        return queued / max(self.cfg.num_devices, 1)
 
     # ------------------------------------------------------------ lifecycle
     def begin_iteration(self, index: int) -> None:
@@ -317,6 +342,11 @@ class ElasticScheduler:
 
     def _complete(self, d: _Device, req: Request) -> None:
         req.finished = self.loop.now
+        if req.kind == "validation" and req.started is not None:
+            dur = req.finished - req.started
+            self._svc_n += 1
+            a = min(1.0, 1.0 / min(self._svc_n, self.cfg.svc_halflife_n))
+            self._svc_val += a * (dur - self._svc_val)
         self._release(d, record=True)
         self.completed.append(req)
         if self.cfg.mode != "static" and self.cfg.realloc == "arrival-rate":
@@ -371,6 +401,25 @@ class ElasticScheduler:
         if prev_busy and t_end > prev_t:
             busy_t += t_end - prev_t
         return busy_t / max(t_end - self._t0, 1e-9)
+
+    # --------------------------------------------------- transport plane
+    def attach_transport(self, plane) -> None:
+        """Wire a remote-KV ``TransportPlane`` to this pool: the remote
+        tier's capacity starts tracking the live validation/profiling
+        split (reallocation shrinks/grows it mid-run), and the link's
+        busy time joins this scheduler's utilization reporting."""
+        assert plane.loop is self.loop, \
+            "transport plane must share the scheduler's event loop"
+        self.transport_links.append(plane.link)
+        plane.tier.sched = self
+
+    def transport_utilization(self, t_end: Optional[float] = None) -> float:
+        """Mean busy fraction of the attached migration links — the
+        transfer half of the utilization trace (Table-4 companion)."""
+        if not self.transport_links:
+            return 0.0
+        return sum(l.utilization(t_end) for l in self.transport_links) \
+            / len(self.transport_links)
 
     @property
     def steal_rate(self) -> float:

@@ -6,10 +6,22 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.clock import EventLoop
 from repro.core.controller import SpecController, SpecGenConfig, TaskResult
 from repro.core.scheduler import ElasticScheduler, SchedulerConfig
+from repro.serving.transport import TransportConfig, TransportPlane
 from repro.search.baselines import (BASELINES, BaselineHarness,
                                     one_gpu_per_kernel_scheduler)
 from repro.search.llm_sim import FeedbackSearch, SimEvalBackend, SimLLMBackend
 from repro.search.workload import WorkloadModel
+
+
+def _make_transport(loop: EventLoop, sched: ElasticScheduler,
+                    transport) -> Optional[TransportPlane]:
+    """``transport``: None (legacy, no modeled remote-KV link) or
+    "async"/"sync" (build a plane on the pool's loop and attach it)."""
+    if transport is None:
+        return None
+    plane = TransportPlane(loop=loop, cfg=TransportConfig(mode=transport))
+    sched.attach_transport(plane)
+    return plane
 
 
 def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
@@ -20,7 +32,7 @@ def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
                 profiling_policy: str = "fifo",
                 realloc: str = "queue-max", priority: bool = True,
                 seed: int = 0, max_concurrent_spec: int = 8,
-                evaluator=None,
+                evaluator=None, transport=None,
                 ) -> Tuple[TaskResult, ElasticScheduler, SpecController]:
     loop = EventLoop()
     wl = WorkloadModel(model=model, seed=seed)
@@ -31,6 +43,7 @@ def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
         realloc=realloc, priority=priority,
         static_split=((devices - devices // 2, devices // 2)
                       if scheduler_mode == "static" else None)))
+    plane = _make_transport(loop, sched, transport)
     ctl = SpecController(
         loop, sched, SimLLMBackend(wl),
         SimEvalBackend(wl) if evaluator is None else evaluator,
@@ -38,7 +51,8 @@ def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
         SpecGenConfig(iterations=iterations, termination=termination,
                       enable_speculation=enable_speculation,
                       prefix_cache=prefix_cache,
-                      max_concurrent_spec=max_concurrent_spec))
+                      max_concurrent_spec=max_concurrent_spec),
+        transport=plane)
     res = ctl.run_task(task_id)
     return res, sched, ctl
 
@@ -66,7 +80,8 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
                     work_stealing: bool = False,
                     enable_speculation: bool = True,
                     prefix_cache: bool = True,
-                    termination="hist-avg", evaluator=None):
+                    termination="hist-avg", evaluator=None,
+                    transport=None):
     """The paper's evaluation setting: N workflows sharing one pool.
 
     The pool runs the async evaluation plane by default: continuous
@@ -85,6 +100,7 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
         work_stealing=work_stealing,
         static_split=((devices - devices // 2, devices // 2)
                       if scheduler_mode == "static" else None)))
+    plane = _make_transport(loop, sched, transport)
     ctls = []
     for i, task in enumerate(tasks):
         c = SpecController(
@@ -94,7 +110,7 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
             SpecGenConfig(iterations=iterations, termination=termination,
                           enable_speculation=enable_speculation,
                           prefix_cache=prefix_cache),
-            name=f"w{i}")
+            name=f"w{i}", transport=plane)
         c.start(task)
         ctls.append(c)
     loop.run(stop=lambda: all(c.done for c in ctls))

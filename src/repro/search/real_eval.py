@@ -19,10 +19,18 @@ they share one ``_BatchCell`` keyed by the full build inputs (check
 shapes + epilogue/mask + block config), the first thunk granted a
 device runs the build once, and co-resident followers replay the shared
 result for their (near-zero) measured lookup cost.
+
+Cross-workflow dedup: cells dissolve once built, so a config RESUBMITTED
+in a later iteration (or by another workflow sharing the backend) used
+to rebuild from scratch.  Built results now land in a bounded
+build-result cache (LRU eviction + TTL expiry, keyed by the same build
+signature), so repeated configs skip the rebuild across iterations and
+workflows; per-workflow hit rates are counted via ``Request.owner``.
 """
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -55,7 +63,8 @@ class RealEvalBackend:
     """Eval backend (sync + async protocols) over actual kernel builds
     (interpret mode)."""
 
-    def __init__(self, atol: float = 2e-2):
+    def __init__(self, atol: float = 2e-2, result_cache_size: int = 128,
+                 result_cache_ttl: float = 600.0, clock=time.monotonic):
         self.atol = atol
         self._rs = np.random.RandomState(0)
         # check inputs + oracle output are candidate-independent: cache
@@ -68,6 +77,20 @@ class RealEvalBackend:
         self.builds_started = 0          # thunks that actually built
         self.batched_hits = 0            # followers served from a cell
         self._pending: Dict[tuple, _BatchCell] = {}
+        # cross-workflow build-result cache: build signature -> result,
+        # LRU-bounded + TTL so stale prices age out (the cost model is
+        # deterministic today, but real profiles drift with machine
+        # load — a production backend must not replay them forever)
+        self.result_cache_size = result_cache_size
+        self.result_cache_ttl = result_cache_ttl
+        self._clock = clock
+        self._results: "OrderedDict[tuple, Tuple[ValidationResult, float]]" \
+            = OrderedDict()
+        self.cache_hits = 0              # thunks served from the cache
+        self.cache_expired = 0           # TTL evictions observed
+        self.cache_evictions = 0         # LRU evictions (bound hit)
+        self.cache_lookups_by_owner: Dict[str, int] = {}
+        self.cache_hits_by_owner: Dict[str, int] = {}
 
     # ------------------------------------------------------ async protocol
     def _build_key(self, cand: KernelCandidate) -> tuple:
@@ -82,6 +105,36 @@ class RealEvalBackend:
                 int(cfg.get("bm", 64)), int(cfg.get("bn", 64)),
                 int(cfg.get("bk", 32)))
 
+    # ------------------------------------------------ build-result cache
+    def _cache_get(self, key) -> Optional[ValidationResult]:
+        hit = self._results.get(key)
+        if hit is None:
+            return None
+        res, stored = hit
+        if self._clock() - stored > self.result_cache_ttl:
+            del self._results[key]
+            self.cache_expired += 1
+            return None
+        self._results.move_to_end(key)
+        return res
+
+    def _cache_put(self, key, res: ValidationResult) -> None:
+        self._results[key] = (res, self._clock())
+        self._results.move_to_end(key)
+        while len(self._results) > self.result_cache_size:
+            self._results.popitem(last=False)
+            self.cache_evictions += 1
+
+    def cache_hit_rate(self, owner: Optional[str] = None) -> float:
+        """Build-result-cache hit rate, per workflow or overall."""
+        if owner is None:
+            total = sum(self.cache_lookups_by_owner.values())
+            hits = sum(self.cache_hits_by_owner.values())
+        else:
+            total = self.cache_lookups_by_owner.get(owner, 0)
+            hits = self.cache_hits_by_owner.get(owner, 0)
+        return hits / total if total else 0.0
+
     def submit_validate(self, cand: KernelCandidate) -> EvalFuture:
         """Package the build as a dispatch-time thunk.  No jax work (no
         input RNG, no reference, no kernel build) happens here."""
@@ -93,16 +146,34 @@ class RealEvalBackend:
 
         def thunk() -> Tuple[float, ValidationResult]:
             t0 = time.perf_counter()
-            if cell.result is None:
-                self.builds_started += 1
-                dur, res = self.validate(cand)
-                cell.result = res
-                self._pending.pop(key, None)     # batch closed: built
-                return dur, res
-            self.batched_hits += 1
-            return time.perf_counter() - t0, cell.result
+            # owner is stamped on the Request between submission and the
+            # device grant, so the thunk (grant-time) can attribute the
+            # lookup to its workflow
+            owner = fut.request.owner
+            self.cache_lookups_by_owner[owner] = \
+                self.cache_lookups_by_owner.get(owner, 0) + 1
+            if cell.result is not None:          # co-resident batch
+                self.batched_hits += 1
+                return time.perf_counter() - t0, cell.result
+            cached = self._cache_get(key)
+            if cached is not None:               # cross-iteration dedup
+                self.cache_hits += 1
+                self.cache_hits_by_owner[owner] = \
+                    self.cache_hits_by_owner.get(owner, 0) + 1
+                cell.result = cached             # co-residents replay too
+                self._pending.pop(key, None)
+                return time.perf_counter() - t0, cached
+            self.builds_started += 1
+            dur, res = self.validate(cand)
+            cell.result = res
+            self._cache_put(key, res)
+            self._pending.pop(key, None)         # batch closed: built
+            return dur, res
 
-        return make_eval_request("validation", cand, thunk)
+        # thunk closes over `fut` by name: it only dereferences it at
+        # grant time, well after make_eval_request assigns it
+        fut = make_eval_request("validation", cand, thunk)
+        return fut
 
     def submit_profile(self, cand: KernelCandidate) -> EvalFuture:
         self.submits += 1

@@ -52,7 +52,8 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.layers import Runtime
 from repro.distributed.sharding import NO_SHARD
-from repro.serving.kvcache import PrefixCacheStore, tree_bytes
+from repro.serving.kvcache import (PendingFetch, PrefixCacheStore,
+                                   tree_bytes)
 from repro.serving.pagepool import PagePool, PagedPrefix, \
     PagePoolExhausted, _ceil_div, _pow2_pad
 from repro.serving.sampler import sample_tokens
@@ -83,7 +84,7 @@ class Engine:
                  max_len: int = 512, cache_store: PrefixCacheStore = None,
                  store_prefixes: bool = True, max_batch: int = 8,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 top_k: int = 0):
+                 top_k: int = 0, transport=None):
         self.cfg, self.params, self.runtime = cfg, params, runtime
         self.max_len = max_len
         self.max_batch = max_batch
@@ -96,12 +97,21 @@ class Engine:
         # (PrefixCacheStore defines __len__) — compare to None instead
         self.store = cache_store if cache_store is not None else \
             PrefixCacheStore(local_budget_bytes=1 << 30,
-                             remote_budget_bytes=1 << 30)
+                             remote_budget_bytes=1 << 30,
+                             transport=transport)
+        if transport is not None and self.store.plane is None:
+            self.store.plane = transport
+        self.transport = transport if transport is not None \
+            else self.store.plane
         self.store_prefixes = store_prefixes
         self._gens: Dict[int, Generation] = {}
         self._ids = itertools.count()
         self._cache = None                      # pagepool cache pytree
         self._free: List[int] = list(range(max_batch))
+        # generations waiting on an in-flight remote-KV fetch: they stay
+        # "pending" (other rows keep decoding) until the tail page lands
+        self._awaiting_fetch: Dict[int, PendingFetch] = {}
+        self.fetch_deferrals = 0                # admissions parked on a fetch
         self.tokens_prefilled = 0
         self.tokens_decoded = 0
         self.decode_dispatches = 0              # jitted decode calls
@@ -241,6 +251,11 @@ class Engine:
 
     def _retire(self, g: Generation, status: str) -> None:
         g.status = status
+        pf = self._awaiting_fetch.pop(g.gen_id, None)
+        if pf is not None:
+            # abort the awaited fetch: when this was its last waiter the
+            # store cancels the transfers — no callback ever fires
+            pf.release_waiter(g.gen_id)
         if g.slot >= 0:
             if status == "done" and g.pos > 0:
                 # the finished prefix must survive the row recycle:
@@ -275,10 +290,33 @@ class Engine:
         groups: Dict[Tuple[int, int], List] = {}
         for g in take:
             n = g.prompt_len - 1        # decode consumes the last token
-            if n == 0:
+            pf = self._awaiting_fetch.get(g.gen_id)
+            if pf is not None and pf.cancelled:
+                # the fetch was torn down underneath us (re-put of the
+                # key, sibling abort): drop the dead handle and re-probe
+                # the store like a fresh admission
+                del self._awaiting_fetch[g.gen_id]
+                pf.release_waiter(g.gen_id)
+                pf = None
+            if pf is not None:
+                if not pf.ready:
+                    continue            # pages still on the wire: stay
+                #                         pending, other rows decode on
+                del self._awaiting_fetch[g.gen_id]
+                pf.release_waiter(g.gen_id)
+                payload, clen = pf.payload, pf.length
+            elif n == 0:
                 payload, clen = None, 0
             else:
                 payload, clen = self.store.get_longest(g.tokens[:n])
+                if isinstance(payload, PendingFetch):
+                    # future-backed remote hit: await it only when the
+                    # suffix prefill actually needs the pages — park the
+                    # admission, keep decoding everyone else
+                    payload.retain(g.gen_id)
+                    self._awaiting_fetch[g.gen_id] = payload
+                    self.fetch_deferrals += 1
+                    continue
             if payload is not None:
                 pages, extra = payload.acquire()
             else:
@@ -459,6 +497,11 @@ class Engine:
             jnp.asarray(seeds))
         nxt = np.asarray(nxt)
         self.decode_dispatches += 1
+        if self.transport is not None:
+            # one decode step of virtual time: in-flight migrations and
+            # fetches make progress WHILE rows decode (the overlap the
+            # synchronous device_get path could never express)
+            self.transport.tick()
         for g in gens:
             t = int(nxt[g.slot])
             g.tokens.append(t)
@@ -478,6 +521,12 @@ class Engine:
                     f"engine full: {self.max_batch} rows live; retire or "
                     f"cancel a generation before admitting another")
             self._admit_all([g])
+            if g.status == "pending" and g.gen_id in self._awaiting_fetch:
+                # sole caller, nothing else to decode: the engine really
+                # is blocked on the wire — advance the clock and charge
+                # the stall
+                self.transport.stall(self.transport.cfg.decode_step_s)
+                return None
         if g.status != "running":
             return None
         self._dispatch([g])
@@ -506,6 +555,12 @@ class Engine:
         while any(g.status in ("pending", "running")
                   for g in self._gens.values()):
             if not self.step_all():
+                if self._awaiting_fetch and self.transport is not None \
+                        and self.transport.in_flight:
+                    # every row is parked on a remote-KV fetch: stall
+                    # the engine until the next pages land
+                    self.transport.stall(self.transport.cfg.decode_step_s)
+                    continue
                 break                            # only blocked pendings
         return {gid: g.emitted for gid, g in self._gens.items()}
 

@@ -372,6 +372,7 @@ class PagedPrefix:
     extra: Any
     length: int
     host: Any = None                    # host payload when migrated out
+    migrating: bool = False             # streamed migrate-out in flight
 
     @classmethod
     def capture(cls, engine, pages: Sequence[int], extra, length: int):
@@ -381,10 +382,12 @@ class PagedPrefix:
 
     @property
     def on_device(self) -> bool:
-        return self.host is None
+        return self.host is None and not self.migrating
 
     @property
     def num_pages(self) -> int:
+        if self.migrating:
+            return len(self._out_ids)
         return len(self.pages) if self.on_device else len(self.host["n"])
 
     @property
@@ -427,9 +430,98 @@ class PagedPrefix:
     def migrate_in(self):
         eng = self.engine
         pages = eng.pool.alloc(len(self.host["n"]))
-        eng._cache = eng.pool.upload_pages(eng._cache, self.host["data"],
-                                           pages)
+        if "pages" in self.host:        # streamed-out (per-page) format
+            data = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
+                                *self.host["pages"])
+        else:
+            data = self.host["data"]
+        eng._cache = eng.pool.upload_pages(eng._cache, data, pages)
         self.pages, self.host = pages, None
         if self.extra is not None:
             self.extra = jax.tree.map(jnp.asarray, self.extra)
         return self
+
+    # ------------------------------------------- streamed (chunked) hooks
+    # The transport plane (serving/transport.py) drives these: migration
+    # moves the block table page-range by page-range, releasing each
+    # range's device pages as soon as its transfer lands; a fetch
+    # preallocates destination pages and uploads ranges as they arrive,
+    # so the restore starts before the tail is off the wire.
+
+    @staticmethod
+    def _slice_pages(data, lo: int, hi: int):
+        return [jax.tree.map(lambda a: a[lo:hi], d) for d in data]
+
+    def migrate_out_begin(self) -> int:
+        """Start a streamed migrate-out; returns the page count.  Until
+        the tail chunk lands the prefix is neither acquirable (not
+        on_device) nor restorable."""
+        assert self.on_device, "migrate_out_begin on a non-resident prefix"
+        self._out_ids = list(self.pages)
+        self._out_data: List[Any] = [None] * len(self._out_ids)
+        self.migrating = True
+        return len(self._out_ids)
+
+    def migrate_out_chunk(self, lo: int, hi: int) -> None:
+        """Move block-table slice [lo, hi) host-side and release those
+        device pages immediately — they can serve live generations
+        while the rest of the migration is still on the wire."""
+        eng = self.engine
+        ids = self._out_ids[lo:hi]
+        data = eng.pool.read_pages(eng._cache, ids)
+        for j in range(lo, hi):
+            self._out_data[j] = self._slice_pages(data, j - lo, j - lo + 1)
+        eng.pool.release(ids)
+
+    def migrate_out_finish(self):
+        self.host = {"pages": self._out_data, "n": self._out_ids}
+        self.pages = []
+        self.migrating = False
+        del self._out_data, self._out_ids
+        if self.extra is not None:
+            self.extra = jax.tree.map(
+                lambda l: np.asarray(jax.device_get(l)), self.extra)
+        return self
+
+    def migrate_out_abort(self, moved_upto: int) -> None:
+        """Tear down a part-way migration (the entry is being disposed):
+        chunks past ``moved_upto`` never transferred — release their
+        still-held device refs; staged host data is dropped."""
+        eng = self.engine
+        rest = self._out_ids[moved_upto:]
+        if rest:
+            eng.pool.release(rest)
+        self.pages, self.migrating = [], False
+        del self._out_data, self._out_ids
+
+    def fetch_begin(self) -> List[int]:
+        """Preallocate destination pages for a streamed restore (may
+        raise PagePoolExhausted — the caller falls back to recompute)."""
+        assert not self.on_device and not self.migrating
+        self._in_pages = self.engine.pool.alloc(len(self.host["n"]))
+        return list(self._in_pages)
+
+    def _host_chunk(self, lo: int, hi: int):
+        if "pages" in self.host:
+            return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
+                                *self.host["pages"][lo:hi])
+        return self._slice_pages(self.host["data"], lo, hi)
+
+    def fetch_chunk(self, lo: int, hi: int) -> None:
+        eng = self.engine
+        eng._cache = eng.pool.upload_pages(
+            eng._cache, self._host_chunk(lo, hi), self._in_pages[lo:hi])
+
+    def fetch_finish(self):
+        self.pages = self._in_pages
+        self.host = None
+        del self._in_pages
+        if self.extra is not None:
+            self.extra = jax.tree.map(jnp.asarray, self.extra)
+        return self
+
+    def fetch_abort(self) -> None:
+        """Cancelled fetch: uploaded + reserved destination pages go
+        back to the pool; host payload stays restorable."""
+        self.engine.pool.release(self._in_pages)
+        del self._in_pages

@@ -307,6 +307,115 @@ def test_real_eval_builds_overlap_live_reasoning_4_devices():
     assert be.builds_started >= 2
 
 
+# ------------------------------------------- predictive fork throttle
+def test_predictive_pressure_rises_before_queue_growth():
+    """A synthetic co-tenant burst lifts ``pressure`` past the fork
+    cutoff (1.0) while the RAW queue signal is still far below it: the
+    smoothed arrival rate x mean service time anticipates the backlog
+    the burst is about to create."""
+    loop, s = mk(n=4, realloc="arrival-rate", rate_halflife=5.0)
+    # establish the validation service-time estimate (~50 s)
+    for _ in range(2):
+        s.submit(req("validation", 50.0))
+    loop.run()
+    assert s._svc_val == pytest.approx(50.0)
+    # burst: rapid-fire arrivals, devices soak most of them up
+    for _ in range(4):
+        s.submit(req("validation", 50.0))
+    raw = len(s.q_val) / s.cfg.num_devices
+    assert raw < 1.0                       # queue has NOT filled yet
+    assert s.pressure >= 1.0, (s.pressure, s.arrival_rates, s._svc_val)
+    # the raw signal is what queue-max mode (and the PR-3 goldens) see
+    s.cfg.predictive_pressure = False
+    assert s.pressure == pytest.approx(raw)
+
+
+def test_predictive_pressure_throttles_forks_ahead_of_queues():
+    """Regression for the ROADMAP item: under the burst above, a
+    controller consulting ``sched.pressure`` stops forking BEFORE the
+    validation queue fills; with the predictive term disabled the same
+    queue state would still fork."""
+    from repro.core.types import IterationRecord
+
+    def forked(predictive: bool) -> int:
+        loop, s = mk(n=4, realloc="arrival-rate", rate_halflife=5.0,
+                     predictive_pressure=predictive)
+        llm = SharedScriptLLM()
+        ctl = SpecController(loop, s, llm,
+                             SimEvalBackend(WorkloadModel("glm", seed=0)),
+                             FeedbackSearch(),
+                             SpecGenConfig(iterations=1))
+        ctl._task_id, ctl._ctx = "T1", {}
+        ctl._tok = {"reason": 0.0, "spec": 0.0, "cached": 0.0}
+        state = {"it": 0, "rec": IterationRecord(index=0, t_start=0.0),
+                 "terminated": False, "reason_done": False, "done": False,
+                 "spec_live": 0, "spec_events": [], "chars_seen": 50,
+                 "chars_total": 100}
+        for _ in range(2):                     # service-time estimate
+            s.submit(req("validation", 50.0))
+        loop.run()
+        for _ in range(4):                     # the co-tenant burst
+            s.submit(req("validation", 50.0))
+        ctl._fork(state)
+        return state["spec_live"]
+
+    assert forked(predictive=True) == 0        # throttled pre-queue
+    assert forked(predictive=False) > 0        # reactive signal forks on
+
+
+# ------------------------------------------ cross-workflow build cache
+def test_result_cache_dedups_rebuilds_across_iterations():
+    """A config resubmitted AFTER its batch cell closed used to rebuild;
+    the bounded result cache replays it, attributed per workflow."""
+    from repro.search.real_eval import RealEvalBackend
+    loop, s = mk(n=2)
+    be = RealEvalBackend()
+    f1 = be.submit_validate(cand("T6", bm=64, bn=64, bk=32))
+    f1.request.owner = "w0"
+    s.submit(f1.request)
+    loop.run()
+    assert be.builds_started == 1
+    # later iteration / other workflow: same build signature
+    f2 = be.submit_validate(cand("T6", bm=64, bn=64, bk=32))
+    f2.request.owner = "w1"
+    s.submit(f2.request)
+    loop.run()
+    assert be.builds_started == 1              # NO rebuild
+    assert be.cache_hits == 1
+    assert f2.done and f2.value.ok
+    assert be.cache_hit_rate("w1") == 1.0
+    assert be.cache_hit_rate("w0") == 0.0
+    assert 0.0 < be.cache_hit_rate() < 1.0
+
+
+def test_result_cache_ttl_expiry_and_lru_bound():
+    from repro.search.real_eval import RealEvalBackend
+    now = [0.0]
+    loop, s = mk(n=2)
+    be = RealEvalBackend(result_cache_size=2, result_cache_ttl=10.0,
+                         clock=lambda: now[0])
+
+    def run_one(bm):
+        f = be.submit_validate(cand("T6", bm=bm, bn=64, bk=32))
+        s.submit(f.request)
+        loop.run()
+        return f
+
+    run_one(64)
+    now[0] = 5.0
+    run_one(64)
+    assert be.builds_started == 1 and be.cache_hits == 1   # within TTL
+    now[0] = 20.0                            # 15 s later: entry expired
+    run_one(64)
+    assert be.builds_started == 2 and be.cache_expired == 1
+    # LRU bound: size 2 — building two more signatures evicts bm=64
+    run_one(128)
+    run_one(32)
+    assert be.cache_evictions >= 1
+    run_one(64)                              # evicted: rebuilds
+    assert be.builds_started == 5
+
+
 # ----------------------------------------------- controller fork hygiene
 class SharedScriptLLM:
     """Backend that hands out ONE shared SpecScript object (a cached/
