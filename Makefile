@@ -8,7 +8,10 @@
 #   make serve   - continuous-batched real-model serving demo with
 #                  speculative forks + two-tier prefix cache
 #   make bench-smoke - work-stealing + async-eval-plane + remote-KV
-#                  transport + paged-kernel tables on reduced grids
+#                  transport + paged-kernel tables on reduced grids,
+#                  then writes the machine-readable BENCH_e2e.json
+#                  (composed-trace makespan, per-plane breakdown,
+#                  feedback latency) at the repo root
 #   make smoke-real - real-eval deferred plane end to end: bounded
 #                  kernel_search with interpret-mode builds executing
 #                  at device dispatch; prints build-overlap AND
@@ -33,6 +36,7 @@ bench-smoke:
 	$(PY) -m benchmarks.table_async_overlap --smoke
 	$(PY) -m benchmarks.table_remote_kv --smoke
 	$(PY) -m benchmarks.table_paged_kernel --smoke
+	$(PY) -m benchmarks.e2e_json --smoke
 
 smoke-real:
 	$(PY) examples/kernel_search.py T6 3

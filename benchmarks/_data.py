@@ -8,6 +8,7 @@ experiments/bench_cache.json keyed by (seed, iterations).
 from __future__ import annotations
 
 import functools
+import sys
 import time
 from typing import Dict, List
 
@@ -31,6 +32,9 @@ def gm(xs) -> float:
 def specgen_grid(model: str, tasks: tuple = tuple(T10),
                  iterations: int = ITERATIONS, **kw):
     kw = dict(kw)
+    # every grid run records the composed timeline (sched.loop.trace):
+    # fig10 derives end-to-end makespan + per-plane breakdown from it
+    kw.setdefault("trace", True)
     sched, ctls = run_shared_pool(list(tasks), model=model,
                                   iterations=iterations, devices=10,
                                   seed=SEED, **kw)
@@ -62,3 +66,15 @@ def timed(fn, *a, **kw):
     t0 = time.perf_counter()
     out = fn(*a, **kw)
     return out, (time.perf_counter() - t0) * 1e6
+
+
+def trace_out_arg(argv=None) -> str:
+    """Path following ``--trace-out`` (None when absent); exits with a
+    usage message instead of an IndexError when the value is missing."""
+    argv = sys.argv if argv is None else argv
+    if "--trace-out" not in argv:
+        return None
+    i = argv.index("--trace-out")
+    if i + 1 >= len(argv):
+        sys.exit("usage: ... --trace-out PATH")
+    return argv[i + 1]

@@ -1,0 +1,80 @@
+"""Machine-readable end-to-end snapshot: ``BENCH_e2e.json``.
+
+``make bench-smoke`` (and CI, which uploads the file as an artifact on
+every run) writes one JSON document at the repo root with the numbers
+a trajectory consumer needs without parsing CSV tables:
+
+  * ``engine_pool``  — the real-model remote-KV pool
+    (benchmarks/table_remote_kv, async plane): end-to-end makespan and
+    the per-plane busy breakdown, both derived from the ONE composed
+    (t, plane, event, tag) trace the engine-on-loop run emits, plus the
+    engine-blocked seconds and tier-crossing counts;
+  * ``shared_pool``  — the paper's 10-workflow simulated pool
+    (run_shared_pool, async eval plane): composed-trace makespan and
+    per-plane breakdown plus the submit->profile-done feedback latency
+    (the metric table_async_overlap tracks).
+
+Byte-stable output (sorted keys, fixed float rounding) so two runs of
+the same commit produce identical files.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from benchmarks._data import SEED, T10
+from benchmarks.table_async_overlap import feedback_latency
+from benchmarks.table_remote_kv import run_pool
+from repro.core.trace import plane_breakdown
+from repro.search.driver import run_shared_pool
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _r(x: float) -> float:
+    return round(float(x), 6)
+
+
+def build(smoke: bool = False) -> dict:
+    n = 4 if smoke else 10
+    eng, plane, _ = run_pool("async", n_workflows=n)
+    ebd = plane_breakdown(plane.loop.trace, plane.cfg.decode_step_s)
+    engine_pool = {
+        "makespan_s": _r(plane.loop.now),
+        "planes_busy_s": {k: _r(v) for k, v in ebd.items()},
+        "engine_blocked_s": _r(plane.engine_blocked_s),
+        "decode_dispatches": eng.decode_dispatches,
+        "migrations": plane.migrations_done,
+        "fetches": plane.fetches_done,
+        "trace_events": len(plane.loop.trace),
+    }
+
+    tasks = T10[:3] if smoke else T10
+    sched, ctls = run_shared_pool(
+        tasks, model="glm", iterations=10 if smoke else 100,
+        devices=4 if smoke else 10, seed=SEED, trace=True)
+    sbd = plane_breakdown(sched.loop.trace)
+    shared_pool = {
+        "makespan_s": _r(sched.loop.now),
+        "planes_busy_s": {k: _r(v) for k, v in sbd.items()},
+        "feedback_latency_s": _r(feedback_latency(sched)),
+        "early_terminations": sum(c.result.early_terminations
+                                  for c in ctls),
+        "utilization_any": _r(sched.utilization_any()),
+        "trace_events": len(sched.loop.trace),
+    }
+    return {"engine_pool": engine_pool, "shared_pool": shared_pool,
+            "smoke": smoke}
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    data = build(smoke=smoke)
+    out = ROOT / "BENCH_e2e.json"
+    out.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,16 @@
-"""Fig. 10 — end-to-end execution time vs the three baselines."""
+"""Fig. 10 — end-to-end execution time vs the three baselines.
+
+The speedup ratios are the paper's headline numbers; the makespan and
+per-plane rows are derived from the shared pool's COMPOSED timeline
+(DESIGN.md §Engine-on-loop): one (t, plane, event, tag) trace carries
+the gen plane (reasoning generations), the eval plane (validation /
+profiling grants-to-completions) and any transport activity on one
+clock, so the end-to-end number and its breakdown come from the same
+source instead of per-subsystem accounting.
+"""
 from benchmarks._data import (BASELINES, T10, baseline_grid, gm,
                               specgen_grid, timed)
+from repro.core.trace import plane_breakdown
 
 
 def rows():
@@ -15,4 +25,11 @@ def rows():
         for t in T10:
             out.append((f"fig10_e2e_ks_{model}_skg_{t}", us,
                         round(res[t].e2e_time / 1e3, 2)))
+        # one composed trace -> makespan + per-plane busy breakdown
+        out.append((f"fig10_e2e_makespan_ks_{model}", us,
+                    round(sched.loop.now / 1e3, 2)))
+        bd = plane_breakdown(sched.loop.trace)
+        for plane in ("gen", "validation", "profiling"):
+            out.append((f"fig10_plane_{plane}_ks_{model}", us,
+                        round(bd[plane] / 1e3, 2)))
     return out

@@ -17,6 +17,11 @@ golden-trace tests pin).  Metrics:
     early_terms  total early terminations across the pool (faster
                  feedback => criteria fire while reasoning still runs).
 
+Both pool runs record the composed (t, plane, event, tag) timeline
+(gen + eval planes on one clock); ``--trace-out PATH`` serializes the
+async-plane run's trace byte-stably — the CI determinism job runs the
+benchmark twice and byte-diffs the two files.
+
 Run standalone (``python -m benchmarks.table_async_overlap``), via
 ``make bench-smoke`` (reduced grid), or as part of benchmarks/run.py.
 """
@@ -26,7 +31,8 @@ import sys
 
 import numpy as np
 
-from benchmarks._data import SEED, T10, timed
+from benchmarks._data import SEED, T10, timed, trace_out_arg
+from repro.core.trace import dump_trace
 from repro.search.driver import run_shared_pool
 
 GRID = [  # (label, realloc, priority)
@@ -46,29 +52,37 @@ def feedback_latency(sched) -> float:
     return float(np.mean(lats)) if lats else 0.0
 
 
-def rows(iterations: int = 100, tasks=None, devices: int = 10):
+def rows(iterations: int = 100, tasks=None, devices: int = 10,
+         trace_sink: list = None):
     tasks = list(T10 if tasks is None else tasks)
     out = []
     for label, realloc, prio in GRID:
         (sched, ctls), us = timed(
             run_shared_pool, tasks, model="glm", iterations=iterations,
-            devices=devices, seed=SEED, realloc=realloc, priority=prio)
+            devices=devices, seed=SEED, realloc=realloc, priority=prio,
+            trace=True)
         terms = sum(c.result.early_terminations for c in ctls)
         out.append((f"table_async_fb_latency_{label}", us,
                     round(feedback_latency(sched), 2)))
         out.append((f"table_async_util_any_{label}", us,
                     round(sched.utilization_any(), 4)))
         out.append((f"table_async_early_terms_{label}", us, terms))
+        if trace_sink is not None and label == "async_plane":
+            trace_sink.append(list(sched.loop.trace))
     return out
 
 
 def main() -> None:
     smoke = "--smoke" in sys.argv
+    trace_out = trace_out_arg()
+    sink: list = []
     print("name,us_per_call,derived")
     kw = (dict(iterations=10, tasks=T10[:3], devices=4)
           if smoke else {})
-    for name, us, derived in rows(**kw):
+    for name, us, derived in rows(trace_sink=sink, **kw):
         print(f"{name},{us:.0f},{derived}", flush=True)
+    if trace_out:
+        dump_trace(sink[0], trace_out)
 
 
 if __name__ == "__main__":

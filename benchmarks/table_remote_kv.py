@@ -16,15 +16,26 @@ migrates to the remote tier, compare:
 
 Metrics (derived column):
 
+    makespan_s      END-TO-END virtual seconds of the whole phase-2
+                    drain, from the ONE composed (t, plane, event, tag)
+                    trace (engine steps + transfers on the shared
+                    clock, DESIGN.md §Engine-on-loop) — the paper's
+                    headline axis, not just engine-blocked seconds,
+    engine_s / transport_s  per-plane busy-time breakdown derived from
+                    the same composed trace (decode dispatches priced
+                    at decode_step_s; link start->done pairing),
     blocked_s       engine-blocked transfer seconds (plane accounting);
                     the acceptance criterion is async < sync,
     migrations/fetches  tier-boundary crossings that rode the link,
     saved_per_fetch prefix tokens reused per restore — the recompute
                     tokens each fetch saved (store accounting),
     deterministic   1 iff two identical async runs produce the exact
-                    same virtual-clock link trace (golden determinism).
+                    same COMPOSED trace, floats included (golden
+                    determinism; the CI determinism job byte-diffs the
+                    serialized traces of two separate processes).
 
-Run standalone (``python -m benchmarks.table_remote_kv``), via
+Run standalone (``python -m benchmarks.table_remote_kv``, optionally
+``--trace-out PATH`` to serialize the async composed trace), via
 ``make bench-smoke`` (reduced pool), or from benchmarks/run.py.
 """
 from __future__ import annotations
@@ -33,8 +44,9 @@ import sys
 
 import numpy as np
 
-from benchmarks._data import timed
+from benchmarks._data import timed, trace_out_arg
 from repro.core.clock import EventLoop
+from repro.core.trace import dump_trace, plane_breakdown
 from repro.serving.transport import (LinkSpec, RemoteTierPool,
                                      TransportConfig, TransportLink,
                                      TransportPlane)
@@ -46,6 +58,7 @@ LINK = dict(bandwidth=1e8, latency=5e-4)
 
 def _plane(mode: str) -> TransportPlane:
     loop = EventLoop()
+    loop.enable_trace()                 # the composed timeline
     return TransportPlane(
         loop=loop,
         link=TransportLink(loop, LinkSpec(**LINK)),
@@ -95,7 +108,7 @@ def run_pool(mode: str, n_workflows: int = 10, stem_len: int = 20,
     return eng, plane, out
 
 
-def rows(n_workflows: int = 10):
+def rows(n_workflows: int = 10, trace_sink: list = None):
     out = []
     traces = []
     for mode in ("sync", "async"):
@@ -103,6 +116,15 @@ def rows(n_workflows: int = 10):
                                        n_workflows=n_workflows)
         st = eng.store.stats
         saved = st.tokens_reused / max(st.restores, 1)
+        # end-to-end makespan + per-plane breakdown, both from the ONE
+        # composed trace (the engine ran FROM the loop in async mode)
+        bd = plane_breakdown(plane.loop.trace, plane.cfg.decode_step_s)
+        out.append((f"table_remote_kv_makespan_s_{mode}", us,
+                    round(plane.loop.now, 4)))
+        out.append((f"table_remote_kv_engine_s_{mode}", us,
+                    round(bd["engine"], 4)))
+        out.append((f"table_remote_kv_transport_s_{mode}", us,
+                    round(bd["transport"], 4)))
         out.append((f"table_remote_kv_blocked_s_{mode}", us,
                     round(plane.engine_blocked_s, 4)))
         out.append((f"table_remote_kv_migrations_{mode}", us,
@@ -112,22 +134,30 @@ def rows(n_workflows: int = 10):
         out.append((f"table_remote_kv_saved_per_fetch_{mode}", us,
                     round(saved, 1)))
         if mode == "async":
-            traces.append(plane.link.trace)
+            traces.append(list(plane.loop.trace))
     # golden determinism: an identical async rerun must replay the
-    # exact event sequence (times included)
+    # exact COMPOSED event sequence (engine steps + transfers, times
+    # included)
     (eng2, plane2, _), us2 = timed(run_pool, "async",
                                    n_workflows=n_workflows)
-    traces.append(plane2.link.trace)
+    traces.append(list(plane2.loop.trace))
     out.append(("table_remote_kv_deterministic", us2,
                 int(traces[0] == traces[1])))
+    if trace_sink is not None:
+        trace_sink.append(traces[0])
     return out
 
 
 def main() -> None:
     smoke = "--smoke" in sys.argv
+    trace_out = trace_out_arg()
+    sink: list = []
     print("name,us_per_call,derived")
-    for name, us, derived in rows(n_workflows=4 if smoke else 10):
+    for name, us, derived in rows(n_workflows=4 if smoke else 10,
+                                  trace_sink=sink):
         print(f"{name},{us:.0f},{derived}", flush=True)
+    if trace_out:
+        dump_trace(sink[0], trace_out)
 
 
 if __name__ == "__main__":

@@ -12,6 +12,12 @@ real-path examples exercise the same controller/scheduler code.
 resolution — resolution always happens inside an event handler, so
 "synchronous" is deterministic under the virtual clock (no extra events
 means no event-ordering perturbation between equivalent runs).
+
+``enable_trace()`` turns on the COMPOSED timeline (DESIGN.md
+§Engine-on-loop): every subsystem sharing the loop appends
+``(t, plane, event, tag)`` records via ``record()``, producing the one
+trace end-to-end benchmarks derive makespan and per-plane breakdowns
+from (``core.trace`` has the helpers).
 """
 from __future__ import annotations
 
@@ -80,6 +86,22 @@ class EventLoop:
         self._heap: List[Event] = []
         self._seq = itertools.count()
         self.events_run = 0
+        # composed timeline (DESIGN.md §Engine-on-loop): every plane —
+        # engine decode steps, eval grants/completions, transport
+        # transfers, controller generations — records onto ONE
+        # (t, plane, event, tag) list, so end-to-end makespan and
+        # per-plane breakdowns come from a single trace.  None (the
+        # default) disables recording; enable_trace() opts a run in.
+        self.trace: Optional[List[tuple]] = None
+
+    def enable_trace(self) -> List[tuple]:
+        if self.trace is None:
+            self.trace = []
+        return self.trace
+
+    def record(self, plane: str, event: str, tag: str = "") -> None:
+        if self.trace is not None:
+            self.trace.append((self._now, plane, event, tag))
 
     @property
     def now(self) -> float:
@@ -106,6 +128,13 @@ class EventLoop:
             self._now = ev.time
             self.events_run += 1
             ev.fn()
+        # an idle loop still advances to ``until``: a bounded run models
+        # elapsed virtual time (a decode step, a stall quantum), not
+        # merely "drain due events" — without this the legacy stall
+        # clocking silently loses decode time whenever no transfer is
+        # in flight, and stall/event timelines drift apart
+        if until is not None and until > self._now:
+            self._now = until
 
     def drain(self) -> None:
         self._heap.clear()

@@ -206,6 +206,9 @@ class SpecController:
             return
         rec = IterationRecord(index=it, t_start=self.loop.now)
         self.sched.begin_iteration(it)
+        # composed timeline: the reasoning generation opens the "gen"
+        # plane for this workflow (closed at reason-done / termination)
+        self.loop.record("gen", "start", f"{self.name}:{it}")
         task_id, ctx = self._task_id, self._ctx
         script = self.llm.reasoning(task_id, it, ctx)
         parser = StreamTriggerParser()
@@ -231,6 +234,7 @@ class SpecController:
             if state["done"] or state["terminated"]:
                 return
             state["reason_done"] = True
+            self.loop.record("gen", "end", f"{self.name}:{it}")
             rec.gen_time += script.duration
             self._tok["reason"] += script.total_tokens
             rec.reasoning_tokens += script.total_tokens
@@ -292,6 +296,7 @@ class SpecController:
         for _ in range(k):
             spec = self.llm.speculative(self._task_id, it, self._ctx, frac)
             state["spec_live"] += 1
+            self.loop.record("gen", "fork", f"{self.name}:{it}")
             self._mark_gen(state)
             # prefix-cache accounting (paper §6.2.3): fork prompt KV is
             # shared with the live reasoning generation; without the
@@ -411,6 +416,7 @@ class SpecController:
         """Early termination (Alg 1 lines 17-20)."""
         rec, script = state["rec"], state["script"]
         state["terminated"] = True
+        self.loop.record("gen", "end", f"{self.name}:{state['it']}:term")
         rec.early_terminated = True
         self._early_terms += 1
         consumed = min(1.0, (self.loop.now - state["t_gen_start"])

@@ -270,6 +270,7 @@ class ElasticScheduler:
                 abort(d.req)
                 if d.completion is not None:
                     d.completion.cancel()
+                self.loop.record("eval", "abort", f"{d.req.kind}@{d.idx}")
                 self._release(d, record=True)
         for q in (self.q_val, self.q_prof):
             keep = [r for r in q if not match(r)]
@@ -330,6 +331,7 @@ class ElasticScheduler:
         d.req = req
         d.busy_since = self.loop.now
         req.started = self.loop.now
+        self.loop.record("eval", "grant", f"{req.kind}@{d.idx}")
         if req.thunk is not None:
             # deferred execution: the work happens NOW, on the device's
             # turn — real-mode builds run here and their measured
@@ -342,6 +344,7 @@ class ElasticScheduler:
 
     def _complete(self, d: _Device, req: Request) -> None:
         req.finished = self.loop.now
+        self.loop.record("eval", "complete", f"{req.kind}@{d.idx}")
         if req.kind == "validation" and req.started is not None:
             dur = req.finished - req.started
             self._svc_n += 1

@@ -1,0 +1,114 @@
+"""Composed-trace helpers (DESIGN.md §Engine-on-loop).
+
+One run on the shared event loop emits a single ``(t, plane, event,
+tag)`` timeline (``EventLoop.enable_trace``): engine decode steps,
+eval-plane grants/completions, transport transfers and controller
+generations all interleave on it.  This module derives the numbers the
+end-to-end benchmarks report from that ONE trace:
+
+  * ``makespan``     — time of the last recorded event,
+  * ``plane_breakdown`` — busy seconds attributed to each plane, by
+    pairing the plane's own begin/end markers:
+
+      engine       one ``decode_step_s`` per ("engine", "step") event,
+      transport    ("start" -> "done") per link (links are serial FIFO),
+      validation / profiling
+                   ("grant" -> "complete"/"abort") per device slot,
+      gen          ("start" -> "end") per workflow name,
+
+and serializes traces byte-stably (``format_trace``/``dump_trace``) so
+CI can diff two runs — run-to-run determinism is a byte-equality check
+on the composed trace, not a statistical one.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Tuple
+
+TraceEvent = Tuple[float, str, str, str]
+
+
+def makespan(trace: Optional[Iterable[TraceEvent]]) -> float:
+    """Virtual time of the last recorded event (0.0 for empty/None)."""
+    if not trace:
+        return 0.0
+    return max(t for t, _p, _e, _g in trace)
+
+
+def _pair_key(tag: str) -> str:
+    """Pairing identity for begin/end markers: the part of the tag
+    before the first ':' (links/workflows suffix detail after it)."""
+    return tag.split(":", 1)[0]
+
+
+def plane_breakdown(trace: Optional[Iterable[TraceEvent]],
+                    decode_step_s: float = 0.0) -> Dict[str, float]:
+    """Busy seconds per plane from one composed trace.
+
+    ``decode_step_s`` prices engine decode steps (each ("engine",
+    "step") event occupies one step of virtual time); eval busy time is
+    split between the ``validation`` and ``profiling`` pools.  Unpaired
+    opens (still busy at trace end) are closed at the last event time.
+    """
+    out = {"engine": 0.0, "transport": 0.0, "validation": 0.0,
+           "profiling": 0.0, "gen": 0.0}
+    if not trace:
+        return out
+    trace = list(trace)
+    end = makespan(trace)
+    open_at: Dict[tuple, float] = {}
+
+    def open_(bucket: str, key: str, t: float) -> None:
+        open_at.setdefault((bucket, key), t)
+
+    def close(bucket: str, key: str, t: float) -> None:
+        t0 = open_at.pop((bucket, key), None)
+        if t0 is not None:
+            out[bucket] += t - t0
+
+    for t, plane, event, tag in trace:
+        if plane == "engine":
+            if event == "step":
+                out["engine"] += decode_step_s
+        elif plane == "transport":
+            key = _pair_key(tag)
+            if event == "start":
+                open_("transport", key, t)
+            elif event == "done":
+                close("transport", key, t)
+        elif plane == "eval":
+            # tag is "<kind>@<device>": grants pair with the matching
+            # complete/abort on the same device slot
+            if "@" not in tag:
+                continue
+            kind, dev = tag.split("@", 1)
+            bucket = kind if kind in out else None
+            if bucket is None:
+                continue
+            if event == "grant":
+                open_(bucket, dev, t)
+            elif event in ("complete", "abort"):
+                close(bucket, dev, t)
+        elif plane == "gen":
+            key = _pair_key(tag)
+            if event == "start":
+                open_("gen", key, t)
+            elif event == "end":
+                close("gen", key, t)
+    for (bucket, _key), t0 in open_at.items():
+        out[bucket] += end - t0
+    return out
+
+
+def format_trace(trace: Optional[Iterable[TraceEvent]]) -> str:
+    """Byte-stable text form: one ``repr(t)<TAB>plane<TAB>event<TAB>
+    tag`` line per event.  ``repr`` round-trips floats exactly, so two
+    deterministic runs serialize to identical bytes."""
+    if not trace:
+        return ""
+    return "".join(f"{t!r}\t{plane}\t{event}\t{tag}\n"
+                   for t, plane, event, tag in trace)
+
+
+def dump_trace(trace: Optional[Iterable[TraceEvent]], path) -> None:
+    with open(path, "w") as f:
+        f.write(format_trace(trace))

@@ -24,6 +24,20 @@ def _make_transport(loop: EventLoop, sched: ElasticScheduler,
     return plane
 
 
+def _make_loop(trace: bool, evaluator) -> EventLoop:
+    """One composed clock per run (DESIGN.md §Engine-on-loop): the
+    loop every plane shares.  ``trace=True`` turns on the unified
+    (t, plane, event, tag) timeline; an evaluator that knows how joins
+    it (RealEvalBackend.attach_loop)."""
+    loop = EventLoop()
+    if trace:
+        loop.enable_trace()
+    attach = getattr(evaluator, "attach_loop", None)
+    if attach is not None:
+        attach(loop)
+    return loop
+
+
 def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
                 devices: int = 2, termination="hist-avg",
                 enable_speculation: bool = True, prefix_cache: bool = True,
@@ -32,9 +46,9 @@ def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
                 profiling_policy: str = "fifo",
                 realloc: str = "queue-max", priority: bool = True,
                 seed: int = 0, max_concurrent_spec: int = 8,
-                evaluator=None, transport=None,
+                evaluator=None, transport=None, trace: bool = False,
                 ) -> Tuple[TaskResult, ElasticScheduler, SpecController]:
-    loop = EventLoop()
+    loop = _make_loop(trace, evaluator)
     wl = WorkloadModel(model=model, seed=seed)
     sched = ElasticScheduler(loop, SchedulerConfig(
         num_devices=devices, mode=scheduler_mode,
@@ -81,7 +95,7 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
                     enable_speculation: bool = True,
                     prefix_cache: bool = True,
                     termination="hist-avg", evaluator=None,
-                    transport=None):
+                    transport=None, trace: bool = False):
     """The paper's evaluation setting: N workflows sharing one pool.
 
     The pool runs the async evaluation plane by default: continuous
@@ -89,8 +103,12 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
     built for) and fallback-over-speculative priority.  ``realloc=
     "queue-max", priority=False`` restores the PR-2 legacy plane
     (benchmarks/table_async_overlap.py measures the difference).
+    ``trace=True`` records the composed (t, plane, event, tag) timeline
+    on the shared loop (``sched.loop.trace``) — gen, eval and transport
+    planes on one clock, the trace ``core.trace`` derives makespan and
+    per-plane breakdowns from.
     """
-    loop = EventLoop()
+    loop = _make_loop(trace, evaluator)
     wl = WorkloadModel(model=model, seed=seed)
     sched = ElasticScheduler(loop, SchedulerConfig(
         num_devices=devices, mode=scheduler_mode,

@@ -91,6 +91,20 @@ class RealEvalBackend:
         self.cache_evictions = 0         # LRU evictions (bound hit)
         self.cache_lookups_by_owner: Dict[str, int] = {}
         self.cache_hits_by_owner: Dict[str, int] = {}
+        self._loop = None                # composed-trace loop (attach_loop)
+
+    def attach_loop(self, loop) -> None:
+        """Join the composed virtual timeline (DESIGN.md
+        §Engine-on-loop): build / batch / cache events from the
+        grant-time thunks are recorded onto the shared loop's unified
+        trace, interleaving real-eval activity with engine steps, eval
+        grants and transfers.  ``search.driver`` attaches the run's
+        loop automatically."""
+        self._loop = loop
+
+    def _record(self, event: str, tag: str = "") -> None:
+        if self._loop is not None:
+            self._loop.record("eval", event, tag)
 
     # ------------------------------------------------------ async protocol
     def _build_key(self, cand: KernelCandidate) -> tuple:
@@ -154,6 +168,7 @@ class RealEvalBackend:
                 self.cache_lookups_by_owner.get(owner, 0) + 1
             if cell.result is not None:          # co-resident batch
                 self.batched_hits += 1
+                self._record("batched", cand.task_id)
                 return time.perf_counter() - t0, cell.result
             cached = self._cache_get(key)
             if cached is not None:               # cross-iteration dedup
@@ -162,8 +177,10 @@ class RealEvalBackend:
                     self.cache_hits_by_owner.get(owner, 0) + 1
                 cell.result = cached             # co-residents replay too
                 self._pending.pop(key, None)
+                self._record("cache-hit", cand.task_id)
                 return time.perf_counter() - t0, cached
             self.builds_started += 1
+            self._record("build", cand.task_id)
             dur, res = self.validate(cand)
             cell.result = res
             self._cache_put(key, res)
@@ -177,8 +194,12 @@ class RealEvalBackend:
 
     def submit_profile(self, cand: KernelCandidate) -> EvalFuture:
         self.submits += 1
-        return make_eval_request("profiling", cand,
-                                 lambda: self.profile(cand))
+
+        def thunk() -> Tuple[float, ProfileResult]:
+            self._record("profile", cand.task_id)
+            return self.profile(cand)
+
+        return make_eval_request("profiling", cand, thunk)
 
     def _task(self, cand: KernelCandidate) -> KernelTaskDef:
         return TASKS.get(cand.task_id, TASKS["T6"])

@@ -60,6 +60,19 @@ from repro.serving.sampler import sample_tokens
 
 
 @dataclasses.dataclass
+class EngineStepEvent:
+    """One batched decode dispatch on the composed timeline (DESIGN.md
+    §Engine-on-loop): the virtual time it ran at and the active-row set
+    it advanced.  Recorded (when the loop's composed trace is enabled)
+    for BOTH clockings — under ``"event"`` the step IS a scheduled loop
+    event; under the legacy ``"stall"`` path it is stamped just before
+    the dispatch ticks the clock — so the two modes' step traces are
+    directly comparable."""
+    t: float
+    gen_ids: Tuple[int, ...]
+
+
+@dataclasses.dataclass
 class Generation:
     gen_id: int
     tokens: List[int]                 # full context (prompt + emitted)
@@ -84,8 +97,21 @@ class Engine:
                  max_len: int = 512, cache_store: PrefixCacheStore = None,
                  store_prefixes: bool = True, max_batch: int = 8,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 top_k: int = 0, transport=None):
+                 top_k: int = 0, transport=None, clocking: str = "event"):
+        assert clocking in ("event", "stall")
         self.cfg, self.params, self.runtime = cfg, params, runtime
+        # who owns virtual time (DESIGN.md §Engine-on-loop):
+        #   "event"  batched run_all() is DRIVEN FROM the shared event
+        #            loop — each decode dispatch is a scheduled
+        #            EngineStepEvent, fetch-parked rows wake by future
+        #            resolution, and the clock belongs to the loop;
+        #   "stall"  the legacy path: the engine ticks the transport
+        #            clock from inside each dispatch and stalls it when
+        #            every row is parked (kept for bitwise parity tests
+        #            and callers without an async plane).
+        self.clocking = clocking
+        self._evented = False                   # inside _run_all_evented
+        self.step_events: List[EngineStepEvent] = []
         self.max_len = max_len
         self.max_batch = max_batch
         self.top_k = top_k
@@ -475,7 +501,24 @@ class Engine:
 
     def _dispatch(self, gens: Sequence[Generation]) -> None:
         """ONE jitted decode step advancing every generation in ``gens``
-        (decode + on-device sampling fused)."""
+        (decode + on-device sampling fused).  A dispatch spans one
+        ``decode_step_s`` of virtual time: the compute phase runs at
+        the step's start, its COMPLETIONS (token appends, retirements
+        and the migrations they trigger) materialize at the step's end
+        — the legacy path ticks the clock between the two, the evented
+        path completes at the next ``EngineStepEvent``."""
+        nxt = self._dispatch_compute(gens)
+        if self.transport is not None and not self._evented:
+            # legacy stall clocking: the dispatch itself advances the
+            # clock one decode step, so in-flight migrations and
+            # fetches make progress WHILE rows decode.  Under the
+            # event-driven path time is owned by the loop — the step
+            # ran AT its scheduled instant and the next step event is
+            # one decode_step_s later.
+            self.transport.tick()
+        self._dispatch_complete(gens, nxt)
+
+    def _dispatch_compute(self, gens: Sequence[Generation]):
         self._prepare_writes(gens)
         B, W = self.max_batch, self.pool.pages_per_row
         tok = np.zeros((B, 1), np.int32)
@@ -498,10 +541,16 @@ class Engine:
         nxt = np.asarray(nxt)
         self.decode_dispatches += 1
         if self.transport is not None:
-            # one decode step of virtual time: in-flight migrations and
-            # fetches make progress WHILE rows decode (the overlap the
-            # synchronous device_get path could never express)
-            self.transport.tick()
+            loop = self.transport.loop
+            if loop.trace is not None:
+                # only when the composed timeline is enabled: a
+                # long-lived engine must not grow an unread step list
+                self.step_events.append(EngineStepEvent(
+                    loop.now, tuple(g.gen_id for g in gens)))
+            loop.record("engine", "step", f"n={len(gens)}")
+        return nxt
+
+    def _dispatch_complete(self, gens: Sequence[Generation], nxt) -> None:
         for g in gens:
             t = int(nxt[g.slot])
             g.tokens.append(t)
@@ -551,7 +600,16 @@ class Engine:
         return g.emitted
 
     def run_all(self) -> Dict[int, List[int]]:
-        """Drain every submitted generation via batched stepping."""
+        """Drain every submitted generation via batched stepping.
+
+        With an async transport plane and ``clocking="event"`` the
+        drain is DRIVEN FROM the shared event loop (each decode
+        dispatch a scheduled event); otherwise the legacy stall loop
+        runs (sync planes block inside admissions, so the engine must
+        own time there)."""
+        if self.transport is not None and self.clocking == "event" \
+                and self.transport.cfg.mode == "async":
+            return self._run_all_evented()
         while any(g.status in ("pending", "running")
                   for g in self._gens.values()):
             if not self.step_all():
@@ -562,6 +620,97 @@ class Engine:
                     self.transport.stall(self.transport.cfg.decode_step_s)
                     continue
                 break                            # only blocked pendings
+        return {gid: g.emitted for gid, g in self._gens.items()}
+
+    def _run_all_evented(self) -> Dict[int, List[int]]:
+        """Drain the engine FROM the event loop (DESIGN.md
+        §Engine-on-loop): each batched decode dispatch is a scheduled
+        ``EngineStepEvent`` one ``decode_step_s`` after the previous,
+        so engine steps interleave with transfer completions and any
+        other work sharing the loop in ONE composed timeline.  When
+        every row is parked on an in-flight fetch the engine schedules
+        NOTHING — parked rows wake via the fetch future's resolution
+        (no polling), at the next decode-step grid point (bit-matching
+        the legacy stall path's k x decode_step_s stalls), and the gap
+        is charged to ``engine_blocked_s``."""
+        plane = self.transport
+        loop = plane.loop
+        dt = plane.cfg.decode_step_s
+        st = {"finished": False, "scheduled": False, "parked_at": None,
+              "last_step": loop.now, "inflight": None}
+        # fetch jobs carrying a wake callback: holds the job OBJECTS
+        # (identity set via id would go stale — a completed job can be
+        # GC'd mid-drain and a later, distinct job reuse its address,
+        # silently suppressing its wake)
+        armed = []
+
+        def schedule(delay: float) -> None:
+            st["scheduled"] = True
+            loop.schedule(delay, step, tag="engine-step")
+
+        def on_fetch_landed(_f) -> None:
+            if st["finished"] or st["parked_at"] is None or \
+                    st["scheduled"]:
+                return
+            # wake at the next decode-step grid point at/after the
+            # landing (successive addition, exactly the stall path's
+            # accumulated k x dt — float-identical timelines)
+            target = st["last_step"]
+            while target < loop.now and dt > 0.0:
+                target += dt
+            schedule(max(target - loop.now, 0.0))
+
+        def step() -> None:
+            st["scheduled"] = False
+            st["last_step"] = loop.now
+            if st["parked_at"] is not None:
+                plane.engine_blocked_s += loop.now - st["parked_at"]
+                st["parked_at"] = None
+                loop.record("engine", "wake", "")
+            if st["inflight"] is not None:
+                # the dispatch launched one decode step ago completes
+                # NOW: token appends, retirements and the migrations
+                # they trigger land at the step's end, exactly where
+                # the stall path's post-tick completion put them
+                gens, nxt = st["inflight"]
+                st["inflight"] = None
+                self._dispatch_complete(gens, nxt)
+            pending = [g for g in self._gens.values()
+                       if g.status == "pending"]
+            if pending and self._free:
+                self._admit_all(pending)
+            live = [g for g in self._gens.values()
+                    if g.status == "running"]
+            if live:
+                st["inflight"] = (live, self._dispatch_compute(live))
+                schedule(dt)
+                return
+            if not any(g.status == "pending"
+                       for g in self._gens.values()):
+                st["finished"] = True           # drained
+                return
+            if not (self._awaiting_fetch and plane.in_flight):
+                st["finished"] = True           # only blocked pendings
+                return
+            # every row is parked on the wire: arm wake-on-resolution
+            # for each distinct in-flight fetch job and go idle
+            st["parked_at"] = loop.now
+            loop.record("engine", "park",
+                        f"waiting={len(self._awaiting_fetch)}")
+            for pf in list(self._awaiting_fetch.values()):
+                job = pf.job
+                if job.done or job.cancelled or \
+                        any(j is job for j in armed):
+                    continue
+                armed.append(job)
+                job.future.add_done_callback(on_fetch_landed)
+
+        self._evented = True
+        try:
+            schedule(0.0)
+            loop.run(stop=lambda: st["finished"])
+        finally:
+            self._evented = False
         return {gid: g.emitted for gid, g in self._gens.items()}
 
     def generation(self, gen_id: int) -> Generation:

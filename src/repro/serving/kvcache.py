@@ -88,6 +88,7 @@ class CacheStats:
     fetches_pending: int = 0    # remote hits answered with a PendingFetch
     recomputes_chosen: int = 0  # cost model preferred prefill over fetch
     migrations_deferred: int = 0   # backpressure: kept local for now
+    migrations_defer_aged: int = 0  # defer aging bound hit: fell back
     migrations_dropped: int = 0    # backpressure: evicted (LRU-skip)
     migrations_host: int = 0       # backpressure: write-through-to-host
 
@@ -168,6 +169,11 @@ class PrefixCacheStore:
         self._local: "OrderedDict[str, CacheEntry]" = OrderedDict()
         self._remote: "OrderedDict[str, CacheEntry]" = OrderedDict()
         self.stats = CacheStats()
+        # defer aging (TransportConfig.defer_max_puts / defer_max_s):
+        # consecutive deferred puts since the tier last had headroom,
+        # and when the local tier first went over budget
+        self._defers_since_headroom = 0
+        self._over_budget_at: Optional[float] = None
 
     # ------------------------------------------------------------ internals
     @property
@@ -246,9 +252,17 @@ class PrefixCacheStore:
         if not self.plane.tier.reserve(entry.nbytes):
             policy = self.plane.cfg.backpressure
             if policy == "defer" and not urgent:
-                self.stats.migrations_deferred += 1
-                self.plane.migrations_deferred += 1
-                return "deferred"
+                if not self._defer_aged():
+                    self._note_defer()
+                    self.stats.migrations_deferred += 1
+                    self.plane.migrations_deferred += 1
+                    return "deferred"
+                # aging bound hit (K deferred puts or T seconds over
+                # budget): stop waiting for tier headroom and apply the
+                # configured fallback to this entry
+                self.stats.migrations_defer_aged += 1
+                self.plane.migrations_defer_aged += 1
+                policy = self.plane.cfg.defer_fallback
             if policy == "host" and self._remote_budget_ok(entry.nbytes):
                 # write-through-to-host: bypass the modeled link and the
                 # tier budget; plain host memory takes the entry
@@ -261,6 +275,9 @@ class PrefixCacheStore:
             self.stats.evictions_local += 1
             self._dispose(entry)
             return "evicted"
+        # reservation granted: remote headroom returned — aging resets
+        self._defers_since_headroom = 0
+        self._over_budget_at = None
         entry.tier_reserved = True
         if self._async and not urgent:
             self._to_remote_async(entry)
@@ -270,6 +287,25 @@ class PrefixCacheStore:
             self.plane.transfer_sync(entry.nbytes, tag="mig-out")
             self._to_remote_sync(entry)
         return "migrated"
+
+    def _defer_aged(self) -> bool:
+        """Has the bounded-defer policy aged out?  True once K puts have
+        deferred since the tier last had headroom, or the local tier has
+        sat over budget for T virtual seconds (0 = unbounded)."""
+        cfg = self.plane.cfg
+        if cfg.defer_max_puts > 0 and \
+                self._defers_since_headroom >= cfg.defer_max_puts:
+            return True
+        if cfg.defer_max_s > 0.0 and self._over_budget_at is not None \
+                and self.plane.loop.now - self._over_budget_at \
+                >= cfg.defer_max_s:
+            return True
+        return False
+
+    def _note_defer(self) -> None:
+        self._defers_since_headroom += 1
+        if self._over_budget_at is None:
+            self._over_budget_at = self.plane.loop.now
 
     # ----------------------------------------------------- migration paths
     def _to_remote_sync(self, entry: CacheEntry) -> None:

@@ -129,9 +129,15 @@ class TransportLink:
         return d
 
     # ---------------------------------------------------------- lifecycle
+    def _record(self, event: str, tag: str, nbytes: int) -> None:
+        self.trace.append((self.loop.now, event, tag, nbytes))
+        # composed timeline: the same event, attributed to this link,
+        # interleaves with engine steps and eval grants (core.trace)
+        self.loop.record("transport", event, f"{self.name}:{tag}:{nbytes}")
+
     def submit(self, nbytes: int, tag: str = "") -> Transfer:
         t = Transfer(nbytes, tag, self.loop.now)
-        self.trace.append((self.loop.now, "enq", tag, t.nbytes))
+        self._record("enq", tag, t.nbytes)
         self._queue.append(t)
         self._pump()
         return t
@@ -146,7 +152,7 @@ class TransportLink:
             return
         t.cancelled = True
         t.future.cancel()
-        self.trace.append((self.loop.now, "cancel", t.tag, t.nbytes))
+        self._record("cancel", t.tag, t.nbytes)
 
     def _pump(self) -> None:
         while self._current is None and self._queue:
@@ -158,7 +164,7 @@ class TransportLink:
             t.started = self.loop.now
             t.duration = self._draw_duration(t.nbytes)
             self.queue_wait_total += t.started - t.submitted
-            self.trace.append((self.loop.now, "start", t.tag, t.nbytes))
+            self._record("start", t.tag, t.nbytes)
             self.loop.schedule(t.duration, lambda tt=t: self._finish(tt),
                                tag=f"xfer-{self.name}")
 
@@ -166,7 +172,7 @@ class TransportLink:
         t.finished = self.loop.now
         self.busy_total += t.finished - t.started
         self._current = None
-        self.trace.append((self.loop.now, "done", t.tag, t.nbytes))
+        self._record("done", t.tag, t.nbytes)
         if t.cancelled:
             self.transfers_cancelled += 1
         else:
@@ -265,6 +271,15 @@ class TransportConfig:
     bytes_per_token: int = 4096
     # streamed chunk size for paged payloads, in PAGES per transfer
     pages_per_transfer: int = 1
+    # deferred-migration AGING (ROADMAP item): the "defer" policy keeps
+    # the local tier over budget until remote headroom returns — bound
+    # it.  After ``defer_max_puts`` consecutive deferred puts OR
+    # ``defer_max_s`` virtual seconds over budget, the store falls back
+    # to ``defer_fallback`` ("drop" | "host") for that entry.  0 keeps
+    # the unbounded legacy defer (golden traces unchanged).
+    defer_max_puts: int = 0
+    defer_max_s: float = 0.0
+    defer_fallback: str = "drop"
 
 
 class TransportPlane:
@@ -290,6 +305,7 @@ class TransportPlane:
         self.migrations_started = 0
         self.migrations_done = 0
         self.migrations_deferred = 0     # backpressure: kept local
+        self.migrations_defer_aged = 0   # defer aging bound hit: fell back
         self.migrations_dropped = 0      # backpressure: evicted (LRU-skip)
         self.migrations_host = 0         # backpressure: write-through host
         self.fetches_started = 0

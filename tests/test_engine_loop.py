@@ -1,0 +1,206 @@
+"""Engine-on-loop (DESIGN.md §Engine-on-loop).
+
+The engine's batched drain is driven FROM the shared event loop: each
+decode dispatch is a scheduled ``EngineStepEvent``, fetch-parked rows
+wake via future resolution (no polling), and engine steps interleave
+with transfers on ONE composed timeline.  Acceptance bar:
+
+  * the event-driven path and the legacy stall path (``clocking=
+    "stall"``) produce BITWISE-identical tokens and identical
+    cache/transport counters on the 10-workflow pool — including
+    float-identical blocked seconds, makespan and step grids;
+  * the composed (t, plane, event, tag) trace is run-to-run identical,
+    floats included (the CI determinism job byte-diffs two processes);
+  * a fully parked engine schedules NO step events while waiting — the
+    wake is the fetch future's resolution, at the next decode-step
+    grid point.
+"""
+import numpy as np
+import jax
+
+from repro.core.clock import EventLoop
+from repro.core.trace import format_trace, makespan, plane_breakdown
+from repro.models import schema
+from repro.models.layers import Runtime
+from repro.models.registry import get_smoke
+from repro.serving.engine import Engine
+from repro.serving.kvcache import PrefixCacheStore
+from repro.serving.transport import (LinkSpec, RemoteTierPool,
+                                     TransportConfig, TransportLink,
+                                     TransportPlane)
+
+CFG = get_smoke("qwen2-1.5b")
+PARAMS = schema.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def make_plane(bandwidth=1e8, latency=5e-4, **cfg):
+    loop = EventLoop()
+    loop.enable_trace()
+    cfg.setdefault("mode", "async")
+    cfg.setdefault("prefill_tokens_per_s", 500.0)
+    return TransportPlane(
+        loop=loop,
+        link=TransportLink(loop, LinkSpec(bandwidth=bandwidth,
+                                          latency=latency)),
+        tier=RemoteTierPool(bytes_per_device=1 << 30),
+        cfg=TransportConfig(**cfg))
+
+
+def run_pool(clocking, n_workflows=10, stem_len=12, new_tokens=3,
+             **plane_kw):
+    """The benchmark's two-phase shape: phase 1 parks + migrates the
+    reasoning stems; phase 2 readmits stem-sharers (remote fetches)
+    interleaved with fresh prompts, drained via ``run_all``."""
+    plane = make_plane(**plane_kw)
+    store = PrefixCacheStore(local_budget_bytes=1,     # force migration
+                             remote_budget_bytes=1 << 30,
+                             transport=plane)
+    eng = Engine(CFG, PARAMS, Runtime(), max_len=96, cache_store=store,
+                 max_batch=n_workflows, transport=plane,
+                 clocking=clocking)
+    rs = np.random.RandomState(0)
+    stem = list(rs.randint(0, CFG.vocab_size, stem_len))
+    for i in range(n_workflows // 2):
+        g = eng.submit(stem + list(rs.randint(0, CFG.vocab_size, i + 1)),
+                       max_new_tokens=new_tokens, temperature=0.0)
+        eng.run(g)
+    plane.drain()
+    for i in range(n_workflows // 2):
+        eng.submit(stem + list(rs.randint(0, CFG.vocab_size, i + 1)),
+                   max_new_tokens=new_tokens, temperature=0.0)
+        eng.submit(list(rs.randint(0, CFG.vocab_size, stem_len + 4)),
+                   max_new_tokens=new_tokens, temperature=0.0)
+    out = eng.run_all()
+    plane.drain()
+    return eng, plane, out
+
+
+_CACHE = {}
+
+
+def pool(clocking):
+    if clocking not in _CACHE:
+        _CACHE[clocking] = run_pool(clocking)
+    return _CACHE[clocking]
+
+
+# ------------------------------------------------- event vs stall parity
+def test_evented_pool_bitwise_matches_stall_pool():
+    """Inverting who owns time must not change WHAT computes: tokens
+    bitwise, every cache/transport counter, blocked seconds and the
+    decode-step grid are identical between the two clockings."""
+    e1, p1, o1 = pool("stall")
+    e2, p2, o2 = pool("event")
+    assert o1 == o2, "event-driven engine diverged from stall path"
+    assert (e1.tokens_decoded, e1.tokens_prefilled,
+            e1.decode_dispatches, e1.suffix_prefill_dispatches,
+            e1.suffix_prefill_rows, e1.fetch_deferrals) == \
+           (e2.tokens_decoded, e2.tokens_prefilled,
+            e2.decode_dispatches, e2.suffix_prefill_dispatches,
+            e2.suffix_prefill_rows, e2.fetch_deferrals)
+    s1, s2 = e1.store.stats, e2.store.stats
+    assert (s1.hits_local, s1.hits_remote, s1.misses, s1.restores,
+            s1.migrations, s1.fetches_pending) == \
+           (s2.hits_local, s2.hits_remote, s2.misses, s2.restores,
+            s2.migrations, s2.fetches_pending)
+    assert (p1.migrations_done, p1.fetches_done, p1.fetches_cancelled) \
+        == (p2.migrations_done, p2.fetches_done, p2.fetches_cancelled)
+    assert p1.engine_blocked_s == p2.engine_blocked_s
+    assert p1.loop.now == p2.loop.now            # same e2e makespan
+    # the step events ran on the identical virtual-time grid with the
+    # identical active-row sets
+    assert [(s.t, s.gen_ids) for s in e1.step_events] == \
+           [(s.t, s.gen_ids) for s in e2.step_events]
+    # and the transport activity interleaved identically
+    assert [t for t in p1.loop.trace if t[1] == "transport"] == \
+           [t for t in p2.loop.trace if t[1] == "transport"]
+
+
+def test_evented_dispatches_are_loop_events():
+    """Under "event" clocking, run_all's decode dispatches are loop
+    events; under "stall" they tick the clock from inside the engine.
+    Both record the steps onto the composed trace."""
+    _e1, p1, _ = pool("stall")
+    _e2, p2, _ = pool("event")
+    for p in (p1, p2):
+        assert any(t[1] == "engine" and t[2] == "step"
+                   for t in p.loop.trace)
+    # identical transfer activity, but the evented loop additionally
+    # executed the scheduled engine-step events
+    assert p2.loop.events_run > p1.loop.events_run
+
+
+# ------------------------------------------------- composed-trace golden
+def test_composed_trace_run_to_run_identical():
+    """Same inputs => the full composed (t, plane, event, tag) timeline
+    replays exactly, floats included — serialized form too (what the CI
+    determinism job byte-compares)."""
+    _e, p1, _ = pool("event")
+    _e2, p2, _ = run_pool("event")
+    assert p1.loop.trace == p2.loop.trace
+    assert format_trace(p1.loop.trace) == format_trace(p2.loop.trace)
+    planes = {t[1] for t in p1.loop.trace}
+    assert {"engine", "transport"} <= planes
+    # the trace is time-ordered: one timeline, not per-plane appendixes
+    times = [t[0] for t in p1.loop.trace]
+    assert times == sorted(times)
+
+
+def test_trace_breakdown_prices_planes():
+    """Makespan and per-plane busy seconds derive from the one trace:
+    the engine plane is decode_dispatches x decode_step_s, transport is
+    the link's paired start->done busy time."""
+    eng, plane, _ = pool("event")
+    bd = plane_breakdown(plane.loop.trace, plane.cfg.decode_step_s)
+    assert abs(bd["engine"]
+               - eng.decode_dispatches * plane.cfg.decode_step_s) < 1e-9
+    assert abs(bd["transport"] - plane.link.busy_total) < 1e-12
+    assert 0.0 < makespan(plane.loop.trace) <= plane.loop.now
+
+
+# ------------------------------------------------------- park/wake logic
+def test_parked_engine_wakes_via_future_not_polling():
+    """When every row is parked on the wire the engine schedules
+    NOTHING: zero decode steps between park and wake, the wake is the
+    fetch future's resolution at the next decode-step grid point, and
+    the idle gap lands in engine_blocked_s."""
+    plane = make_plane(bandwidth=1e5, latency=5e-3,
+                       prefill_tokens_per_s=1.0)   # slow wire, fetch wins
+    store = PrefixCacheStore(local_budget_bytes=1,
+                             remote_budget_bytes=1 << 30,
+                             transport=plane)
+    eng = Engine(CFG, PARAMS, Runtime(), max_len=96, cache_store=store,
+                 max_batch=4, transport=plane, clocking="event")
+    p = list(np.random.RandomState(7).randint(0, CFG.vocab_size, 24))
+    g1 = eng.submit(p, max_new_tokens=3, temperature=0.0)
+    ref = eng.run(g1)
+    plane.drain()
+    blocked0 = plane.engine_blocked_s
+    g2 = eng.submit(p, max_new_tokens=3, temperature=0.0)
+    out = eng.run_all()
+    assert out[g2] == ref                      # restored prefix, bitwise
+    ev = [t for t in plane.loop.trace if t[1] == "engine"]
+    parks = [t for t in ev if t[2] == "park"]
+    wakes = [t for t in ev if t[2] == "wake"]
+    assert parks and wakes
+    t_park, t_wake = parks[0][0], wakes[0][0]
+    assert t_wake > t_park
+    steps_during = [t for t in ev
+                    if t[2] == "step" and t_park < t[0] < t_wake]
+    assert steps_during == []                  # no polling
+    # the wake landed ON the decode-step grid and the gap was charged
+    dt = plane.cfg.decode_step_s
+    assert abs((t_wake - t_park) / dt - round((t_wake - t_park) / dt)) \
+        < 1e-9
+    assert plane.engine_blocked_s - blocked0 >= t_wake - t_park
+
+
+def test_step_events_carry_active_row_sets():
+    """EngineStepEvents carry the gen-ids each dispatch advanced —
+    admission growth is visible step to step."""
+    eng, _plane, _ = pool("event")
+    assert eng.step_events
+    sizes = [len(s.gen_ids) for s in eng.step_events]
+    assert max(sizes) > 1                      # batched steps happened
+    for s in eng.step_events:
+        assert len(set(s.gen_ids)) == len(s.gen_ids)

@@ -203,6 +203,70 @@ def test_fetch_cost_model_prefers_recompute():
     assert plane.fetches_started == 0           # nothing hit the wire
 
 
+def test_defer_ages_out_after_k_puts_to_drop():
+    """ROADMAP deferred-migration aging: the defer policy may keep the
+    local tier over budget only so long — after K deferred puts it
+    falls back to drop, so local memory is bounded even when remote
+    headroom never returns."""
+    plane = make_plane(tier_bytes=4000, backpressure="defer",
+                       defer_max_puts=2)
+    st = _store_with(plane, local=4000)
+    st.put([1], payload(4000), length=1)
+    st.put([2], payload(4000), length=1)        # LRU [1] migrates
+    plane.drain()
+    assert plane.tier.used == 4000              # tier now full
+    st.put([3], payload(4000), length=1)        # defer 1
+    st.put([4], payload(4000), length=1)        # defer 2
+    assert st.stats.migrations_deferred == 2
+    assert st.stats.migrations_defer_aged == 0
+    assert st.local_bytes == 12000              # over budget, deferred
+    st.put([5], payload(4000), length=1)        # aged: falls back to drop
+    assert st.stats.migrations_defer_aged >= 1
+    assert st.stats.migrations_dropped >= 1
+    assert st.local_bytes <= 4000               # budget restored
+    # headroom returning resets the aging window
+    plane.tier.release(4000)
+    st.put([6], payload(4000), length=1)
+    plane.drain()
+    assert st.stats.migrations >= 2
+    assert st._defers_since_headroom == 0
+
+
+def test_defer_ages_out_after_t_seconds_under_shrinking_tier():
+    """The time bound, under the scenario the ROADMAP names: arrival-
+    rate reallocation shrinks the hosting pool, the tier is suddenly
+    over-subscribed, and deferred entries may only wait T virtual
+    seconds before the fallback policy applies."""
+    loop = EventLoop()
+    sched = ElasticScheduler(loop, SchedulerConfig(num_devices=4))
+    plane = TransportPlane(
+        loop=loop,
+        link=TransportLink(loop, LinkSpec(bandwidth=1e9, latency=1e-4)),
+        tier=RemoteTierPool(bytes_per_device=4000, sched=sched,
+                            host_pool="profiling"),
+        cfg=TransportConfig(mode="async", backpressure="defer",
+                            defer_max_s=1.0, defer_fallback="drop"))
+    st = _store_with(plane, local=4000)
+    assert sched.n_prof == 2                    # capacity 8000
+    st.put([1], payload(4000), length=1)
+    st.put([2], payload(4000), length=1)        # [1] migrates
+    st.put([3], payload(4000), length=1)        # [2] migrates: tier full
+    plane.drain()
+    assert plane.tier.used == 8000
+    # validation-heavy iteration shrinks the profiling pool: remote
+    # capacity halves mid-run, the tier is over-subscribed
+    sched.L_val, sched.L_prof = 10, 1
+    sched.begin_iteration(1)
+    assert plane.tier.capacity == 4000 and plane.tier.headroom < 0
+    st.put([4], payload(4000), length=1)        # defer (time window opens)
+    assert st.stats.migrations_deferred == 1
+    plane.tick(2.0)                             # T=1.0s elapses
+    st.put([5], payload(4000), length=1)        # aged: drop fallback
+    assert st.stats.migrations_defer_aged >= 1
+    assert st.stats.migrations_dropped >= 1
+    assert st.local_bytes <= 4000
+
+
 # ------------------------------------------------- engine: async restore
 def test_async_migrate_restore_bitwise_identical_to_sync_path():
     """The full loop — park, streamed page-granular migrate-out,
