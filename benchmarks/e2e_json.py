@@ -12,8 +12,17 @@ a trajectory consumer needs without parsing CSV tables:
   * ``shared_pool``  — the paper's 10-workflow simulated pool
     (run_shared_pool, async eval plane): composed-trace makespan and
     per-plane breakdown plus the submit->profile-done feedback latency
-    (the metric table_async_overlap tracks).
+    (the metric table_async_overlap tracks);
+  * ``engine_shared_pool`` — the same pool with ``llm="engine"``
+    (DESIGN.md §One-loop): every workflow's generations are REAL
+    continuous-batched decode on one loop-clocked Engine — makespan and
+    the gen/eval/transport/engine per-plane breakdown all derive from
+    the ONE composed trace, alongside the serving-side counters
+    (Engine.fork() forks, pages shared, tokens early termination never
+    decoded).
 
+``--trace-out PATH`` additionally serializes the engine-backed pool's
+composed trace (the CI determinism job byte-diffs two runs).
 Byte-stable output (sorted keys, fixed float rounding) so two runs of
 the same commit produce identical files.
 """
@@ -26,7 +35,8 @@ import sys
 from benchmarks._data import SEED, T10
 from benchmarks.table_async_overlap import feedback_latency
 from benchmarks.table_remote_kv import run_pool
-from repro.core.trace import plane_breakdown
+from repro.core.trace import (dump_trace, plane_breakdown,
+                              unclosed_generations)
 from repro.search.driver import run_shared_pool
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -64,13 +74,39 @@ def build(smoke: bool = False) -> dict:
         "utilization_any": _r(sched.utilization_any()),
         "trace_events": len(sched.loop.trace),
     }
+    # engine-backed shared pool (§One-loop): real decode rows behind
+    # the same controllers, one composed timeline for everything
+    etasks = T10[:2] if smoke else T10[:4]
+    esched, ectls = run_shared_pool(
+        etasks, model="glm", iterations=2 if smoke else 3,
+        devices=4, seed=SEED, trace=True, llm="engine")
+    eng2 = esched.engine
+    dt = esched.transport.cfg.decode_step_s
+    gbd = plane_breakdown(esched.loop.trace, dt)
+    assert not unclosed_generations(esched.loop.trace)
+    engine_shared_pool = {
+        "makespan_s": _r(esched.loop.now),
+        "planes_busy_s": {k: _r(v) for k, v in gbd.items()},
+        "engine_forks": sum(c.gen.forks for c in ectls),
+        "pages_shared": eng2.store.stats.pages_shared,
+        "tokens_decoded": eng2.tokens_decoded,
+        "tokens_not_decoded": eng2.tokens_not_decoded,
+        "early_terminations": sum(c.result.early_terminations
+                                  for c in ectls),
+        "prefix_fetches": sum(c.result.prefix_fetches for c in ectls),
+        "trace_events": len(esched.loop.trace),
+    }
     return {"engine_pool": engine_pool, "shared_pool": shared_pool,
-            "smoke": smoke}
+            "engine_shared_pool": engine_shared_pool, "smoke": smoke,
+            "_engine_shared_trace": esched.loop.trace}
 
 
 def main() -> None:
     smoke = "--smoke" in sys.argv
     data = build(smoke=smoke)
+    etrace = data.pop("_engine_shared_trace")
+    if "--trace-out" in sys.argv:
+        dump_trace(etrace, sys.argv[sys.argv.index("--trace-out") + 1])
     out = ROOT / "BENCH_e2e.json"
     out.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
     print(f"wrote {out}")

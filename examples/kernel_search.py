@@ -1,11 +1,17 @@
 """End-to-end agentic kernel optimization with REAL kernel evaluation.
 
-The LLM side streams scripted reasoning traces (A1 in DESIGN.md), but
-every candidate is a real config of the Pallas tiled-matmul template:
+Every candidate is a real config of the Pallas tiled-matmul template:
 validation BUILDS the kernel and checks it against the jnp oracle in
 interpret mode; profiling prices it with the TPU roofline cost model.
 The search therefore optimizes a genuine kernel: watch the best block
 configuration improve over iterations.
+
+By default the LLM side ALSO runs for real (DESIGN.md §One-loop): the
+workflow's reasoning is continuous-batched decode on a loop-clocked
+``serving.Engine`` — speculative forks are ``Engine.fork()`` zero-copy
+page shares, and early termination cancels the live decode row
+mid-stream (the remaining tokens are never dispatched).  Pass ``sim``
+as the third argument to replay the scripted generation path instead.
 
 Evaluation is DEFERRED (DESIGN.md §Async-eval-plane): submission only
 queues a thunk, the interpret-mode build runs when the elastic pool
@@ -17,34 +23,24 @@ rides the same loop: every speculative fork fetches its reasoning
 prefix over the modeled link, and the fetch latency lands in the fork's
 availability time.
 
-    PYTHONPATH=src python examples/kernel_search.py [task] [iterations]
+    PYTHONPATH=src python examples/kernel_search.py [task] [iters] [llm]
 """
 import sys
 
-from repro.core.clock import EventLoop
-from repro.core.controller import SpecController, SpecGenConfig
-from repro.core.scheduler import ElasticScheduler, SchedulerConfig
-from repro.search.llm_sim import FeedbackSearch, SimLLMBackend
+from repro.search.driver import run_specgen
 from repro.search.real_eval import RealEvalBackend
-from repro.search.workload import WorkloadModel
-from repro.serving.transport import TransportPlane
 from repro.kernels.matmul.ops import estimate_cost, reference_cost
 from repro.search.tasks import TASKS
 
 task = sys.argv[1] if len(sys.argv) > 1 else "T6"
 iters = int(sys.argv[2]) if len(sys.argv) > 2 else 12
+llm = sys.argv[3] if len(sys.argv) > 3 else "engine"
 
-loop = EventLoop()
-sched = ElasticScheduler(loop, SchedulerConfig(
-    num_devices=4, realloc="arrival-rate"))
-transport = TransportPlane(loop=loop)
-sched.attach_transport(transport)
 evaluator = RealEvalBackend()
-ctl = SpecController(
-    loop, sched, SimLLMBackend(WorkloadModel("glm", seed=0)),
-    evaluator, FeedbackSearch(),
-    SpecGenConfig(iterations=iters), transport=transport)
-res = ctl.run_task(task)
+res, sched, ctl = run_specgen(
+    task, iterations=iters, devices=4, realloc="arrival-rate",
+    evaluator=evaluator, transport="async", llm=llm)
+transport = ctl.transport
 
 # deferred-plane accounting: speculative validations GRANTED a device
 # (thunk executed: a build, or a batched replay of one) while the
@@ -61,7 +57,7 @@ for rec in res.records:
 
 td = TASKS[task]
 print(f"\ntask {task} ({td.name}), {iters} iterations, "
-      f"{res.profiling_feedback} profiled kernels")
+      f"{res.profiling_feedback} profiled kernels, llm={llm}")
 best = res.best_candidate
 if best is not None:
     cfg = {k: v for k, v in best.config.items()
@@ -97,3 +93,14 @@ print(f"remote-KV transport: {res.prefix_fetches} prefix fetches "
       f"({transport.link.bytes_moved / 2**20:.1f} MiB moved, mean "
       f"{mean_fetch * 1e3:.2f} ms/fetch), {fetch_overlap} overlapped "
       f"live reasoning; link util {sched.transport_utilization():.1%}")
+
+# engine-backed serving substrate: the same numbers the paper's
+# speculative-generation story is about, read off the REAL engine
+if llm == "engine":
+    gen, eng = ctl.gen, ctl.gen.engine
+    print(f"engine substrate: {gen.forks} Engine.fork() forks "
+          f"({gen.forks_denied} declined), "
+          f"{eng.store.stats.pages_shared} KV pages shared zero-copy; "
+          f"{eng.tokens_decoded} tokens decoded, "
+          f"{gen.tokens_not_decoded} cancelled before dispatch "
+          f"({res.early_terminations} early terminations)")

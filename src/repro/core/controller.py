@@ -38,9 +38,10 @@ from repro.core.scheduler import ElasticScheduler
 from repro.core.termination import get_criterion
 from repro.core.triggers import StreamTriggerParser
 from repro.core.types import (PRIO_FALLBACK, PRIO_SPEC, EvalFuture,
-                              IterationRecord, KernelCandidate,
-                              ProfileResult, ValidationResult,
-                              make_eval_request)
+                              GenerationBackend, IterationRecord,
+                              KernelCandidate, ProfileResult,
+                              ReasoningHandle, SpecHandle,
+                              ValidationResult, make_eval_request)
 
 
 # ------------------------------------------------------------- protocols
@@ -67,6 +68,104 @@ class LLMBackend(Protocol):
                   ctx: Dict[str, Any]) -> ReasoningScript: ...
     def speculative(self, task_id: str, iteration: int, ctx: Dict[str, Any],
                     prefix_frac: float) -> SpecScript: ...
+
+
+# -------------------------------------------------- scripted generation
+# GenerationBackend (core/types.py) adapter over any scripted
+# LLMBackend.  This IS the pre-refactor controller behavior, factored
+# out: chunks replay as loop events at their scripted relative times,
+# completion fires at ``script.duration``, a fork's completion at
+# ``spec.duration`` (+ the re-prefill estimate when the prefix cache is
+# off).  Scheduling order and float expressions are preserved exactly —
+# the PR-5 goldens pin this path byte-for-byte.
+
+class _ScriptedReasoning:
+    """ReasoningHandle replaying a ReasoningScript's chunk events."""
+
+    def __init__(self, loop: EventLoop, script: ReasoningScript,
+                 on_chunk: Callable[[str], None],
+                 on_done: Callable[..., None]):
+        self.loop, self.script = loop, script
+        self.total_tokens = script.total_tokens
+        self.chars_total = max(sum(len(c) for _, c in script.chunks), 1)
+        self.chars_seen = 0
+        self._t0 = loop.now
+        self._cancelled = False
+        self._events = []
+
+        def fire(text: str) -> None:
+            if self._cancelled:
+                return
+            self.chars_seen += len(text)
+            on_chunk(text)
+
+        for rel_t, text in script.chunks:
+            self._events.append(
+                loop.schedule(rel_t, lambda x=text: fire(x), tag="chunk"))
+        self._events.append(
+            loop.schedule(script.duration,
+                          lambda: on_done(script.total_tokens,
+                                          script.duration,
+                                          script.candidate_fn),
+                          tag="reason-done"))
+
+    def progress(self) -> float:
+        return min(1.0, self.chars_seen / self.chars_total)
+
+    def consumed_tokens(self) -> float:
+        consumed = min(1.0, (self.loop.now - self._t0)
+                       / max(self.script.duration, 1e-9))
+        return consumed * self.script.total_tokens
+
+    def cancel(self) -> None:
+        self._cancelled = True
+        for ev in self._events:
+            ev.cancel()
+
+
+class _ScriptedSpec:
+    """SpecHandle whose completion is one scheduled loop event."""
+
+    def __init__(self, loop: EventLoop, spec: SpecScript):
+        self.loop, self.spec = loop, spec
+        self.prompt_tokens = spec.prompt_tokens
+        self._event = None
+
+    def launch(self, extra_delay: float,
+               on_done: Callable[[int, Optional[KernelCandidate]],
+                                 None]) -> None:
+        s = self.spec
+        # the script belongs to the backend (it may be shared/cached):
+        # the re-prefill delay is added locally, never written back
+        self._event = self.loop.schedule(
+            s.duration + extra_delay,
+            lambda: on_done(s.tokens, s.candidate), tag="spec")
+
+    def cancel(self) -> None:
+        if self._event is not None:
+            self._event.cancel()
+
+
+class ScriptedGeneration:
+    """GenerationBackend over a scripted LLMBackend (the sim path).
+
+    ``SpecController`` auto-wraps any plain LLMBackend in this adapter,
+    so pre-protocol call sites keep working unchanged."""
+
+    def __init__(self, llm: LLMBackend, loop: EventLoop):
+        self.llm, self.loop = llm, loop
+
+    def begin_reasoning(self, task_id: str, iteration: int,
+                        ctx: Dict[str, Any], *,
+                        on_chunk: Callable[[str], None],
+                        on_done: Callable[..., None]) -> _ScriptedReasoning:
+        script = self.llm.reasoning(task_id, iteration, ctx)
+        return _ScriptedReasoning(self.loop, script, on_chunk, on_done)
+
+    def fork(self, task_id: str, iteration: int, ctx: Dict[str, Any],
+             prefix_frac: float) -> _ScriptedSpec:
+        spec = self.llm.speculative(task_id, iteration, ctx, prefix_frac)
+        return _ScriptedSpec(self.loop, spec)
 
 
 class EvalBackend(Protocol):
@@ -155,7 +254,14 @@ class SpecController:
                  search: SearchAlgorithm, cfg: SpecGenConfig,
                  name: str = "w0", transport=None):
         self.loop, self.sched = loop, scheduler
-        self.llm, self.evaluator, self.search = llm, evaluator, search
+        # generations run through the GenerationBackend seam; a plain
+        # scripted LLMBackend is auto-wrapped so existing call sites
+        # (and the byte-pinned sim path) are unchanged
+        if not hasattr(llm, "begin_reasoning"):
+            llm = ScriptedGeneration(llm, loop)
+        self.gen: GenerationBackend = llm
+        self.llm = getattr(llm, "llm", llm)  # underlying scripted backend
+        self.evaluator, self.search = evaluator, search
         self.cfg = cfg
         self.name = name
         # remote-KV transport plane (serving/transport.py): when set,
@@ -210,35 +316,32 @@ class SpecController:
         # plane for this workflow (closed at reason-done / termination)
         self.loop.record("gen", "start", f"{self.name}:{it}")
         task_id, ctx = self._task_id, self._ctx
-        script = self.llm.reasoning(task_id, it, ctx)
         parser = StreamTriggerParser()
         state = {
-            "it": it, "rec": rec, "script": script, "parser": parser,
+            "it": it, "rec": rec, "handle": None, "parser": parser,
             "done": False, "reason_done": False, "terminated": False,
-            "spec_live": 0, "spec_events": [], "chunk_events": [],
+            "gen_closed": False,
+            "spec_live": 0, "spec_handles": [], "probe_events": [],
             "fallback_pending": False, "best": None,
             "t_gen_start": self.loop.now,
-            "chars_total": max(sum(len(c) for _, c in script.chunks), 1),
-            "chars_seen": 0,
         }
 
         def on_chunk(text):
             if state["done"] or state["terminated"]:
                 return
-            state["chars_seen"] += len(text)
             triggers = parser.feed(text)
             if self.cfg.enable_speculation and triggers:
                 self._fork(state)
 
-        def on_reason_complete():
+        def on_reason_complete(total_tokens, duration, candidate_fn):
             if state["done"] or state["terminated"]:
                 return
             state["reason_done"] = True
-            self.loop.record("gen", "end", f"{self.name}:{it}")
-            rec.gen_time += script.duration
-            self._tok["reason"] += script.total_tokens
-            rec.reasoning_tokens += script.total_tokens
-            cand = script.candidate_fn()
+            self._close_gen(state, f"{self.name}:{it}")
+            rec.gen_time += duration
+            self._tok["reason"] += total_tokens
+            rec.reasoning_tokens += total_tokens
+            cand = candidate_fn()
             if cand is not None:
                 cand.iteration = it
                 cand.origin = "reasoning"
@@ -249,13 +352,9 @@ class SpecController:
             else:
                 self._maybe_finish(state)
 
-        for rel_t, text in script.chunks:
-            state["chunk_events"].append(
-                self.loop.schedule(rel_t, lambda x=text: on_chunk(x),
-                                   tag="chunk"))
-        state["chunk_events"].append(
-            self.loop.schedule(script.duration, on_reason_complete,
-                               tag="reason-done"))
+        state["handle"] = self.gen.begin_reasoning(
+            task_id, it, ctx, on_chunk=on_chunk,
+            on_done=on_reason_complete)
 
         # idle-fork probe (Alg 1 line 7: "... or GPU is idle")
         if self.cfg.enable_speculation and self.cfg.idle_fork:
@@ -266,10 +365,10 @@ class SpecController:
                 if (self.sched.idle_val > 0 or self.sched.idle_prof > 0) \
                         and state["spec_live"] < self.cfg.max_concurrent_spec:
                     self._fork(state)
-                state["chunk_events"].append(
+                state["probe_events"].append(
                     self.loop.schedule(self.cfg.idle_probe_interval,
                                        idle_probe, tag="idle-probe"))
-            state["chunk_events"].append(
+            state["probe_events"].append(
                 self.loop.schedule(self.cfg.idle_probe_interval, idle_probe,
                                    tag="idle-probe"))
 
@@ -289,27 +388,28 @@ class SpecController:
         k = min(k, self.cfg.max_concurrent_spec - state["spec_live"])
         if k <= 0:
             return
-        frac = min(1.0, state["chars_seen"] / state["chars_total"])
+        frac = state["handle"].progress()
         if frac < self.cfg.min_prefix_frac:
             return
         it, rec = state["it"], state["rec"]
         for _ in range(k):
-            spec = self.llm.speculative(self._task_id, it, self._ctx, frac)
+            h = self.gen.fork(self._task_id, it, self._ctx, frac)
+            if h is None:
+                # the serving substrate declined (no free slot / parent
+                # not decoding) — skip this speculative slot
+                continue
             state["spec_live"] += 1
             self.loop.record("gen", "fork", f"{self.name}:{it}")
             self._mark_gen(state)
             # prefix-cache accounting (paper §6.2.3): fork prompt KV is
             # shared with the live reasoning generation; without the
             # remote cache the fork re-prefills its prompt (token cost
-            # AND latency at the serving prefill rate).  The re-prefill
-            # latency is accounted LOCALLY — the SpecScript belongs to
-            # the backend (it may serve cached/shared scripts) and must
-            # not be mutated here.
-            fork_delay = spec.duration
+            # AND latency at the serving prefill rate, added at launch).
+            extra_delay = 0.0
             xfer = None
             if self.cfg.prefix_cache:
-                self._tok["cached"] += spec.prompt_tokens
-                rec.cached_prefix_tokens += spec.prompt_tokens
+                self._tok["cached"] += h.prompt_tokens
+                rec.cached_prefix_tokens += h.prompt_tokens
                 if self.transport is not None:
                     # the prefix hit is served from the REMOTE tier over
                     # the modeled link.  The transfer rides the shared
@@ -319,18 +419,18 @@ class SpecController:
                     # landed — the queued completion below, not the
                     # queue-free estimate.
                     _lat, xfer = self.transport.prefix_fetch(
-                        spec.prompt_tokens, tag=f"prefix-{self.name}")
+                        h.prompt_tokens, tag=f"prefix-{self.name}")
                     self._fetch["n"] += 1
 
                     def account(_f, x=xfer):
                         self._fetch["s"] += x.finished - x.submitted
                     xfer.future.add_done_callback(account)
             else:
-                self._tok["spec"] += spec.prompt_tokens
-                rec.spec_tokens += spec.prompt_tokens
-                fork_delay += spec.prompt_tokens / 2500.0
+                self._tok["spec"] += h.prompt_tokens
+                rec.spec_tokens += h.prompt_tokens
+                extra_delay = h.prompt_tokens / 2500.0
 
-            def on_spec_done(s=spec, x=xfer):
+            def on_spec_done(tokens, candidate, x=xfer):
                 if x is not None and not x.done and \
                         not (state["done"] or state["terminated"]):
                     # the generation finished but its prefix KV is still
@@ -340,21 +440,21 @@ class SpecController:
                     x.future.add_done_callback(
                         lambda _f: None
                         if (state["done"] or state["terminated"])
-                        else on_spec_done(s, None))
+                        else on_spec_done(tokens, candidate, None))
                     return
                 state["spec_live"] -= 1
                 self._mark_gen(state)
                 if state["done"] or state["terminated"]:
                     return
-                self._tok["spec"] += s.tokens
-                rec.spec_tokens += s.tokens
-                if s.candidate is not None:
-                    s.candidate.iteration = it
+                self._tok["spec"] += tokens
+                rec.spec_tokens += tokens
+                if candidate is not None:
+                    candidate.iteration = it
                     rec.candidates += 1
-                    self._submit_validation(s.candidate, state,
+                    self._submit_validation(candidate, state,
                                             fallback=False)
-            state["spec_events"].append(
-                self.loop.schedule(fork_delay, on_spec_done, tag="spec"))
+            h.launch(extra_delay, on_spec_done)
+            state["spec_handles"].append(h)
 
     # ------------------------------------------------- validation/profiling
     # Deferred execution: submission only QUEUES a thunk — the kernel
@@ -413,27 +513,46 @@ class SpecController:
 
     # ----------------------------------------------------------- completion
     def _terminate(self, state) -> None:
-        """Early termination (Alg 1 lines 17-20)."""
-        rec, script = state["rec"], state["script"]
+        """Early termination (Alg 1 lines 17-20).
+
+        Cancelling the reasoning handle is what cuts generation cost:
+        on the scripted path it cancels the remaining chunk events; on
+        the engine path it cancels REAL in-flight decode (pages
+        released, remaining tokens never computed)."""
+        rec, handle = state["rec"], state["handle"]
         state["terminated"] = True
-        self.loop.record("gen", "end", f"{self.name}:{state['it']}:term")
+        self._close_gen(state, f"{self.name}:{state['it']}:term")
         rec.early_terminated = True
         self._early_terms += 1
-        consumed = min(1.0, (self.loop.now - state["t_gen_start"])
-                       / max(script.duration, 1e-9))
-        self._tok["reason"] += consumed * script.total_tokens
-        rec.reasoning_tokens += int(consumed * script.total_tokens)
+        consumed_tokens = handle.consumed_tokens()
+        self._tok["reason"] += consumed_tokens
+        rec.reasoning_tokens += int(consumed_tokens)
         rec.gen_time += self.loop.now - state["t_gen_start"]
-        for ev in state["chunk_events"] + state["spec_events"]:
+        handle.cancel()
+        for h in state["spec_handles"]:
+            h.cancel()
+        for ev in state["probe_events"]:
             ev.cancel()
         self._finish_iteration(state)
 
     def _maybe_finish(self, state) -> None:
         if state["reason_done"] and not state["fallback_pending"] \
                 and not state["done"]:
-            for ev in state["spec_events"]:
-                ev.cancel()
+            for h in state["spec_handles"]:
+                h.cancel()
             self._finish_iteration(state)
+
+    def _close_gen(self, state, tag: str) -> None:
+        """Close this iteration's "gen" span exactly once.  Termination
+        can race reason-completion (the fallback kernel is still in the
+        queues when a speculative one meets the criterion); whichever
+        path runs first emits the paired ("gen","end") — the other is a
+        no-op, so ``plane_breakdown`` never sees an unclosed or
+        double-closed generation."""
+        if state["gen_closed"]:
+            return
+        state["gen_closed"] = True
+        self.loop.record("gen", "end", tag)
 
     def _finish_iteration(self, state) -> None:
         state["done"] = True

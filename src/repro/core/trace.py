@@ -99,6 +99,25 @@ def plane_breakdown(trace: Optional[Iterable[TraceEvent]],
     return out
 
 
+def unclosed_generations(trace: Optional[Iterable[TraceEvent]]
+                         ) -> List[str]:
+    """Workflows whose ("gen","start") records are not balanced by
+    ("gen","end")s — the §One-loop cancellation contract says this must
+    always be empty once a run finishes (every early-termination and
+    abort path closes its span exactly once).  Returns the offending
+    pair keys; a negative balance (double close) offends too."""
+    bal: Dict[str, int] = {}
+    for _t, plane, event, tag in (trace or []):
+        if plane != "gen":
+            continue
+        key = _pair_key(tag)
+        if event == "start":
+            bal[key] = bal.get(key, 0) + 1
+        elif event == "end":
+            bal[key] = bal.get(key, 0) - 1
+    return sorted(k for k, n in bal.items() if n != 0)
+
+
 def format_trace(trace: Optional[Iterable[TraceEvent]]) -> str:
     """Byte-stable text form: one ``repr(t)<TAB>plane<TAB>event<TAB>
     tag`` line per event.  ``repr`` round-trips floats exactly, so two

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
 from repro.core.clock import Future
 
@@ -94,6 +94,62 @@ def make_eval_request(kind: str, candidate: KernelCandidate,
     fut.request = Request(kind=kind, candidate=candidate, thunk=thunk,
                           future=fut, priority=priority)
     return fut
+
+
+# ---------------------------------------------------------- generation
+# The controller <-> serving seam (DESIGN.md §One-loop).  A backend owns
+# HOW a generation runs (scripted events vs real batched decode on a
+# shared Engine); the controller owns WHAT happens to the stream
+# (trigger parsing, forking, early termination).  Both implementations
+# schedule everything on the one shared EventLoop.
+
+class ReasoningHandle(Protocol):
+    """A live reasoning generation the controller is subscribed to.
+
+    The backend delivers decoded text via the ``on_chunk`` callback
+    passed to ``begin_reasoning`` and signals completion via ``on_done
+    (total_tokens, duration, candidate_fn)``.  ``candidate_fn`` is
+    passed UNCALLED: the controller invokes it only after its own
+    guards, so backends with ordered internal draws stay deterministic.
+    """
+    total_tokens: int                        # planned accounting tokens
+
+    def progress(self) -> float: ...         # fraction of trace streamed
+    def consumed_tokens(self) -> float: ...  # prorated tokens if cut now
+    def cancel(self) -> None: ...            # early termination
+
+
+class SpecHandle(Protocol):
+    """A forked speculative generation, not yet launched.
+
+    Two-phase on purpose: ``fork`` gives the controller the handle (and
+    ``prompt_tokens`` for prefix-cache accounting) BEFORE any completion
+    is scheduled, so the prefix fetch rides the transport link ahead of
+    the spec-completion event — preserving composed-trace event order.
+    ``on_done(tokens, candidate)`` fires at spec completion."""
+    prompt_tokens: int                       # reasoning-prefix tokens
+
+    def launch(self, extra_delay: float,
+               on_done: Callable[[int, Optional["KernelCandidate"]],
+                                 None]) -> None: ...
+    def cancel(self) -> None: ...
+
+
+class GenerationBackend(Protocol):
+    """What SpecController runs generations on (DESIGN.md §One-loop).
+
+    ``fork`` may return None when the substrate cannot fork right now
+    (no free slot, parent not decoding) — the controller skips that
+    speculative slot; the scripted sim never declines."""
+
+    def begin_reasoning(self, task_id: str, iteration: int,
+                        ctx: Dict[str, Any], *,
+                        on_chunk: Callable[[str], None],
+                        on_done: Callable[..., None]
+                        ) -> ReasoningHandle: ...
+
+    def fork(self, task_id: str, iteration: int, ctx: Dict[str, Any],
+             prefix_frac: float) -> Optional[SpecHandle]: ...
 
 
 @dataclasses.dataclass

@@ -14,14 +14,55 @@ from repro.search.workload import WorkloadModel
 
 
 def _make_transport(loop: EventLoop, sched: ElasticScheduler,
-                    transport) -> Optional[TransportPlane]:
+                    transport, decode_step_s: Optional[float] = None
+                    ) -> Optional[TransportPlane]:
     """``transport``: None (legacy, no modeled remote-KV link) or
-    "async"/"sync" (build a plane on the pool's loop and attach it)."""
+    "async"/"sync" (build a plane on the pool's loop and attach it).
+    ``decode_step_s`` overrides the plane's decode-step grid (the
+    engine-backed path uses a calibrated virtual step so real token
+    counts span sim-comparable durations)."""
     if transport is None:
         return None
-    plane = TransportPlane(loop=loop, cfg=TransportConfig(mode=transport))
+    cfg = TransportConfig(mode=transport) if decode_step_s is None \
+        else TransportConfig(mode=transport, decode_step_s=decode_step_s)
+    plane = TransportPlane(loop=loop, cfg=cfg)
     sched.attach_transport(plane)
     return plane
+
+
+# Engine-backed generation (DESIGN.md §One-loop): defaults calibrated
+# so ~reasoning_tokens real decode steps x decode_step_s lands near the
+# sim's ~700 s mean reasoning duration — speculative forks then have
+# time to validate/profile BEFORE reasoning ends, so early termination
+# cancels REAL in-flight decode (tokens_not_decoded > 0).
+ENGINE_DEFAULTS = dict(arch="qwen2-1.5b", prompt_len=12,
+                       reasoning_tokens=40, spec_tokens=10,
+                       decode_step_s=15.0)
+
+
+def _make_engine(plane: TransportPlane, max_batch: int, opts: dict):
+    """One shared Engine on the run's loop (via its transport plane),
+    loop-clocked: its decode pump schedules EngineStepEvents on the
+    SAME composed timeline as scheduler/transport/eval."""
+    import jax as _jax
+    from repro.models import schema
+    from repro.models.layers import Runtime
+    from repro.models.registry import get_smoke
+    from repro.serving.engine import Engine
+
+    cfg = get_smoke(opts["arch"])
+    params = schema.init_params(cfg, _jax.random.PRNGKey(opts["seed"]))
+    max_len = opts.get("max_len") or (opts["prompt_len"]
+                                      + opts["reasoning_tokens"]
+                                      + opts["spec_tokens"] + 4)
+    return Engine(cfg, params, Runtime(), max_len=max_len,
+                  max_batch=max_batch, transport=plane, clocking="event")
+
+
+def _engine_opts(engine_opts, seed: int) -> dict:
+    o = dict(ENGINE_DEFAULTS, seed=seed)
+    o.update(engine_opts or {})
+    return o
 
 
 def _make_loop(trace: bool, evaluator) -> EventLoop:
@@ -47,7 +88,16 @@ def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
                 realloc: str = "queue-max", priority: bool = True,
                 seed: int = 0, max_concurrent_spec: int = 8,
                 evaluator=None, transport=None, trace: bool = False,
+                llm: str = "sim", engine_opts=None,
                 ) -> Tuple[TaskResult, ElasticScheduler, SpecController]:
+    """``llm="sim"`` replays the calibrated scripted path (byte-pinned
+    by the goldens); ``llm="engine"`` runs the workflow's generations
+    as REAL continuous-batched decode on a loop-clocked Engine
+    (forks = Engine.fork, early termination cancels live rows)."""
+    assert llm in ("sim", "engine")
+    if llm == "engine" and transport is None:
+        transport = "async"                  # the engine needs the plane
+    eo = _engine_opts(engine_opts, seed)
     loop = _make_loop(trace, evaluator)
     wl = WorkloadModel(model=model, seed=seed)
     sched = ElasticScheduler(loop, SchedulerConfig(
@@ -57,9 +107,21 @@ def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
         realloc=realloc, priority=priority,
         static_split=((devices - devices // 2, devices // 2)
                       if scheduler_mode == "static" else None)))
-    plane = _make_transport(loop, sched, transport)
+    plane = _make_transport(
+        loop, sched, transport,
+        decode_step_s=eo["decode_step_s"] if llm == "engine" else None)
+    if llm == "engine":
+        from repro.search.llm_engine import EngineGeneration
+        engine = _make_engine(plane, 1 + max_concurrent_spec, eo)
+        gen = EngineGeneration(
+            engine, SimLLMBackend(wl), name="w0",
+            prompt_len=eo["prompt_len"],
+            reasoning_tokens=eo["reasoning_tokens"],
+            spec_tokens=eo["spec_tokens"], seed=seed)
+    else:
+        gen = SimLLMBackend(wl)
     ctl = SpecController(
-        loop, sched, SimLLMBackend(wl),
+        loop, sched, gen,
         SimEvalBackend(wl) if evaluator is None else evaluator,
         FeedbackSearch(),
         SpecGenConfig(iterations=iterations, termination=termination,
@@ -95,7 +157,8 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
                     enable_speculation: bool = True,
                     prefix_cache: bool = True,
                     termination="hist-avg", evaluator=None,
-                    transport=None, trace: bool = False):
+                    transport=None, trace: bool = False,
+                    llm: str = "sim", engine_opts=None):
     """The paper's evaluation setting: N workflows sharing one pool.
 
     The pool runs the async evaluation plane by default: continuous
@@ -107,7 +170,17 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
     on the shared loop (``sched.loop.trace``) — gen, eval and transport
     planes on one clock, the trace ``core.trace`` derives makespan and
     per-plane breakdowns from.
+
+    ``llm="engine"`` backs EVERY workflow's generations with ONE
+    loop-clocked Engine (the paper's serving substrate): N reasoning
+    rows continuous-batch together, forks are Engine.fork() page
+    sharing, and early termination cancels real decode.  The shared
+    engine is returned as ``sched.engine`` for inspection.
     """
+    assert llm in ("sim", "engine")
+    if llm == "engine" and transport is None:
+        transport = "async"                  # the engine needs the plane
+    eo = _engine_opts(engine_opts, seed)
     loop = _make_loop(trace, evaluator)
     wl = WorkloadModel(model=model, seed=seed)
     sched = ElasticScheduler(loop, SchedulerConfig(
@@ -118,11 +191,28 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
         work_stealing=work_stealing,
         static_split=((devices - devices // 2, devices // 2)
                       if scheduler_mode == "static" else None)))
-    plane = _make_transport(loop, sched, transport)
+    plane = _make_transport(
+        loop, sched, transport,
+        decode_step_s=eo["decode_step_s"] if llm == "engine" else None)
+    engine = None
+    if llm == "engine":
+        spec_cap = SpecGenConfig().max_concurrent_spec
+        engine = _make_engine(plane, len(tasks) * (1 + spec_cap), eo)
+    sched.engine = engine
+    sched.transport = plane
     ctls = []
     for i, task in enumerate(tasks):
+        if engine is not None:
+            from repro.search.llm_engine import EngineGeneration
+            gen = EngineGeneration(
+                engine, SimLLMBackend(wl), name=f"w{i}",
+                prompt_len=eo["prompt_len"],
+                reasoning_tokens=eo["reasoning_tokens"],
+                spec_tokens=eo["spec_tokens"], seed=seed + i)
+        else:
+            gen = SimLLMBackend(wl)
         c = SpecController(
-            loop, sched, SimLLMBackend(wl),
+            loop, sched, gen,
             SimEvalBackend(wl) if evaluator is None else evaluator,
             FeedbackSearch(),
             SpecGenConfig(iterations=iterations, termination=termination,
@@ -139,6 +229,7 @@ def run_engine_pool(arch: str = "qwen2-1.5b", n_workflows: int = 10,
                     prompt_len: int = 16, reasoning_tokens: int = 24,
                     forks_per_workflow: int = 1, fork_tokens: int = 6,
                     max_len: int = 160, seed: int = 0,
+                    trace: bool = False,
                     ) -> Tuple["object", Dict[int, List[int]]]:
     """The paper's serving-side setting on the REAL model: N concurrent
     kernel-refinement workflows (one reasoning generation each, plus
@@ -147,6 +238,13 @@ def run_engine_pool(arch: str = "qwen2-1.5b", n_workflows: int = 10,
     on-device sampling; forks share their parent's KV pages via
     block-table copy (zero KV copies, zero prefill recompute) and
     pages copy-on-write lazily as children diverge.
+
+    Since the one-loop refactor (DESIGN.md §One-loop) this runs on the
+    SAME stack as the controller drivers — a shared EventLoop with a
+    transport plane, the engine loop-clocked (``clocking="event"``) —
+    instead of a standalone plane: the mid-stream forks are scheduled
+    loop events landing between decode-step events on one composed
+    timeline, not manual ``step_all`` pumping.
 
     Returns (engine, {gen_id: emitted tokens}).
     """
@@ -159,20 +257,27 @@ def run_engine_pool(arch: str = "qwen2-1.5b", n_workflows: int = 10,
 
     cfg = get_smoke(arch)
     params = schema.init_params(cfg, _jax.random.PRNGKey(seed))
+    loop = EventLoop()
+    if trace:
+        loop.enable_trace()
+    plane = TransportPlane(loop=loop, cfg=TransportConfig(mode="async"))
     eng = Engine(cfg, params, Runtime(), max_len=max_len,
-                 max_batch=n_workflows * (1 + forks_per_workflow))
+                 max_batch=n_workflows * (1 + forks_per_workflow),
+                 transport=plane, clocking="event")
     rs = np.random.RandomState(seed)
     roots = [eng.submit(list(rs.randint(0, cfg.vocab_size, prompt_len)),
                         max_new_tokens=reasoning_tokens, temperature=0.7,
                         reasoning=True, seed=seed + i)
              for i in range(n_workflows)]
     fork_at = max(2, reasoning_tokens // 3)
-    for _ in range(fork_at):
-        eng.step_all()
-    for i, r in enumerate(roots):           # mid-reasoning speculation
-        if eng.generation(r).status != "running":
-            continue                        # already retired: no parent
-        for j in range(forks_per_workflow):
-            eng.fork(r, max_new_tokens=fork_tokens, temperature=0.9,
-                     seed=seed + 100 * i + j)
+
+    def do_forks():                         # mid-reasoning speculation
+        for i, r in enumerate(roots):
+            if eng.generation(r).status != "running":
+                continue                    # already retired: no parent
+            for j in range(forks_per_workflow):
+                eng.fork(r, max_new_tokens=fork_tokens, temperature=0.9,
+                         seed=seed + 100 * i + j)
+    loop.schedule(fork_at * plane.cfg.decode_step_s, do_forks,
+                  tag="fork")
     return eng, eng.run_all()

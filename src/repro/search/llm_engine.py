@@ -1,0 +1,176 @@
+"""Engine-backed GenerationBackend: workflows decode on a REAL engine.
+
+This is the tentpole seam of DESIGN.md §One-loop: each SpecController's
+reasoning generation is a real continuous-batched row on ONE shared
+``serving.engine.Engine`` whose decode pump lives on the SAME EventLoop
+as the scheduler, transport and eval planes.  Concretely
+
+  * ``begin_reasoning`` submits a prompt and subscribes to the
+    per-token stream — decoded tokens are detokenized into the
+    calibrated synthetic trace text (``SimLLMBackend`` owns WHAT the
+    model says and what kernels it emits; the engine owns WHEN tokens
+    exist) and fed to the controller's ``StreamTriggerParser``;
+  * ``fork`` is ``Engine.fork()``: a zero-copy block-table copy off the
+    live reasoning row, pages shared until copy-on-write peels them —
+    the controller layers its prefix-fetch transport accounting on top;
+  * early termination cancels REAL in-flight decode: the cancelled
+    rows' remaining tokens are never dispatched (``tokens_not_decoded``
+    — the paper's cut generation cost), pages drop to the pool.
+
+Token/duration bookkeeping stays CALIBRATED (the workload model's
+token counts and the virtual-clock durations the engine's decode grid
+produces), so controller accounting is comparable across backends while
+compute is real.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.controller import ReasoningScript, SpecScript
+from repro.core.types import KernelCandidate
+from repro.search.llm_sim import SimLLMBackend
+from repro.search.workload import _rs
+
+
+class _EngineReasoning:
+    """ReasoningHandle over a live engine row (decoded-token stream)."""
+
+    def __init__(self, backend: "EngineGeneration", gid: int,
+                 script: ReasoningScript,
+                 on_chunk: Callable[[str], None],
+                 on_done: Callable[..., None]):
+        self.backend, self.gid, self.script = backend, gid, script
+        self.total_tokens = script.total_tokens
+        self._t0 = backend.loop.now
+        self._emitted = 0
+        # detokenization map: the scripted trace text split into one
+        # piece per planned decode token, so trigger phrases surface at
+        # the same trace fractions the sim path produces them at
+        text = "".join(c for _, c in script.chunks)
+        n = max(backend.reasoning_tokens, 1)
+        L = len(text)
+        self._pieces = [text[i * L // n: (i + 1) * L // n]
+                        for i in range(n)]
+
+        def on_token(_g, _tok):
+            i, self._emitted = self._emitted, self._emitted + 1
+            if i < len(self._pieces) and self._pieces[i]:
+                on_chunk(self._pieces[i])
+
+        def on_gen_done(_g):
+            on_done(script.total_tokens, backend.loop.now - self._t0,
+                    script.candidate_fn)
+
+        backend.engine.subscribe(gid, on_token=on_token,
+                                 on_done=on_gen_done)
+
+    def progress(self) -> float:
+        return min(1.0, self._emitted
+                   / max(self.backend.reasoning_tokens, 1))
+
+    def consumed_tokens(self) -> float:
+        # prorated by tokens actually DECODED (engine truth), scaled to
+        # the calibrated accounting tokens
+        return self.progress() * self.script.total_tokens
+
+    def cancel(self) -> None:
+        self.backend._cancel_gen(self.gid)
+
+
+class _EngineSpec:
+    """SpecHandle over a forked engine row."""
+
+    def __init__(self, backend: "EngineGeneration", gid: int,
+                 spec: SpecScript):
+        self.backend, self.gid, self.spec = backend, gid, spec
+        self.prompt_tokens = spec.prompt_tokens
+
+    def launch(self, extra_delay: float,
+               on_done: Callable[[int, Optional[KernelCandidate]],
+                                 None]) -> None:
+        # the forked row shares its prefix KV zero-copy, so there is no
+        # re-prefill to serialize behind: extra_delay (the no-cache
+        # estimate) stays accounting-only on this backend
+        s = self.spec
+        self.backend.engine.subscribe(
+            self.gid, on_done=lambda _g: on_done(s.tokens, s.candidate))
+
+    def cancel(self) -> None:
+        self.backend._cancel_gen(self.gid)
+
+
+class EngineGeneration:
+    """GenerationBackend running one workflow's generations on a shared
+    Engine (many workflows -> many EngineGeneration views of ONE engine,
+    the paper's serving substrate).
+
+    ``llm`` is the scripted backend supplying trace text, candidates
+    and calibrated token counts; ``reasoning_tokens``/``spec_tokens``
+    set how many REAL tokens the engine decodes per generation (the
+    virtual duration is that times the plane's ``decode_step_s``)."""
+
+    def __init__(self, engine, llm: SimLLMBackend, *, name: str = "w0",
+                 prompt_len: int = 12, reasoning_tokens: int = 40,
+                 spec_tokens: int = 10, temperature: float = 0.7,
+                 spec_temperature: float = 0.9, seed: int = 0):
+        assert engine.loop is not None, \
+            "EngineGeneration needs a loop-clocked engine (transport " \
+            "plane attached, clocking='event')"
+        self.engine, self.llm, self.name = engine, llm, name
+        self.loop = engine.loop
+        self.prompt_len = prompt_len
+        self.reasoning_tokens = reasoning_tokens
+        self.spec_tokens = spec_tokens
+        self.temperature = temperature
+        self.spec_temperature = spec_temperature
+        self.seed = seed
+        self._live: Optional[int] = None      # current reasoning row
+        self._seq = 0
+        self.forks = 0                        # Engine.fork() calls
+        self.forks_denied = 0                 # substrate declined
+        self.tokens_not_decoded = 0           # this workflow's savings
+
+    # ------------------------------------------------------------- seam
+    def begin_reasoning(self, task_id: str, it: int, ctx: Dict[str, Any],
+                        *, on_chunk: Callable[[str], None],
+                        on_done: Callable[..., None]) -> _EngineReasoning:
+        script = self.llm.reasoning(task_id, it, ctx)
+        vocab = self.engine.cfg.vocab_size
+        prompt = [int(t) for t in
+                  _rs(self.seed, "prompt", self.name, task_id, it)
+                  .randint(0, vocab, self.prompt_len)]
+        self._seq += 1
+        gid = self.engine.submit(
+            prompt, max_new_tokens=self.reasoning_tokens,
+            temperature=self.temperature, reasoning=True,
+            seed=(self.seed << 16) + self._seq)
+        self._live = gid
+        h = _EngineReasoning(self, gid, script, on_chunk, on_done)
+        self.engine.kick()                    # re-arm an idle pump
+        return h
+
+    def fork(self, task_id: str, it: int, ctx: Dict[str, Any],
+             prefix_frac: float) -> Optional[_EngineSpec]:
+        eng, gid = self.engine, self._live
+        if gid is None or eng.generation(gid).status != "running" \
+                or eng.slots_free == 0 \
+                or (eng.pool.dense_layers and eng.mid_step):
+            # no live parent row / engine full / recurrent state only
+            # consistent at step boundaries: decline, controller skips
+            self.forks_denied += 1
+            return None
+        spec = self.llm.speculative(task_id, it, ctx, prefix_frac)
+        self._seq += 1
+        child = eng.fork(gid, max_new_tokens=self.spec_tokens,
+                         temperature=self.spec_temperature,
+                         seed=(self.seed << 16) + self._seq)
+        self.forks += 1
+        return _EngineSpec(self, child, spec)
+
+    # ------------------------------------------------------------ intern
+    def _cancel_gen(self, gid: int) -> None:
+        g = self.engine.generation(gid)
+        if g.status in ("pending", "running"):
+            self.tokens_not_decoded += max(
+                g.max_new_tokens - len(g.emitted), 0)
+            self.engine.cancel(gid)

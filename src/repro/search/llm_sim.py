@@ -14,7 +14,12 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.controller import ReasoningScript, SpecScript
+# ScriptedGeneration is re-exported here because this module IS the
+# scripted implementation of the GenerationBackend seam: SimLLMBackend
+# (below) wrapped in ScriptedGeneration replays the calibrated workload
+# as loop events — the byte-pinned `llm="sim"` path of the drivers.
+from repro.core.controller import (ReasoningScript,  # noqa: F401
+                                   ScriptedGeneration, SpecScript)
 from repro.core.types import (EvalFuture, KernelCandidate, ProfileResult,
                               ValidationResult, make_eval_request)
 from repro.search.workload import WorkloadModel, _rs

@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -88,6 +88,12 @@ class Generation:
     rng_seed: int = 0
     pages: List[int] = dataclasses.field(default_factory=list)
     final_prefix: Any = None          # retained PagedPrefix when not parked
+    # per-generation stream subscription (DESIGN.md §One-loop):
+    # on_token fires at each completed decode step with the new token,
+    # on_done exactly once when the generation retires "done" (never on
+    # cancellation — a cancelled stream just stops)
+    on_token: Optional[Callable[["Generation", int], None]] = None
+    on_done: Optional[Callable[["Generation"], None]] = None
 
 
 class Engine:
@@ -138,8 +144,20 @@ class Engine:
         # "pending" (other rows keep decoding) until the tail page lands
         self._awaiting_fetch: Dict[int, PendingFetch] = {}
         self.fetch_deferrals = 0                # admissions parked on a fetch
+        # persistent evented pump (DESIGN.md §One-loop): the same state
+        # the one-shot _run_all_evented closure used to hold, promoted
+        # to the instance so controllers can keep the engine decoding
+        # across submissions via kick() without anyone calling run_all
+        self._pump = {"scheduled": False, "parked_at": None,
+                      "last_step": 0.0, "inflight": None}
+        # fetch jobs carrying a wake callback: holds the job OBJECTS
+        # (identity via id() would go stale — a completed job can be
+        # GC'd and a later, distinct job reuse its address, silently
+        # suppressing its wake)
+        self._pump_armed: List[Any] = []
         self.tokens_prefilled = 0
         self.tokens_decoded = 0
+        self.tokens_not_decoded = 0             # cancelled before decode
         self.decode_dispatches = 0              # jitted decode calls
         self.suffix_prefill_dispatches = 0      # batched admission calls
         self.suffix_prefill_rows = 0            # generations admitted via them
@@ -221,10 +239,39 @@ class Engine:
         self.store.stats.tokens_reused += parent.pos
         return gid
 
+    def subscribe(self, gen_id: int, *,
+                  on_token: Optional[Callable[[Generation, int],
+                                              None]] = None,
+                  on_done: Optional[Callable[[Generation], None]] = None
+                  ) -> None:
+        """Attach per-generation stream callbacks (the controller seam):
+        ``on_token(gen, token)`` at each completed decode step,
+        ``on_done(gen)`` once at "done" retirement.  Subscribing to an
+        already-finished generation fires ``on_done`` immediately."""
+        g = self._gens[gen_id]
+        if on_token is not None:
+            g.on_token = on_token
+        if on_done is not None:
+            if g.status == "done":
+                on_done(g)
+            elif g.status != "cancelled":
+                g.on_done = on_done
+
     def cancel(self, gen_id: int) -> None:
+        """Cancel a generation mid-flight: remaining decode work is
+        never dispatched (``tokens_not_decoded``), its pages drop their
+        refcounts, and an awaited prefix fetch is aborted when this was
+        its last waiter.  Safe between a step's compute and completion
+        phases — the completion skips non-running rows."""
         g = self._gens.get(gen_id)
         if g and g.status in ("pending", "running"):
             self._retire(g, "cancelled")
+            # last-waiter-walks-away: if the pump was parked on the
+            # fetch this cancellation just aborted, that future will
+            # never resolve — re-arm a pump step at the next grid point
+            # so it re-evaluates (goes idle, or re-parks on fetches
+            # other rows still await)
+            self._on_fetch_landed(None)
 
     def suspend_to_store(self, gen_id: int) -> None:
         """Park a generation's prefix in the cache store (local tier; the
@@ -277,6 +324,11 @@ class Engine:
 
     def _retire(self, g: Generation, status: str) -> None:
         g.status = status
+        if status == "cancelled":
+            # early termination's decode savings: tokens this row will
+            # never compute (the paper's cut generation cost)
+            self.tokens_not_decoded += max(
+                g.max_new_tokens - len(g.emitted), 0)
         pf = self._awaiting_fetch.pop(g.gen_id, None)
         if pf is not None:
             # abort the awaited fetch: when this was its last waiter the
@@ -299,6 +351,11 @@ class Engine:
                 g.pages = []
             self._free.append(g.slot)
             g.slot = -1
+        if status == "done" and g.on_done is not None:
+            # fire AFTER the row is recycled: the callback sees a clean
+            # engine (free slot, parked prefix) and may fork/submit
+            cb, g.on_done = g.on_done, None
+            cb(g)
 
     # ----------------------------------------------------------- admission
     def _admit_all(self, pending: Sequence[Generation]) -> None:
@@ -552,11 +609,20 @@ class Engine:
 
     def _dispatch_complete(self, gens: Sequence[Generation], nxt) -> None:
         for g in gens:
+            if g.status != "running":
+                # cancelled between this step's compute and completion
+                # (early termination): its slot is already recycled —
+                # appending nxt[g.slot] would steal another row's token
+                continue
             t = int(nxt[g.slot])
             g.tokens.append(t)
             g.emitted.append(t)
             g.pos += 1
             self.tokens_decoded += 1
+            if g.on_token is not None:
+                g.on_token(g, t)
+            if g.status != "running":
+                continue              # on_token cancelled this row
             if len(g.emitted) >= g.max_new_tokens or \
                     g.pos >= self.max_len - 1:
                 self._retire(g, "done")
@@ -623,102 +689,133 @@ class Engine:
         return {gid: g.emitted for gid, g in self._gens.items()}
 
     def _run_all_evented(self) -> Dict[int, List[int]]:
-        """Drain the engine FROM the event loop (DESIGN.md
-        §Engine-on-loop): each batched decode dispatch is a scheduled
-        ``EngineStepEvent`` one ``decode_step_s`` after the previous,
-        so engine steps interleave with transfer completions and any
-        other work sharing the loop in ONE composed timeline.  When
-        every row is parked on an in-flight fetch the engine schedules
-        NOTHING — parked rows wake via the fetch future's resolution
-        (no polling), at the next decode-step grid point (bit-matching
-        the legacy stall path's k x decode_step_s stalls), and the gap
-        is charged to ``engine_blocked_s``."""
-        plane = self.transport
-        loop = plane.loop
-        dt = plane.cfg.decode_step_s
-        st = {"finished": False, "scheduled": False, "parked_at": None,
-              "last_step": loop.now, "inflight": None}
-        # fetch jobs carrying a wake callback: holds the job OBJECTS
-        # (identity set via id would go stale — a completed job can be
-        # GC'd mid-drain and a later, distinct job reuse its address,
-        # silently suppressing its wake)
-        armed = []
-
-        def schedule(delay: float) -> None:
-            st["scheduled"] = True
-            loop.schedule(delay, step, tag="engine-step")
-
-        def on_fetch_landed(_f) -> None:
-            if st["finished"] or st["parked_at"] is None or \
-                    st["scheduled"]:
-                return
-            # wake at the next decode-step grid point at/after the
-            # landing (successive addition, exactly the stall path's
-            # accumulated k x dt — float-identical timelines)
-            target = st["last_step"]
-            while target < loop.now and dt > 0.0:
-                target += dt
-            schedule(max(target - loop.now, 0.0))
-
-        def step() -> None:
-            st["scheduled"] = False
-            st["last_step"] = loop.now
-            if st["parked_at"] is not None:
-                plane.engine_blocked_s += loop.now - st["parked_at"]
-                st["parked_at"] = None
-                loop.record("engine", "wake", "")
-            if st["inflight"] is not None:
-                # the dispatch launched one decode step ago completes
-                # NOW: token appends, retirements and the migrations
-                # they trigger land at the step's end, exactly where
-                # the stall path's post-tick completion put them
-                gens, nxt = st["inflight"]
-                st["inflight"] = None
-                self._dispatch_complete(gens, nxt)
-            pending = [g for g in self._gens.values()
-                       if g.status == "pending"]
-            if pending and self._free:
-                self._admit_all(pending)
-            live = [g for g in self._gens.values()
-                    if g.status == "running"]
-            if live:
-                st["inflight"] = (live, self._dispatch_compute(live))
-                schedule(dt)
-                return
-            if not any(g.status == "pending"
-                       for g in self._gens.values()):
-                st["finished"] = True           # drained
-                return
-            if not (self._awaiting_fetch and plane.in_flight):
-                st["finished"] = True           # only blocked pendings
-                return
-            # every row is parked on the wire: arm wake-on-resolution
-            # for each distinct in-flight fetch job and go idle
-            st["parked_at"] = loop.now
-            loop.record("engine", "park",
-                        f"waiting={len(self._awaiting_fetch)}")
-            for pf in list(self._awaiting_fetch.values()):
-                job = pf.job
-                if job.done or job.cancelled or \
-                        any(j is job for j in armed):
-                    continue
-                armed.append(job)
-                job.future.add_done_callback(on_fetch_landed)
-
+        """Drain the engine FROM the event loop via the persistent pump
+        (``kick``/``_pump_step``): run the shared loop until the pump
+        goes idle (drained or only blocked pendings remain)."""
         self._evented = True
         try:
-            schedule(0.0)
-            loop.run(stop=lambda: st["finished"])
+            self.kick()
+            self.loop.run(stop=self.pump_idle)
         finally:
             self._evented = False
         return {gid: g.emitted for gid, g in self._gens.items()}
+
+    # -------------------------------------------------- persistent pump
+    # The engine's decode clock as a PERMANENT resident of the shared
+    # loop (DESIGN.md §One-loop): each batched decode dispatch is a
+    # scheduled ``EngineStepEvent`` one ``decode_step_s`` after the
+    # previous; when every row is parked on an in-flight fetch the
+    # engine schedules NOTHING — parked rows wake via the fetch
+    # future's resolution (no polling), at the next decode-step grid
+    # point (bit-matching the legacy stall path's k x decode_step_s
+    # stalls), the gap charged to ``engine_blocked_s``.  When nothing
+    # is left to decode the pump goes idle and a later ``submit`` +
+    # ``kick`` re-arms it — that is how SpecControllers keep their
+    # generations flowing without ever calling ``run_all``.
+
+    def kick(self) -> None:
+        """(Re)arm the evented pump after submit/fork.  No-op when the
+        pump is already active (scheduled or parked on a fetch) or when
+        this engine is not loop-clocked."""
+        if self.transport is None or self.clocking != "event" or \
+                self.transport.cfg.mode != "async":
+            return
+        p = self._pump
+        if p["scheduled"] or p["parked_at"] is not None:
+            return
+        p["last_step"] = self.loop.now       # step grid restarts here
+        self._pump_schedule(0.0)
+
+    def pump_idle(self) -> bool:
+        return not self._pump["scheduled"] and \
+            self._pump["parked_at"] is None
+
+    def _pump_schedule(self, delay: float) -> None:
+        self._pump["scheduled"] = True
+        self.loop.schedule(delay, self._pump_step, tag="engine-step")
+
+    def _on_fetch_landed(self, _f) -> None:
+        p = self._pump
+        if p["parked_at"] is None or p["scheduled"]:
+            return
+        # wake at the next decode-step grid point at/after the landing
+        # (successive addition, exactly the stall path's accumulated
+        # k x dt — float-identical timelines)
+        dt = self.transport.cfg.decode_step_s
+        target = p["last_step"]
+        while target < self.loop.now and dt > 0.0:
+            target += dt
+        self._pump_schedule(max(target - self.loop.now, 0.0))
+
+    def _pump_step(self) -> None:
+        plane, loop, p = self.transport, self.loop, self._pump
+        p["scheduled"] = False
+        p["last_step"] = loop.now
+        if p["parked_at"] is not None:
+            plane.engine_blocked_s += loop.now - p["parked_at"]
+            p["parked_at"] = None
+            loop.record("engine", "wake", "")
+        if p["inflight"] is not None:
+            # the dispatch launched one decode step ago completes NOW:
+            # token appends, retirements and the migrations they
+            # trigger land at the step's end, exactly where the stall
+            # path's post-tick completion put them
+            gens, nxt = p["inflight"]
+            p["inflight"] = None
+            self._dispatch_complete(gens, nxt)
+        pending = [g for g in self._gens.values()
+                   if g.status == "pending"]
+        if pending and self._free:
+            self._admit_all(pending)
+        live = [g for g in self._gens.values() if g.status == "running"]
+        if live:
+            p["inflight"] = (live, self._dispatch_compute(live))
+            self._pump_schedule(plane.cfg.decode_step_s)
+            return
+        if not any(g.status == "pending" for g in self._gens.values()):
+            return                              # idle: drained
+        if not (self._awaiting_fetch and plane.in_flight):
+            return                              # idle: blocked pendings
+        # every row is parked on the wire: arm wake-on-resolution for
+        # each distinct in-flight fetch job and go idle
+        p["parked_at"] = loop.now
+        loop.record("engine", "park",
+                    f"waiting={len(self._awaiting_fetch)}")
+        self._pump_armed = [j for j in self._pump_armed
+                            if not (j.done or j.cancelled)]
+        for pf in list(self._awaiting_fetch.values()):
+            job = pf.job
+            if job.done or job.cancelled or \
+                    any(j is job for j in self._pump_armed):
+                continue
+            self._pump_armed.append(job)
+            job.future.add_done_callback(self._on_fetch_landed)
 
     def generation(self, gen_id: int) -> Generation:
         return self._gens[gen_id]
 
     @property
+    def loop(self):
+        """The shared EventLoop this engine is clocked by (via its
+        transport plane); None for un-planed engines."""
+        return self.transport.loop if self.transport is not None else None
+
+    @property
     def live(self) -> int:
         return sum(g.status == "running" for g in self._gens.values())
+
+    @property
+    def slots_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def mid_step(self) -> bool:
+        """True while a decode dispatch is in flight (compute done,
+        completion pending).  Forking an attention-only stack here is
+        safe — CoW peels the shared write page; recurrent/dense rows
+        are only consistent at step boundaries, so callers gate on
+        this."""
+        return self._pump["inflight"] is not None
 
     def cache_bytes(self) -> int:
         """KV bytes actually IN USE: allocated pages (shared pages count

@@ -20,6 +20,7 @@ Covers the deferred-execution refactor end to end:
 import dataclasses
 import json
 import pathlib
+import types
 
 import pytest
 
@@ -347,10 +348,10 @@ def test_predictive_pressure_throttles_forks_ahead_of_queues():
                              SpecGenConfig(iterations=1))
         ctl._task_id, ctl._ctx = "T1", {}
         ctl._tok = {"reason": 0.0, "spec": 0.0, "cached": 0.0}
+        handle = types.SimpleNamespace(progress=lambda: 0.5)
         state = {"it": 0, "rec": IterationRecord(index=0, t_start=0.0),
                  "terminated": False, "reason_done": False, "done": False,
-                 "spec_live": 0, "spec_events": [], "chars_seen": 50,
-                 "chars_total": 100}
+                 "spec_live": 0, "spec_handles": [], "handle": handle}
         for _ in range(2):                     # service-time estimate
             s.submit(req("validation", 50.0))
         loop.run()

@@ -1,0 +1,288 @@
+"""One loop, one timeline (DESIGN.md §One-loop).
+
+SpecController generations run behind the ``GenerationBackend`` seam:
+the scripted sim path (byte-pinned by tests/golden) and the
+engine-backed path, where every workflow's reasoning is a REAL
+continuous-batched row on one loop-clocked Engine.  Acceptance bar:
+
+  * cancellation releases the cancelled row's pages back to the pool
+    (refcounts to zero) and a fetch-parked pending row aborts its
+    in-flight prefix fetch when it was the last waiter;
+  * every ("gen","start") trace record is balanced by exactly one
+    ("gen","end") on every path — normal completion, early
+    termination, terminate-after-reason-done;
+  * the engine-backed shared pool is run-to-run deterministic on the
+    serialized composed trace, with forks going through Engine.fork()
+    (pages shared) and early termination cancelling real decode
+    (tokens_not_decoded > 0) — all on ONE composed timeline.
+"""
+import numpy as np
+import jax
+
+from repro.core.clock import EventLoop
+from repro.core.controller import ScriptedGeneration
+from repro.core.trace import format_trace, unclosed_generations
+from repro.models import schema
+from repro.models.layers import Runtime
+from repro.models.registry import get_smoke
+from repro.search.driver import run_engine_pool, run_shared_pool, \
+    run_specgen
+from repro.search.llm_engine import EngineGeneration
+from repro.search.llm_sim import SimLLMBackend
+from repro.search.workload import WorkloadModel
+from repro.serving.engine import Engine
+from repro.serving.kvcache import PrefixCacheStore
+from repro.serving.transport import (LinkSpec, RemoteTierPool,
+                                     TransportConfig, TransportLink,
+                                     TransportPlane)
+
+CFG = get_smoke("qwen2-1.5b")
+PARAMS = schema.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def make_plane(bandwidth=1e8, latency=5e-4, **cfg):
+    loop = EventLoop()
+    loop.enable_trace()
+    cfg.setdefault("mode", "async")
+    cfg.setdefault("prefill_tokens_per_s", 500.0)
+    return TransportPlane(
+        loop=loop,
+        link=TransportLink(loop, LinkSpec(bandwidth=bandwidth,
+                                          latency=latency)),
+        tier=RemoteTierPool(bytes_per_device=1 << 30),
+        cfg=TransportConfig(**cfg))
+
+
+def make_engine(plane, max_batch=4, store=None, max_len=96, **kw):
+    return Engine(CFG, PARAMS, Runtime(), max_len=max_len,
+                  cache_store=store, max_batch=max_batch,
+                  transport=plane, clocking="event", **kw)
+
+
+# --------------------------------------------------- backend seam wiring
+def test_scripted_backend_autowraps_raw_llm():
+    """A raw LLMBackend handed to SpecController is wrapped in
+    ScriptedGeneration (the sim GenerationBackend); ``ctl.llm`` still
+    exposes the underlying backend for accounting-compat callers."""
+    res, _sched, ctl = run_specgen("T2", iterations=2, seed=3)
+    assert isinstance(ctl.gen, ScriptedGeneration)
+    assert isinstance(ctl.llm, SimLLMBackend)
+    assert ctl.gen.llm is ctl.llm
+    assert len(res.records) == 2
+
+
+def test_engine_stream_reassembles_script_text():
+    """The engine-backed handle detokenizes the decoded-token stream
+    back into the calibrated trace text: the controller's trigger
+    parser sees the SAME characters the sim path feeds it, just timed
+    by real decode steps."""
+    plane = make_plane()
+    eng = make_engine(plane)
+    wl = WorkloadModel("glm", seed=5)
+    gen = EngineGeneration(eng, SimLLMBackend(wl), name="w0",
+                           prompt_len=8, reasoning_tokens=16,
+                           spec_tokens=4, seed=5)
+    expect = SimLLMBackend(WorkloadModel("glm", seed=5))
+    script = expect.reasoning("T2", 0, {})
+    chunks, done = [], []
+    h = gen.begin_reasoning(
+        "T2", 0, {}, on_chunk=chunks.append,
+        on_done=lambda toks, dur, cf: done.append((toks, dur, cf)))
+    assert h.progress() == 0.0
+    plane.loop.run(stop=lambda: bool(done))
+    assert "".join(chunks) == "".join(c for _, c in script.chunks)
+    assert h.progress() == 1.0
+    assert h.consumed_tokens() == script.total_tokens
+    toks, dur, cf = done[0]
+    assert toks == script.total_tokens
+    # virtual duration spans the real decode grid (accumulated steps)
+    assert abs(dur - 16 * plane.cfg.decode_step_s) < 1e-9
+    assert cf().origin == "reasoning"
+
+
+# ------------------------------------------- satellite 1: cancellation
+def test_cancel_mid_decode_releases_pages_to_pool():
+    """Early termination on a live row: remaining tokens are never
+    dispatched (the paper's cut decode cost) and every page refcount
+    drops to zero — the pool is back to its pre-submit free count."""
+    plane = make_plane()
+    eng = make_engine(plane, store_prefixes=False)  # no parked prefixes:
+    free0 = eng.pool.pages_free                     # pool count is exact
+    rs = np.random.RandomState(11)
+    gid = eng.submit(list(rs.randint(0, CFG.vocab_size, 16)),
+                     max_new_tokens=32, temperature=0.7, seed=11)
+    eng.kick()
+    g = eng.generation(gid)
+    plane.loop.run(stop=lambda: len(g.emitted) >= 3)
+    assert g.status == "running" and eng.pool.pages_free < free0
+    eng.cancel(gid)
+    assert g.status == "cancelled"
+    assert eng.pool.pages_free == free0          # refcounts hit zero
+    assert eng.tokens_not_decoded == 32 - len(g.emitted) > 0
+    plane.loop.run(stop=eng.pump_idle)           # pump drains cleanly
+    assert eng.pump_idle()
+
+
+def test_cancel_forked_child_drops_only_its_refs():
+    """Early-terminating a speculative FORK: the child's CoW-peeled
+    pages refcount to zero (freed), the pages it shared with the
+    still-running parent drop exactly the child's ref, and the parent
+    decodes on to completion untouched."""
+    plane = make_plane()
+    eng = make_engine(plane, store_prefixes=False)
+    rs = np.random.RandomState(13)
+    root = eng.submit(list(rs.randint(0, CFG.vocab_size, 16)),
+                      max_new_tokens=24, temperature=0.7, seed=13)
+    eng.kick()
+    parent = eng.generation(root)
+    plane.loop.run(stop=lambda: len(parent.emitted) >= 4)
+    cid = eng.fork(root, max_new_tokens=8, temperature=0.9, seed=14)
+    child = eng.generation(cid)
+    shared = set(parent.pages) & set(child.pages)
+    assert shared                                # zero-copy fork
+    assert all(eng.pool.refcount[p] >= 2 for p in shared)
+    plane.loop.run(stop=lambda: len(child.emitted) >= 2)
+    # CoW has peeled the diverging page by now: re-measure who shares
+    # what right before the cancel
+    still_shared = set(parent.pages) & set(child.pages)
+    own = [p for p in child.pages if p not in parent.pages]
+    assert still_shared and own
+    refs_before = {p: eng.pool.refcount[p] for p in still_shared}
+    eng.cancel(cid)
+    assert child.status == "cancelled" and child.pages == []
+    assert all(eng.pool.refcount[p] == 0 for p in own)
+    assert all(eng.pool.refcount[p] == refs_before[p] - 1 >= 1
+               for p in still_shared)
+    assert eng.tokens_not_decoded == 8 - len(child.emitted) > 0
+    plane.loop.run(stop=eng.pump_idle)           # parent unaffected
+    assert parent.status == "done"
+    assert len(parent.emitted) == 24
+
+
+def test_cancel_parked_pending_aborts_inflight_fetch():
+    """Last-waiter-walks-away: cancelling a fetch-parked pending row
+    aborts the in-flight prefix fetch (no callback ever fires) and the
+    parked pump re-evaluates instead of wedging."""
+    plane = make_plane(bandwidth=1e5, latency=5e-3,
+                       prefill_tokens_per_s=1.0)  # slow wire, fetch wins
+    store = PrefixCacheStore(local_budget_bytes=1,  # force remote tier
+                             remote_budget_bytes=1 << 30,
+                             transport=plane)
+    eng = make_engine(plane, store=store)
+    free0 = eng.pool.pages_free
+    p = list(np.random.RandomState(7).randint(0, CFG.vocab_size, 24))
+    g1 = eng.submit(p, max_new_tokens=3, temperature=0.0)
+    eng.run(g1)
+    plane.drain()                                # prefix migrated remote
+    free_parked = eng.pool.pages_free
+    g2 = eng.submit(p, max_new_tokens=3, temperature=0.0)
+    eng.kick()
+    plane.loop.run(stop=lambda: g2 in eng._awaiting_fetch)
+    assert not eng.pump_idle()                   # parked on the wire
+    assert plane.in_flight > 0
+    eng.cancel(g2)
+    assert eng._awaiting_fetch == {}
+    assert plane.fetches_cancelled == 1
+    assert eng.tokens_not_decoded == 3
+    plane.loop.run(stop=eng.pump_idle)           # un-wedged: goes idle
+    assert eng.pump_idle()
+    plane.drain()
+    assert eng.generation(g2).status == "cancelled"
+    assert eng.pool.pages_free == free_parked    # no leaked pages
+
+
+# --------------------------------------- satellite 2: paired gen spans
+def test_sim_pool_closes_every_gen_span():
+    """Every ("gen","start") is balanced by one ("gen","end") on the
+    sim path — including early-termination and terminate-after-
+    reason-done iterations the pool setting exercises."""
+    sched, ctls = run_shared_pool(["T1", "T2", "T3"], iterations=4,
+                                  devices=4, seed=0, trace=True)
+    gen_ev = [t for t in sched.loop.trace if t[1] == "gen"]
+    assert sum(1 for t in gen_ev if t[2] == "start") > 0
+    assert unclosed_generations(sched.loop.trace) == []
+    assert sum(c.result.early_terminations for c in ctls) > 0
+
+
+def test_unclosed_generations_flags_imbalance():
+    trace = [(0.0, "gen", "start", "w0:0"), (1.0, "gen", "end", "w0:0"),
+             (2.0, "gen", "start", "w1:0")]
+    assert unclosed_generations(trace) == ["w1"]
+    trace.append((3.0, "gen", "end", "w1:0:term"))
+    assert unclosed_generations(trace) == []
+
+
+# ------------------------- satellite 3 + tentpole: engine-backed pool
+_POOL = {}
+
+
+def engine_pool(run: str):
+    if run not in _POOL:
+        _POOL[run] = run_shared_pool(["T1", "T2"], iterations=2,
+                                     devices=4, seed=0, trace=True,
+                                     llm="engine")
+    return _POOL[run]
+
+
+def test_engine_pool_one_composed_timeline():
+    """The tentpole acceptance: N workflows' REAL generations, their
+    Engine.fork() speculation, prefix fetches and eval grants all on
+    ONE composed trace — forks share pages, early termination cancels
+    live decode, and every gen span closes."""
+    sched, ctls = engine_pool("a")
+    eng = sched.engine
+    planes = {t[1] for t in sched.loop.trace}
+    assert {"engine", "gen", "eval", "transport"} <= planes
+    assert sum(c.gen.forks for c in ctls) > 0
+    assert eng.store.stats.pages_shared > 0      # zero-copy fork pages
+    assert sum(c.result.prefix_fetches for c in ctls) > 0
+    assert any(t[1] == "transport" and t[2] == "start"
+               and "prefix" in t[3] for t in sched.loop.trace)
+    # early termination cancelled REAL in-flight decode
+    assert sum(c.result.early_terminations for c in ctls) > 0
+    assert eng.tokens_not_decoded > 0
+    assert eng.tokens_not_decoded == \
+        sum(c.gen.tokens_not_decoded for c in ctls)
+    assert unclosed_generations(sched.loop.trace) == []
+    # the timeline is time-ordered: one clock, not per-plane appendixes
+    times = [t[0] for t in sched.loop.trace]
+    assert times == sorted(times)
+
+
+def test_engine_pool_run_to_run_identical():
+    """Same inputs => the engine-backed pool's full composed timeline
+    replays exactly, serialized bytes included (what the CI determinism
+    job compares across processes)."""
+    s1, _c1 = engine_pool("a")
+    s2, _c2 = engine_pool("b")
+    assert s1.loop.trace == s2.loop.trace
+    assert format_trace(s1.loop.trace) == format_trace(s2.loop.trace)
+    assert s1.loop.now == s2.loop.now
+
+
+def test_engine_pool_matches_backend_protocol_accounting():
+    """Controller accounting stays calibrated across backends: the
+    engine-backed run still fills per-iteration records with nonzero
+    generation time/tokens and produces candidates."""
+    _sched, ctls = engine_pool("a")
+    for c in ctls:
+        assert c.result.best_candidate is not None
+        assert any(r.gen_time > 0 for r in c.result.records)
+        assert any(r.reasoning_tokens > 0 for r in c.result.records)
+
+
+# ------------------------------------- run_engine_pool on shared stack
+def test_run_engine_pool_forks_are_loop_events():
+    """The standalone engine benchmark runs on the SAME stack now: its
+    mid-reasoning forks are scheduled loop events landing between
+    decode steps on the composed trace, not manual step_all pumping."""
+    eng, out = run_engine_pool(n_workflows=3, reasoning_tokens=8,
+                               forks_per_workflow=1, fork_tokens=3,
+                               trace=True)
+    assert eng.loop is not None
+    assert len(out) == 3 * (1 + 1)               # roots + forks
+    assert all(len(v) > 0 for v in out.values())
+    assert eng.store.stats.pages_shared > 0
+    steps = [t[0] for t in eng.loop.trace
+             if t[1] == "engine" and t[2] == "step"]
+    assert steps and steps == sorted(steps)
