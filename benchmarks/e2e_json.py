@@ -21,10 +21,18 @@ a trajectory consumer needs without parsing CSV tables:
     (Engine.fork() forks, pages shared, tokens early termination never
     decoded).
 
+  * ``decode_dispatch`` — the scan-over-layers dispatch table
+    (benchmarks/table_decode_dispatch): per-step host dispatch and
+    lowering cost, Python-loop vs scanned vs sharded decode.  This is
+    the ONE wall-clock-measured section; it runs LAST so its jax config
+    toggling can't perturb the simulated sections.
+
 ``--trace-out PATH`` additionally serializes the engine-backed pool's
 composed trace (the CI determinism job byte-diffs two runs).
 Byte-stable output (sorted keys, fixed float rounding) so two runs of
-the same commit produce identical files.
+the same commit produce identical files — except ``decode_dispatch``,
+which is real timing (the determinism job diffs the trace, not this
+file).
 """
 from __future__ import annotations
 
@@ -96,8 +104,15 @@ def build(smoke: bool = False) -> dict:
         "prefix_fetches": sum(c.result.prefix_fetches for c in ectls),
         "trace_events": len(esched.loop.trace),
     }
+    # wall-clock section LAST (toggles jax_cpu_enable_async_dispatch,
+    # restoring it on exit): loop vs scan vs sharded decode dispatch
+    from benchmarks.table_decode_dispatch import CONFIGS, rows
+    drows = rows(configs=CONFIGS[:1] if smoke else CONFIGS,
+                 iters=10 if smoke else 20)
+    decode_dispatch = {name: derived for name, _, derived in drows}
     return {"engine_pool": engine_pool, "shared_pool": shared_pool,
-            "engine_shared_pool": engine_shared_pool, "smoke": smoke,
+            "engine_shared_pool": engine_shared_pool,
+            "decode_dispatch": decode_dispatch, "smoke": smoke,
             "_engine_shared_trace": esched.loop.trace}
 
 

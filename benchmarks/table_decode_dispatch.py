@@ -1,0 +1,178 @@
+"""Per-step decode dispatch: Python loop vs scan-over-layers vs mesh.
+
+The scan-decode tentpole (DESIGN.md §Sharded-scan-decode) replaces the
+~n_layers traced per-layer dispatches of ``decode_step`` with ONE
+``lax.scan`` over pattern units.  What that buys is NOT total step
+FLOPs — the math is identical — but the two host-side costs that scale
+with layer count:
+
+  * **trace/lowering time**: the unrolled loop traces every layer into
+    the jaxpr, the scan traces one body, so program build (and every
+    retrace) shrinks ~n_layers/pattern-fold;
+  * **per-step dispatch overhead**: the runtime walks the whole
+    unrolled program's buffer graph on every call.  We isolate it with
+    ``jax_cpu_enable_async_dispatch=True`` — enqueue returns before
+    compute, so call-return time IS the host dispatch cost (the queue
+    is drained outside the timed region each iteration).
+
+Total synchronous step time is reported too, with a caveat: the XLA
+CPU backend double-buffers while-loop carries, so on this container the
+scan's compute can pay a copy the unrolled loop doesn't — the dispatch
+and lowering columns are the metrics this table owns; on accelerators
+the dispatch win is the one that shows up as decode latency.
+
+The ``sharded`` column runs the SAME scanned step through
+``ShardCtx(DECODE_RULES)`` on ``make_decode_mesh()`` — a 1x1 mesh on a
+plain CPU backend, an 8-way mesh under the CI leg's
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — pricing the
+partitioned dispatch path.  Each config also pins the bitwise contract
+while we're here: scan logits == unit-barrier-loop logits, exactly.
+
+Run standalone (``python -m benchmarks.table_decode_dispatch``), via
+``make bench-smoke`` (reduced iters), or from benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.distributed.sharding import DECODE_RULES, ShardCtx
+from repro.launch.mesh import make_decode_mesh
+from repro.models import schema
+from repro.models import transformer as T
+from repro.models.layers import Runtime
+
+# (arch, layers): ≥12 layers each — dispatch overhead is a per-layer
+# cost, so the smoke configs' 2-3 layers would understate the ratio the
+# acceptance gate tracks (≥2x on a ≥12-layer config).
+CONFIGS = (
+    ("qwen2-1.5b", 16),             # dense GQA
+    ("recurrentgemma-2b", 12),      # hybrid rglru/rglru/local pattern
+    ("llama4-scout-17b-a16e", 12),  # MoE
+)
+
+
+def _build(arch: str, num_layers: int, B=4, S=64, seed=0):
+    cfg = dataclasses.replace(get_smoke(arch), num_layers=num_layers)
+    params = schema.init_params(cfg, jax.random.PRNGKey(seed))
+    cache = T.init_cache(cfg, B, S)
+    rs = np.random.RandomState(seed)
+    tokens = jnp.asarray(rs.randint(0, cfg.vocab_size, (B, 1)), jnp.int32)
+    return cfg, params, cache, tokens
+
+
+def _dispatch_us(fn, args, iters):
+    """MIN call-return microseconds with async dispatch ON (= host
+    dispatch cost); the queue drains OUTSIDE the timed region.  Min,
+    not mean: enqueue cost is a floor metric, and a single GC pause in
+    a busy process (e2e_json runs this after the whole engine suite)
+    would otherwise dominate a small sample."""
+    jax.block_until_ready(fn(*args))             # compile/warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        best = min(best, time.perf_counter() - t0)
+        jax.block_until_ready(out)
+    return best * 1e6
+
+
+def _step_us(fn, args, iters):
+    jax.block_until_ready(fn(*args))             # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _lower_s(fn, args):
+    t0 = time.perf_counter()
+    fn.lower(*args)
+    return time.perf_counter() - t0
+
+
+def rows(configs=CONFIGS, iters=20):
+    out = []
+    mesh = make_decode_mesh()
+    shard = ShardCtx(mesh=mesh, rules=DECODE_RULES)
+    ndev = mesh.devices.size
+    prev_async = jax.config.values.get("jax_cpu_enable_async_dispatch",
+                                       True)
+    jax.config.update("jax_cpu_enable_async_dispatch", True)
+    try:
+        for arch, nl in configs:
+            cfg, params, cache, tokens = _build(arch, nl)
+            pos = jnp.int32(3)
+            rt_loop = Runtime()
+            rt_bar = Runtime(layer_barrier=True)
+            rt_scan = Runtime(scan_layers=True)
+            sparams = T.stack_params(cfg, params)
+            sstate = T.stack_decode_state(cfg, cache)
+
+            loop_fn = jax.jit(lambda p, t, c, q: T.decode_step(
+                cfg, p, t, c, q, rt_loop))
+            bar_fn = jax.jit(lambda p, t, c, q: T.decode_step(
+                cfg, p, t, c, q, rt_bar))
+            scan_fn = jax.jit(lambda p, t, c, q: T.decode_step(
+                cfg, p, t, c, q, rt_scan))
+            mesh_fn = jax.jit(lambda p, t, c, q: T.decode_step(
+                cfg, p, t, c, q, rt_scan, shard))
+
+            # lowering/trace time: the cost every retrace pays
+            low_loop = _lower_s(loop_fn, (params, tokens, cache, pos))
+            low_scan = _lower_s(scan_fn, (sparams, tokens, sstate, pos))
+
+            # bitwise contract: scan == unit-barrier loop, exactly
+            gl, _ = bar_fn(params, tokens, cache, pos)
+            gs, _ = scan_fn(sparams, tokens, sstate, pos)
+            np.testing.assert_array_equal(np.asarray(gl), np.asarray(gs))
+
+            dis_loop = _dispatch_us(loop_fn, (params, tokens, cache, pos),
+                                    iters)
+            dis_scan = _dispatch_us(scan_fn, (sparams, tokens, sstate, pos),
+                                    iters)
+            stp_loop = _step_us(loop_fn, (params, tokens, cache, pos),
+                                iters)
+            stp_scan = _step_us(scan_fn, (sparams, tokens, sstate, pos),
+                                iters)
+            stp_mesh = _step_us(mesh_fn, (sparams, tokens, sstate, pos),
+                                iters)
+
+            tag = f"{arch.split('-')[0]}_{nl}L"
+            out.append((f"decode_dispatch_loop_us_{tag}", dis_loop,
+                        round(dis_loop, 1)))
+            out.append((f"decode_dispatch_scan_us_{tag}", dis_scan,
+                        round(dis_scan, 1)))
+            out.append((f"decode_dispatch_loop_over_scan_{tag}",
+                        dis_loop + dis_scan,
+                        round(dis_loop / max(dis_scan, 1e-9), 2)))
+            out.append((f"decode_lower_loop_over_scan_{tag}",
+                        (low_loop + low_scan) * 1e6,
+                        round(low_loop / max(low_scan, 1e-9), 2)))
+            out.append((f"decode_step_loop_us_{tag}", stp_loop,
+                        round(stp_loop, 1)))
+            out.append((f"decode_step_scan_us_{tag}", stp_scan,
+                        round(stp_scan, 1)))
+            out.append((f"decode_step_sharded{ndev}_us_{tag}", stp_mesh,
+                        round(stp_mesh, 1)))
+    finally:
+        jax.config.update("jax_cpu_enable_async_dispatch", prev_async)
+    return out
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    print("name,us_per_call,derived")
+    for name, us, derived in rows(iters=5 if smoke else 20):
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,16 @@ def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
     return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
 
 
+def device_mesh_shape(model: int = 1) -> int:
+    """Largest 'data' extent the visible devices support for a
+    ``(data, model)`` mesh.  CPU runners fan out via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    the first jax device query); with a plain single-device backend
+    this is simply 1."""
+    n = jax.device_count()
+    return max(n // max(model, 1), 1)
+
+
 def make_abstract_mesh(axis_shapes: Sequence[int],
                        axis_names: Sequence[str]):
     """AbstractMesh across the 0.4.x ((name, size) pairs) and newer

@@ -77,6 +77,22 @@ PREFILL_RULES: Dict[str, MeshAxes] = dict(SERVE_RULES, act_seq="model",
                                           kv_seq="model", embed="data",
                                           param_use="gather")
 
+# Paged decode (DESIGN.md §Sharded-scan-decode): the engine's decode
+# dispatch must stay BITWISE identical to the single-device path — the
+# determinism CI byte-compares serialized traces and speculative forks
+# rely on bit-stable rows — so only DATA-MOVEMENT axes shard.  Batch
+# rows split over 'data' (rows never interact outside sampling, which
+# is per-row), and the page-arena page axis splits over 'model'
+# (scatters/gathers relocate pages, no arithmetic crosses the split).
+# Every contraction axis replicates: a tensor-parallel partial-sum
+# all-reduce would reassociate the accumulation and break parity.
+DECODE_RULES: Dict[str, MeshAxes] = dict(
+    {k: None for k in TRAIN_RULES},
+    act_batch="data",
+    kv_pages="model",
+    param_use="keep",
+)
+
 
 @dataclasses.dataclass
 class ShardCtx:

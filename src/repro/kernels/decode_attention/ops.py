@@ -40,7 +40,18 @@ def decode_attention_paged_op(q, k_pages, v_pages, block_table, cache_lens,
         scalar-prefetched table drives the DMA grid directly, no
         gathered copy (preferred where the grid allows);
       * neither: jnp oracle.
+
+    The arenas may be ONE layer's (num_pages, ps, ...) arena or the
+    scan-decode FUSED arena (page axis = n_attn_layers * num_pages,
+    DESIGN.md §Sharded-scan-decode) — the contract is unchanged because
+    block tables carry absolute page ids: the caller offsets the table
+    by ``rank * num_pages`` into its slab, and each slab's first page
+    (never allocated) serves as that layer's null/pad page.
     """
+    assert k_pages.shape == v_pages.shape, \
+        f"K/V arena mismatch: {k_pages.shape} vs {v_pages.shape}"
+    assert q.shape[-1] == k_pages.shape[-1], \
+        f"head_dim mismatch: q {q.shape} vs arena {k_pages.shape}"
     if use_pallas and gather:
         B = q.shape[0]
         KV, Dh = k_pages.shape[2], k_pages.shape[3]

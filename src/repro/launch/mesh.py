@@ -7,7 +7,7 @@ code runs on jax versions with and without ``sharding.AxisType``.
 """
 from __future__ import annotations
 
-from repro.compat import make_mesh
+from repro.compat import device_mesh_shape, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,3 +19,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh for CPU smoke runs of the sharded code path."""
     return make_mesh((1, 1), ("data", "model"))
+
+
+def make_decode_mesh(data: int = 0, model: int = 1):
+    """Mesh for Engine(mesh=...) paged decode (DECODE_RULES: batch rows
+    over 'data', arena pages over 'model').  ``data=0`` takes every
+    visible device on the data axis — on CPU runners the device count
+    comes from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (see device_mesh_shape), so the same call is a 1x1 mesh locally and
+    an 8-way mesh on the forced-device CI leg."""
+    if not data:
+        data = device_mesh_shape(model)
+    return make_mesh((data, model), ("data", "model"))

@@ -55,6 +55,10 @@ class Runtime:
     use_pallas: bool = False       # interpret-mode Pallas kernels (tests)
     remat: str = "none"            # none | layer | dots
     scan_layers: bool = False      # homogeneous archs only (real training)
+    layer_barrier: bool = False    # optimization_barrier between layers:
+    #   pins the unrolled loop to scan's per-layer fusion boundaries, so
+    #   loop-with-barrier == scan BITWISE (the scan-decode numerics
+    #   reference; plain unrolled differs by cross-layer reassociation)
     moe_group_axis: str = "batch"  # group-local MoE dispatch granularity
     ce_chunks: int = 1             # cross-entropy seq-chunking (memory)
     score_dtype: str = "float32"   # attention-score dtype (perf knob)

@@ -344,6 +344,234 @@ def cache_logical_axes(cfg: ModelConfig):
     return spec
 
 
+# ----------------------------------------------------- stacked decode state
+# Scan-over-layers decode (DESIGN.md §Sharded-scan-decode) runs the layer
+# stack as ONE lax.scan over pattern units instead of ~n_layers traced
+# dispatches.  It needs two pre-stacked structures:
+#
+#   * params: per-pattern-position trees with a leading (n_units,) axis
+#     (``stack_params``, the ClashLuke stem/block idiom already used by
+#     scan-forward/prefill) plus the unrolled remainder layers;
+#   * decode state: dense per-layer caches stacked the same way, and —
+#     on the paged path — every attention arena FUSED into one flat
+#     arena whose page axis concatenates the per-layer arenas, so layer
+#     with paged-rank r owns pages [r*P, (r+1)*P) and its block table is
+#     just ``block_tables + r*P``.  The per-step write stays one tiny
+#     scatter and the whole stacked arena threads through the scan carry.
+#
+# Stacking is bitwise-neutral per layer; what moves is the XLA fusion
+# boundary BETWEEN layers: scan bodies are compiled once, so scan ==
+# loop-with-``runtime.layer_barrier`` bitwise, while the plain unrolled
+# loop may differ by one-ulp cross-layer reassociation.
+
+
+def _paged_kind(kind: str) -> bool:
+    return kind in ("attn", "moe")
+
+
+def stack_params(cfg: ModelConfig, params):
+    """Pre-stack ``params['layers']`` for scan decode (host-side, once).
+
+    Returns a params dict where the per-layer list is replaced by
+    ``layers_units`` (tuple per pattern position, leading (n_units,)
+    axis) and ``layers_tail`` (the unrolled remainder).  Everything
+    else (embed / final_norm / lm_head) is shared by reference."""
+    pat, stacked, tail = _stack_units(cfg, params["layers"])
+    out = {k: v for k, v in params.items() if k != "layers"}
+    out["layers_units"] = stacked
+    out["layers_tail"] = tuple(tail)
+    return out
+
+
+def stack_decode_state(cfg: ModelConfig, cache, *, paged: bool = False):
+    """Per-layer cache list -> the stacked scan-decode state dict.
+
+    ``paged``: attention/MoE entries of ``cache`` are page arenas
+    (serving.pagepool layout) and fuse into state["arena"]; their
+    positions in state["units"] / state["tail"] hold None.  Dense
+    entries stack along a new leading pattern-unit axis."""
+    kinds = cfg.layer_kinds()
+    _, pat = _pattern(cfg)
+    K = len(pat)
+    n_units = len(kinds) // K
+    scanned, tail = cache[: n_units * K], cache[n_units * K:]
+    units = tuple(
+        None if (paged and _paged_kind(pat[j])) else
+        jax.tree.map(lambda *xs: jnp.stack(xs), *scanned[j::K])
+        for j in range(K)) if n_units else ()
+    tail_state = tuple(
+        None if (paged and _paged_kind(pat[t])) else c
+        for t, c in enumerate(tail))
+    arena = None
+    if paged:
+        slabs = [c for kind, c in zip(kinds, cache) if _paged_kind(kind)]
+        if slabs:
+            arena = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *slabs)
+    return {"units": units, "tail": tail_state, "arena": arena}
+
+
+def unstack_decode_state(cfg: ModelConfig, state, *, paged: bool = False):
+    """Inverse of ``stack_decode_state``: back to the per-layer list."""
+    kinds = cfg.layer_kinds()
+    _, pat = _pattern(cfg)
+    K = len(pat)
+    n_units = len(kinds) // K
+    slabs = []
+    if paged and state["arena"] is not None:
+        A = sum(1 for k in kinds if _paged_kind(k))
+        P = state["arena"]["kv_pos"].shape[0] // A
+        slabs = [jax.tree.map(lambda a: a[r * P:(r + 1) * P],
+                              state["arena"]) for r in range(A)]
+    out, r = [], 0
+    for l, kind in enumerate(kinds):
+        if paged and _paged_kind(kind):
+            out.append(slabs[r])
+            r += 1
+        elif l < n_units * K:
+            it, j = divmod(l, K)
+            out.append(jax.tree.map(lambda a: a[it], state["units"][j]))
+        else:
+            out.append(state["tail"][l - n_units * K])
+    return out
+
+
+def state_from_scan_prefill(cfg: ModelConfig, prefill_cache, max_len=None):
+    """Adapt scan-prefill's stacked cache (tuple per pattern position,
+    nested ``(stacked, tail)`` when the stack doesn't tile) to the
+    scan-decode state dict (dense path: no arena).
+
+    ``max_len``: widen attention K/V slots to this many positions (scan
+    prefill sizes the cache to the prompt, so without headroom the next
+    decode write is dropped).  Local/ring layers are never widened —
+    their write slot is ``pos % width``, so width must stay whatever
+    prefill used (callers wanting the strict decode==forward invariant
+    on local layers use prompts longer than ``local_window``)."""
+    kinds = cfg.layer_kinds()
+    _, pat = _pattern(cfg)
+    K = len(pat)
+    if len(kinds) % K:
+        units, tail = prefill_cache
+    else:
+        units, tail = prefill_cache, ()
+    n_units = len(kinds) // K
+
+    def widen(kind, c):
+        if max_len is None or kind not in ("attn", "moe") or c is None:
+            return c
+        extra = max_len - c["kv_pos"].shape[-1]
+        if extra <= 0:
+            return c
+        out = {}
+        for name, a in c.items():
+            ax = (a.ndim - 3 if name in ("k", "v")
+                  else a.ndim - 1 if name == "kv_pos" else None)
+            if ax is None:
+                out[name] = a
+                continue
+            pad = [(0, 0)] * a.ndim
+            pad[ax] = (0, extra)
+            fill = L.EMPTY_SLOT if name == "kv_pos" else 0
+            out[name] = jnp.pad(a, pad, constant_values=fill)
+        return out
+
+    units = tuple(widen(pat[j], c) for j, c in enumerate(units))
+    tail = tuple(widen(kinds[n_units * K + t], c)
+                 for t, c in enumerate(tail))
+    return {"units": units, "tail": tail, "arena": None}
+
+
+def _decode_step_scan(cfg: ModelConfig, params, tokens, state, pos,
+                      runtime: Runtime, shard: ShardCtx,
+                      active=None, block_tables=None):
+    """One decode step as ONE lax.scan over pattern units.
+
+    Dense per-unit caches ride the scan CARRY (sliced per iteration via
+    dynamic_index, written back via dynamic_update_index); the fused
+    page arena rides the carry whole — each iteration's write is the
+    same one-slot scatter as the loop path, just at ``block_tables +
+    rank*P``.  Inactive rows re-select dense state / drop arena writes
+    exactly as the loop path does."""
+    assert "layers_units" in params, \
+        "scan decode needs stack_params(cfg, params)"
+    B = tokens.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = (jnp.full((B, 1), pos, jnp.int32) if pos.ndim == 0
+                 else pos.reshape(B, 1))
+    x, _ = embed_inputs(cfg, params, tokens, None, positions, shard)
+    kinds = cfg.layer_kinds()
+    _, pat = _pattern(cfg)
+    K = len(pat)
+    n_units = len(kinds) // K
+    paged_pos = [block_tables is not None and _paged_kind(k) for k in pat]
+    PPU = sum(paged_pos)
+    prank = [sum(paged_pos[:j]) for j in range(K)]
+    arena = state["arena"]
+    P_layer = 0
+    if arena is not None:
+        A = sum(1 for k in kinds if _paged_kind(k))
+        P_layer = arena["kv_pos"].shape[0] // A
+
+    def apply_one(xx, kind, p, uc, ar, bt_off):
+        """One block against its sliced dense state or the fused arena;
+        returns (xx, new dense state or None, arena)."""
+        if bt_off is not None:
+            xx, _, ar = block_apply(cfg, kind, p, xx, positions, shard,
+                                    runtime, cache=ar, decode=True,
+                                    block_table=block_tables + bt_off,
+                                    write_active=active)
+            return xx, None, ar
+        xx, _, c2 = block_apply(cfg, kind, p, xx, positions, shard,
+                                runtime, cache=uc, decode=True)
+        if active is not None:
+            c2 = jax.tree.map(
+                lambda n, o: jnp.where(
+                    active.reshape((B,) + (1,) * (n.ndim - 1)), n, o),
+                c2, uc)
+        return xx, c2, ar
+
+    def body(carry, xs):
+        xx, units_c, ar = carry
+        unit_params, it = xs
+        units_c = list(units_c)
+        for j, kind in enumerate(pat):
+            if paged_pos[j]:
+                off = (it * PPU + prank[j]) * P_layer
+                xx, _, ar = apply_one(xx, kind, unit_params[j], None, ar,
+                                      off)
+            else:
+                uc = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, it, 0, keepdims=False), units_c[j])
+                xx, c2, ar = apply_one(xx, kind, unit_params[j], uc, ar,
+                                       None)
+                units_c[j] = jax.tree.map(
+                    lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                        a, n.astype(a.dtype), it, 0), units_c[j], c2)
+        return (xx, tuple(units_c), ar), None
+
+    if n_units:
+        (x, units, arena), _ = jax.lax.scan(
+            body, (x, state["units"], arena),
+            (params["layers_units"], jnp.arange(n_units, dtype=jnp.int32)))
+    else:
+        units = state["units"]
+    tail_state = []
+    for t, (p, c) in enumerate(zip(params["layers_tail"], state["tail"])):
+        kind = pat[t]
+        off = ((n_units * PPU + prank[t]) * P_layer
+               if paged_pos[t] else None)
+        x, c2, arena = apply_one(x, kind, p, c, arena, off)
+        tail_state.append(c2)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    head = _head(cfg, params, shard)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits[:, 0], {"units": units, "tail": tuple(tail_state),
+                          "arena": arena}
+
+
 # ------------------------------------------------------------- serve steps
 def decode_step(cfg: ModelConfig, params, tokens, cache, pos,
                 runtime: Runtime = Runtime(), shard: ShardCtx = NO_SHARD,
@@ -364,14 +592,32 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, pos,
     inactive rows simply drop their arena write instead of re-selecting
     (the arena's leading axis is pages, not rows).  Local-window,
     SSD and RG-LRU layers keep their dense per-row state either way.
+
+    With ``runtime.scan_layers`` and a STACKED state dict (built by
+    ``stack_decode_state`` / the fused pagepool layout), the stack runs
+    as one lax.scan over pattern units — same per-layer math, one
+    compiled body, ~20 dispatch buffers instead of ~400.
     """
+    if isinstance(cache, dict) and "units" in cache:
+        assert runtime.scan_layers, \
+            "stacked decode state requires runtime.scan_layers"
+        return _decode_step_scan(cfg, params, tokens, cache, pos, runtime,
+                                 shard, active=active,
+                                 block_tables=block_tables)
     B = tokens.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     positions = (jnp.full((B, 1), pos, jnp.int32) if pos.ndim == 0
                  else pos.reshape(B, 1))
     x, _ = embed_inputs(cfg, params, tokens, None, positions, shard)
+    if runtime.layer_barrier:
+        # entry boundary too: scan's carry cuts embed->first-unit fusion
+        # (without this, e.g. musicgen's gelu fuses into the embedding
+        # and rounds differently in bf16)
+        x = jax.lax.optimization_barrier(x)
     new_cache = []
-    for kind, p, c in zip(cfg.layer_kinds(), params["layers"], cache):
+    _, pat = _pattern(cfg)
+    for l, (kind, p, c) in enumerate(zip(cfg.layer_kinds(),
+                                         params["layers"], cache)):
         paged = block_tables is not None and kind in ("attn", "moe")
         x, _, c2 = block_apply(cfg, kind, p, x, positions, shard, runtime,
                                cache=c, decode=True,
@@ -383,6 +629,10 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, pos,
                     active.reshape((B,) + (1,) * (n.ndim - 1)), n, o),
                 c2, c)
         new_cache.append(c2)
+        if runtime.layer_barrier and (l + 1) % len(pat) == 0:
+            # fusion boundary at pattern-UNIT granularity: exactly where
+            # a scan body ends, so barrier-loop == scan bitwise
+            x = jax.lax.optimization_barrier(x)
     x = L.apply_norm(cfg, params["final_norm"], x)
     head = _head(cfg, params, shard)
     logits = jnp.einsum("bsd,dv->bsv", x, head)

@@ -51,7 +51,7 @@ import jax.numpy as jnp
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.layers import Runtime
-from repro.distributed.sharding import NO_SHARD
+from repro.distributed.sharding import DECODE_RULES, NO_SHARD, ShardCtx
 from repro.serving.kvcache import (PendingFetch, PrefixCacheStore,
                                    tree_bytes)
 from repro.serving.pagepool import PagePool, PagedPrefix, \
@@ -103,9 +103,24 @@ class Engine:
                  max_len: int = 512, cache_store: PrefixCacheStore = None,
                  store_prefixes: bool = True, max_batch: int = 8,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 top_k: int = 0, transport=None, clocking: str = "event"):
+                 top_k: int = 0, transport=None, clocking: str = "event",
+                 mesh=None):
         assert clocking in ("event", "stall")
         self.cfg, self.params, self.runtime = cfg, params, runtime
+        # scan decode (DESIGN.md §Sharded-scan-decode): with
+        # runtime.scan_layers the pool keeps the FUSED layout (one
+        # arena, pattern-stacked dense state) and the decode dispatch is
+        # one lax.scan over pattern units on pre-stacked params —
+        # bitwise == the layer_barrier loop, ~n_layers fewer traced
+        # dispatches per step.  Suffix prefill keeps per-layer params
+        # (scan prefill owns its cache; a suffix continues one).
+        self.scan = bool(runtime.scan_layers)
+        # mesh=None is THE golden path (byte-identical traces); a mesh
+        # shards batch rows over 'data' and arena pages over 'model'
+        # under DECODE_RULES — data movement only, numerics untouched
+        self.mesh = mesh
+        self.shard = (ShardCtx(mesh=mesh, rules=DECODE_RULES)
+                      if mesh is not None else NO_SHARD)
         # who owns virtual time (DESIGN.md §Engine-on-loop):
         #   "event"  batched run_all() is DRIVEN FROM the shared event
         #            loop — each decode dispatch is a scheduled
@@ -123,7 +138,8 @@ class Engine:
         self.top_k = top_k
         self.pool = PagePool(cfg, max_batch=max_batch, max_len=max_len,
                              page_size=page_size, num_pages=num_pages,
-                             cache_dtype=runtime.cache_dtype)
+                             cache_dtype=runtime.cache_dtype,
+                             layout="fused" if self.scan else "layers")
         self.pool.reclaim = self._reclaim_pages
         # NOTE: `cache_store or ...` would discard an EMPTY store
         # (PrefixCacheStore defines __len__) — compare to None instead
@@ -162,8 +178,26 @@ class Engine:
         self.suffix_prefill_dispatches = 0      # batched admission calls
         self.suffix_prefill_rows = 0            # generations admitted via them
 
-        cfg_, rt = cfg, runtime
+        cfg_, rt, shard_ = cfg, runtime, self.shard
+        if mesh is not None:
+            # pin params replicated on the mesh once (DECODE_RULES keep
+            # every contraction replicated — bitwise-safe, no TP
+            # partial-sum reassociation)
+            from jax.sharding import NamedSharding, PartitionSpec
+            self.params = params = jax.tree.map(
+                lambda a: jax.device_put(
+                    a, NamedSharding(mesh, PartitionSpec())), params)
+        # decode-dispatch params: pre-stacked along the pattern-unit
+        # axis for scan mode (host-side, once), the plain per-layer
+        # tree otherwise
+        self._dparams = T.stack_params(cfg, params) if self.scan \
+            else params
         self._prefills: Dict[int, Any] = {}     # start_pos -> jitted fn
+        # suffix prefill continues an existing cache, which the scan
+        # prefill path (owns its cache, start_pos 0) cannot — admission
+        # always runs the per-layer loop prefill
+        self._prefill_rt = dataclasses.replace(runtime, scan_layers=False) \
+            if self.scan else runtime
         # THE decode dispatch: whole batch, per-row positions/block
         # tables, active mask, fused on-device sampling; the cache
         # (arenas + dense rows) is donated and updated in place
@@ -171,23 +205,9 @@ class Engine:
             lambda p, tok, cache, bt, pos, act, temp, seeds: (
                 lambda lg_c: (sample_tokens(lg_c[0], temp, seeds, pos,
                                             top_k=top_k), lg_c[1])
-            )(T.decode_step(cfg_, p, tok, cache, pos, rt, NO_SHARD,
+            )(T.decode_step(cfg_, p, tok, cache, pos, rt, shard_,
                             active=act, block_tables=bt)),
             donate_argnums=(2,))
-        dense = set(self.pool.dense_layers)
-        if dense:
-            self._dense_copy = jax.jit(
-                lambda cache, s, d: [
-                    jax.tree.map(lambda a: a.at[d].set(a[s]), c)
-                    if i in dense else c for i, c in enumerate(cache)],
-                donate_argnums=(0,))
-            self._dense_admit = jax.jit(
-                lambda cache, rows, slots: [
-                    jax.tree.map(
-                        lambda full, r: full.at[slots].set(
-                            r[: slots.shape[0]]), c, rows[i])
-                    if i in dense else c for i, c in enumerate(cache)],
-                donate_argnums=(0,))
 
     # ----------------------------------------------------------- lifecycle
     def submit(self, prompt_tokens: List[int], *, max_new_tokens: int = 64,
@@ -225,9 +245,7 @@ class Engine:
         slot = self._claim_slot()
         pages = list(parent.pages)
         self.pool.ref(pages)
-        if self.pool.dense_layers:
-            self._cache = self._dense_copy(
-                self._cache, jnp.int32(parent.slot), jnp.int32(slot))
+        self._cache = self.pool.dense_copy(self._cache, parent.slot, slot)
         child = Generation(
             gen_id=gid, tokens=list(parent.tokens),
             prompt_len=len(parent.tokens), slot=slot,
@@ -299,7 +317,13 @@ class Engine:
     # ----------------------------------------------------------- slot mgmt
     def _ensure_cache(self) -> None:
         if self._cache is None:
-            self._cache = self.pool.init_cache()
+            cache = self.pool.init_cache()
+            if self.mesh is not None:
+                # place the arenas/dense rows per DECODE_RULES up front
+                # so the decode jit never reshards the (big) cache
+                cache = jax.device_put(
+                    cache, self.pool.cache_shardings(self.shard, cache))
+            self._cache = cache
 
     def _claim_slot(self) -> int:
         if not self._free:
@@ -311,16 +335,9 @@ class Engine:
 
     def _capture_prefix(self, g: Generation) -> PagedPrefix:
         n_pages = _ceil_div(g.pos, self.pool.page_size)
-        return PagedPrefix.capture(self, g.pages[:n_pages],
-                                   self._read_dense_row(g.slot), g.pos)
-
-    def _read_dense_row(self, slot: int):
-        if not self.pool.dense_layers:
-            return None
-        dense = set(self.pool.dense_layers)
-        return [jax.tree.map(lambda a: a[slot: slot + 1], c)
-                if i in dense else None
-                for i, c in enumerate(self._cache)]
+        return PagedPrefix.capture(
+            self, g.pages[:n_pages],
+            self.pool.read_dense_row(self._cache, g.slot), g.pos)
 
     def _retire(self, g: Generation, status: str) -> None:
         g.status = status
@@ -428,9 +445,8 @@ class Engine:
     def _admit_ready(self, g: Generation, n: int, pages, extra) -> None:
         g.pages = pages
         slot = self._free.pop(0)
-        if extra is not None and self.pool.dense_layers:
-            self._cache = self._dense_admit(
-                self._cache, extra, jnp.asarray([slot], jnp.int32))
+        if extra is not None:
+            self._cache = self.pool.dense_admit(self._cache, extra, [slot])
         g.slot, g.pos, g.status = slot, n, "running"
 
     def _admit_group(self, clen: int, n: int, items) -> None:
@@ -481,9 +497,7 @@ class Engine:
             slot = self._free.pop(0)
             slots.append(slot)
             g.slot, g.pos, g.status = slot, n, "running"
-        if pool.dense_layers:
-            self._cache = self._dense_admit(
-                self._cache, rows, jnp.asarray(slots, jnp.int32))
+        self._cache = pool.dense_admit(self._cache, rows, slots)
         self.tokens_prefilled += (n - clen) * G
         if self.store_prefixes:
             for i, (g, _, _) in enumerate(items):
@@ -521,11 +535,11 @@ class Engine:
         call would recompile every admission."""
         fn = self._prefills.get(start_pos)
         if fn is None:
-            cfg, rt = self.cfg, self.runtime
+            cfg, rt, shard = self.cfg, self._prefill_rt, self.shard
             fn = self._prefills[start_pos] = jax.jit(
                 lambda p, t, c, sp=start_pos: T.prefill(
                     cfg, p, t, cache=c, start_pos=sp, runtime=rt,
-                    shard=NO_SHARD))
+                    shard=shard))
         return fn
 
     @property
@@ -592,7 +606,7 @@ class Engine:
             seeds[g.slot] = np.uint32(g.rng_seed & 0xFFFFFFFF)
             bt[g.slot, : len(g.pages)] = g.pages
         nxt, self._cache = self._decode(
-            self.params, jnp.asarray(tok), self._cache, jnp.asarray(bt),
+            self._dparams, jnp.asarray(tok), self._cache, jnp.asarray(bt),
             jnp.asarray(pos), jnp.asarray(act), jnp.asarray(temp),
             jnp.asarray(seeds))
         nxt = np.asarray(nxt)
@@ -824,6 +838,5 @@ class Engine:
         usage, exactly like an allocator's arena."""
         if self._cache is None:
             return 0
-        dense = sum(tree_bytes(self._cache[i])
-                    for i in self.pool.dense_layers)
-        return self.pool.bytes_in_use + dense
+        return self.pool.bytes_in_use + \
+            self.pool.dense_bytes(self._cache)

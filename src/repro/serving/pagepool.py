@@ -65,8 +65,10 @@ class PagePool:
 
     def __init__(self, cfg: ModelConfig, *, max_batch: int, max_len: int,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 cache_dtype: str = ""):
+                 cache_dtype: str = "", layout: str = "layers"):
         assert page_size > 0
+        assert layout in ("layers", "fused")
+        self.layout = layout
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
@@ -88,6 +90,23 @@ class PagePool:
                           if k in ("attn", "moe")}
         self.dense_layers = [i for i in range(len(kinds))
                              if i not in self._attn_set]
+        # fused layout (DESIGN.md §Sharded-scan-decode): the cache is the
+        # scan-decode state dict — ONE arena whose page axis concatenates
+        # the per-layer arenas (rank r's slab is [r*num_pages,
+        # (r+1)*num_pages)), dense state stacked per pattern position.
+        # Host accounting stays in LOGICAL pages; ops translate.
+        self._A = len(self._attn_set)
+        self._ranks = sorted(self._attn_set)
+        self._dense_loc: Dict[int, tuple] = {}
+        if layout == "fused":
+            _, pat = T._pattern(cfg)
+            n_units = len(kinds) // len(pat)
+            for li in self.dense_layers:
+                if li < n_units * len(pat):
+                    it, j = divmod(li, len(pat))
+                    self._dense_loc[li] = ("u", j, it)
+                else:
+                    self._dense_loc[li] = ("t", li - n_units * len(pat))
         kv_bytes = (page_size * cfg.num_kv_heads * cfg.head_dim
                     * self.dtype.itemsize)
         self.page_bytes = len(self._attn_set) * (2 * kv_bytes
@@ -101,18 +120,42 @@ class PagePool:
         self.page_copies = 0                    # CoW page copies (device)
         self.page_writes = 0                    # pages scattered into arenas
         self.reclaim = None                     # pressure hook: (need)->None
-        # ---- jitted arena ops (memoized executables live on the pool)
-        self._scrub_op = jax.jit(self._scrub_impl, donate_argnums=(0,))
-        self._copy_op = jax.jit(self._copy_impl, donate_argnums=(0,))
-        self._gather_op = jax.jit(self._gather_impl)
-        self._write_op = jax.jit(self._write_impl, static_argnums=(3,),
-                                 donate_argnums=(0,))
-        self._read_op = jax.jit(self._read_impl)
-        self._upload_op = jax.jit(self._upload_impl, donate_argnums=(0,))
+        # ---- jitted arena ops (memoized executables live on the pool);
+        # each op has a per-layer-list impl and a fused-state impl — the
+        # wrappers keep ONE host-facing contract (logical page ids, the
+        # per-attention-layer host payload / dense-row formats) so the
+        # engine, prefix store and transport never see the layout
+        fused = layout == "fused"
+        self._scrub_op = jax.jit(
+            self._scrub_fused_impl if fused else self._scrub_impl,
+            donate_argnums=(0,))
+        self._copy_op = jax.jit(
+            self._copy_fused_impl if fused else self._copy_impl,
+            donate_argnums=(0,))
+        self._gather_op = jax.jit(
+            self._gather_fused_impl if fused else self._gather_impl)
+        self._write_op = jax.jit(
+            self._write_fused_impl if fused else self._write_impl,
+            static_argnums=(3,), donate_argnums=(0,))
+        self._read_op = jax.jit(
+            self._read_fused_impl if fused else self._read_impl)
+        self._upload_op = jax.jit(
+            self._upload_fused_impl if fused else self._upload_impl,
+            donate_argnums=(0,))
+        self._dense_copy_op = jax.jit(
+            self._dense_copy_fused_impl if fused else self._dense_copy_impl,
+            donate_argnums=(0,))
+        self._dense_admit_op = jax.jit(
+            self._dense_admit_fused_impl if fused
+            else self._dense_admit_impl, donate_argnums=(0,))
 
     # ------------------------------------------------------------- layout
     def init_cache(self):
-        """Arenas for attention layers; dense per-slot rows otherwise."""
+        """Arenas for attention layers; dense per-slot rows otherwise.
+
+        ``layout="fused"`` returns the scan-decode state dict instead of
+        the per-layer list (``T.stack_decode_state`` of the same
+        arrays): one fused arena, pattern-stacked dense state."""
         cfg, P, ps = self.cfg, self.num_pages, self.page_size
         spec = T.cache_spec(cfg, self.max_batch, self.max_len,
                             self.cache_dtype_str)
@@ -129,7 +172,64 @@ class PagePool:
             else:
                 cache.append({k: T._init_leaf(k, shape, dt)
                               for k, (shape, dt) in s.items()})
+        if self.layout == "fused":
+            return T.stack_decode_state(cfg, cache, paged=True)
         return cache
+
+    def cache_logical_axes(self):
+        """Logical-axis tree congruent with ``init_cache()``'s pytree
+        (for Engine(mesh=...) placement under DECODE_RULES): arenas
+        shard their page axis over 'kv_pages', dense rows their slot
+        axis over 'act_batch'; everything else replicates."""
+        arena_ax = {"k": ("kv_pages", None, "act_kv", None),
+                    "v": ("kv_pages", None, "act_kv", None),
+                    "kv_pos": ("kv_pages", None)}
+        la = T.cache_logical_axes(self.cfg)
+        if self.layout != "fused":
+            return [arena_ax if i in self._attn_set else la[i]
+                    for i in range(len(la))]
+        kinds = self.cfg.layer_kinds()
+        _, pat = T._pattern(self.cfg)
+        n_units = len(kinds) // len(pat)
+
+        def stacked(ax):        # leading pattern-unit axis: replicated
+            return {k: (None,) + tuple(v) for k, v in ax.items()}
+
+        units = tuple(
+            None if T._paged_kind(pat[j]) else stacked(la[j])
+            for j in range(len(pat))) if n_units else ()
+        tail = tuple(
+            None if T._paged_kind(kinds[n_units * len(pat) + t])
+            else la[n_units * len(pat) + t]
+            for t in range(len(kinds) - n_units * len(pat)))
+        arena = arena_ax if self._A else None
+        return {"units": units, "tail": tail, "arena": arena}
+
+    def cache_shardings(self, ctx, cache):
+        """NamedSharding tree congruent with ``cache`` under ``ctx``
+        (explicit walk: the fused state's None/empty containers would
+        fool generic axes-leaf detection)."""
+        def walk(c, a):
+            if c is None:
+                return None
+            if isinstance(c, dict):
+                return {k: walk(c[k], a[k]) for k in c}
+            if isinstance(c, (list, tuple)):
+                return type(c)(walk(x, y) for x, y in zip(c, a))
+            return ctx.named(a, c.shape)
+        return walk(cache, self.cache_logical_axes())
+
+    def _fused_ids(self, pages) -> np.ndarray:
+        """Logical page ids -> physical fused-arena ids, one row per
+        attention-layer rank (slab r owns [r*P, (r+1)*P)).  The logical
+        drop pad ``num_pages`` must NOT be offset per rank — r*P +
+        num_pages lands inside slab r+1 — so it maps straight to the
+        fused drop index A*P."""
+        pg = np.asarray(pages, np.int64)
+        offs = (np.arange(self._A, dtype=np.int64)
+                * self.num_pages).reshape((self._A,) + (1,) * pg.ndim)
+        return np.where(pg < self.num_pages, pg + offs,
+                        self._A * self.num_pages)
 
     # -------------------------------------------------------- accounting
     @property
@@ -205,6 +305,8 @@ class PagePool:
         width = _pow2_pad(len(pages))
         arr = np.full((width,), self.num_pages, np.int64)   # pad -> drop
         arr[: len(pages)] = pages
+        if self.layout == "fused":
+            arr = self._fused_ids(arr).ravel()
         return self._scrub_op(cache, jnp.asarray(arr))
 
     def _scrub_impl(self, cache, pages):
@@ -216,6 +318,13 @@ class PagePool:
                     EMPTY_SLOT, mode="drop")
             out.append(c)
         return out
+
+    def _scrub_fused_impl(self, cache, pages):
+        if cache["arena"] is None:     # dense-only stack: pages are
+            return cache               # block-table bookkeeping only
+        ar = dict(cache["arena"])
+        ar["kv_pos"] = ar["kv_pos"].at[pages].set(EMPTY_SLOT, mode="drop")
+        return dict(cache, arena=ar)
 
     def copy_pages(self, cache, srcs: Sequence[int], dsts: Sequence[int]):
         """Batched CoW page copies (one scatter per arena leaf)."""
@@ -229,6 +338,10 @@ class PagePool:
         d[: len(dsts)] = dsts
         self._unschedule_scrub(dsts)
         self.page_copies += len(srcs)
+        if self.layout == "fused":
+            # rank-major rows of both arrays pair up elementwise, so the
+            # one fused scatter copies every layer's slab page at once
+            s, d = self._fused_ids(s).ravel(), self._fused_ids(d).ravel()
         return self._copy_op(cache, jnp.asarray(s), jnp.asarray(d))
 
     def _copy_impl(self, cache, srcs, dsts):
@@ -239,6 +352,13 @@ class PagePool:
                      for k, a in c.items()}
             out.append(c)
         return out
+
+    def _copy_fused_impl(self, cache, srcs, dsts):
+        if cache["arena"] is None:
+            return cache
+        ar = {k: a.at[dsts].set(a[srcs], mode="drop")
+              for k, a in cache["arena"].items()}
+        return dict(cache, arena=ar)
 
     def gather_rows(self, cache, page_mat: np.ndarray,
                     lengths: np.ndarray):
@@ -267,6 +387,31 @@ class PagePool:
                     "kv_pos": c["kv_pos"][page_mat].reshape(G, -1),
                     "pos": lengths,
                 })
+            else:
+                rows.append({k: T._init_leaf(k, shape, dt)
+                             for k, (shape, dt) in spec[i].items()})
+        return rows
+
+    def _gather_fused_impl(self, cache, page_mat, lengths):
+        # page_mat holds only real pages + the null pad 0, all < P, so a
+        # plain slab offset is safe (rank r's null page r*P is EMPTY)
+        cfg = self.cfg
+        G = page_mat.shape[0]
+        ar = cache["arena"]
+        spec = T.cache_spec(cfg, G, self.max_len, self.cache_dtype_str)
+        rows, r = [], 0
+        for i in range(len(cfg.layer_kinds())):
+            if i in self._attn_set:
+                mat = page_mat + r * self.num_pages
+                rows.append({
+                    "k": ar["k"][mat].reshape(
+                        G, -1, cfg.num_kv_heads, cfg.head_dim),
+                    "v": ar["v"][mat].reshape(
+                        G, -1, cfg.num_kv_heads, cfg.head_dim),
+                    "kv_pos": ar["kv_pos"][mat].reshape(G, -1),
+                    "pos": lengths,
+                })
+                r += 1
             else:
                 rows.append({k: T._init_leaf(k, shape, dt)
                              for k, (shape, dt) in spec[i].items()})
@@ -314,6 +459,29 @@ class PagePool:
             out.append(c)
         return out
 
+    def _write_fused_impl(self, cache, rows, page_mat, first_page):
+        # stack the per-layer prefilled rows along a leading rank axis
+        # and land them in ONE scatter per leaf, whatever the depth
+        if cache["arena"] is None:
+            return cache
+        cfg, ps = self.cfg, self.page_size
+        G, n_new = page_mat.shape
+        lo, hi = first_page * ps, (first_page + n_new) * ps
+        offs = (jnp.arange(self._A, dtype=page_mat.dtype)
+                * self.num_pages)[:, None, None]
+        mats = jnp.where(page_mat[None] < self.num_pages,
+                         page_mat[None] + offs,
+                         self._A * self.num_pages)
+        ar = dict(cache["arena"])
+        for name in ("k", "v", "kv_pos"):
+            tail_shape = ((ps, cfg.num_kv_heads, cfg.head_dim)
+                          if name != "kv_pos" else (ps,))
+            stacked = jnp.stack([
+                rows[i][name][:, lo:hi].reshape((G, n_new) + tail_shape)
+                for i in self._ranks])
+            ar[name] = ar[name].at[mats].set(stacked, mode="drop")
+        return dict(cache, arena=ar)
+
     # ------------------------------------------------- migration support
     def _read_impl(self, cache, pages):
         out = []
@@ -321,6 +489,11 @@ class PagePool:
             if i in self._attn_set:
                 out.append({k: a[pages] for k, a in c.items()})
         return out
+
+    def _read_fused_impl(self, cache, pages):
+        ar = cache["arena"]
+        return [{k: a[pages + r * self.num_pages] for k, a in ar.items()}
+                for r in range(self._A)]
 
     def read_pages(self, cache, pages: Sequence[int]):
         """Page contents -> host numpy (one dict per attention layer),
@@ -340,6 +513,17 @@ class PagePool:
             out.append(c)
         return out
 
+    def _upload_fused_impl(self, cache, host, pages):
+        # host payload keeps the per-attention-layer dict-list format
+        # (migration/transport compatibility); stack along rank to land
+        # every layer's pages in one scatter per leaf
+        idx = jnp.concatenate([pages + r * self.num_pages
+                               for r in range(self._A)])
+        ar = {k: a.at[idx].set(jnp.concatenate(
+                  [jnp.asarray(h[k]) for h in host]))
+              for k, a in cache["arena"].items()}
+        return dict(cache, arena=ar)
+
     def upload_pages(self, cache, host, pages: Sequence[int]):
         """Host page payloads -> freshly allocated arena pages (the
         restore half of remote migration).  Uploaded pages are written
@@ -348,6 +532,105 @@ class PagePool:
         self.page_writes += len(pages)
         return self._upload_op(cache, host,
                                jnp.asarray(list(pages), jnp.int32))
+
+    # ------------------------------------------------- dense-state ops
+    # Recurrent / ring-buffer layers keep per-slot dense rows; these ops
+    # are layout-aware so the engine never branches on where that state
+    # lives (per-layer list vs pattern-stacked scan-decode state).
+
+    def dense_copy(self, cache, src_slot: int, dst_slot: int):
+        """Copy one slot's dense rows to another (fork of recurrent
+        state; attention K/V forks via the block table instead)."""
+        if not self.dense_layers:
+            return cache
+        return self._dense_copy_op(cache, jnp.int32(src_slot),
+                                   jnp.int32(dst_slot))
+
+    def _dense_copy_impl(self, cache, s, d):
+        dense = set(self.dense_layers)
+        return [jax.tree.map(lambda a: a.at[d].set(a[s]), c)
+                if i in dense else c for i, c in enumerate(cache)]
+
+    def _dense_copy_fused_impl(self, cache, s, d):
+        # stacked units carry (n_units, batch, ...): slot axis is 1
+        units = tuple(
+            c if c is None else
+            jax.tree.map(lambda a: a.at[:, d].set(a[:, s]), c)
+            for c in cache["units"])
+        tail = tuple(
+            c if c is None else
+            jax.tree.map(lambda a: a.at[d].set(a[s]), c)
+            for c in cache["tail"])
+        return dict(cache, units=units, tail=tail)
+
+    def dense_admit(self, cache, rows, slots: Sequence[int]):
+        """Write admitted generations' dense rows (gather_rows/prefill
+        format: per-layer list of G-row batches) into their slots."""
+        if not self.dense_layers:
+            return cache
+        return self._dense_admit_op(cache, rows,
+                                    jnp.asarray(slots, jnp.int32))
+
+    def _dense_admit_impl(self, cache, rows, slots):
+        dense = set(self.dense_layers)
+        return [jax.tree.map(
+                    lambda full, r: full.at[slots].set(
+                        r[: slots.shape[0]]), c, rows[i])
+                if i in dense else c for i, c in enumerate(cache)]
+
+    def _dense_admit_fused_impl(self, cache, rows, slots):
+        ns = slots.shape[0]
+        units = list(cache["units"])
+        tail = list(cache["tail"])
+        for li in self.dense_layers:
+            loc = self._dense_loc[li]
+            if loc[0] == "u":
+                _, j, it = loc
+                units[j] = jax.tree.map(
+                    lambda full, r: full.at[it, slots].set(r[:ns]),
+                    units[j], rows[li])
+            else:
+                t = loc[1]
+                tail[t] = jax.tree.map(
+                    lambda full, r: full.at[slots].set(r[:ns]),
+                    tail[t], rows[li])
+        return dict(cache, units=tuple(units), tail=tuple(tail))
+
+    def read_dense_row(self, cache, slot: int):
+        """One slot's dense rows as a per-layer list of (1, ...) trees
+        (None at attention layers) — the PagedPrefix ``extra`` payload,
+        format-identical across layouts."""
+        if not self.dense_layers:
+            return None
+        if self.layout != "fused":
+            dense = set(self.dense_layers)
+            return [jax.tree.map(lambda a: a[slot: slot + 1], c)
+                    if i in dense else None
+                    for i, c in enumerate(cache)]
+        out = []
+        for li in range(len(self.cfg.layer_kinds())):
+            loc = self._dense_loc.get(li)
+            if loc is None:
+                out.append(None)
+            elif loc[0] == "u":
+                _, j, it = loc
+                out.append(jax.tree.map(lambda a: a[it, slot: slot + 1],
+                                        cache["units"][j]))
+            else:
+                out.append(jax.tree.map(lambda a: a[slot: slot + 1],
+                                        cache["tail"][loc[1]]))
+        return out
+
+    def dense_bytes(self, cache) -> int:
+        """Bytes of the fixed-size dense (recurrent/ring) state."""
+        from repro.serving.kvcache import tree_bytes     # cycle-free
+        if not self.dense_layers:
+            return 0
+        if self.layout != "fused":
+            return sum(tree_bytes(cache[i]) for i in self.dense_layers)
+        return sum(tree_bytes(c)
+                   for c in (*cache["units"], *cache["tail"])
+                   if c is not None)
 
 
 # --------------------------------------------------------------- prefixes

@@ -1,0 +1,153 @@
+"""Sharded paged decode on a mesh (DESIGN.md §Sharded-scan-decode).
+
+``Engine(mesh=...)`` shards batch rows over 'data' and arena pages over
+'model' under DECODE_RULES — data movement only, so tokens must be
+IDENTICAL to the single-device engine.  mesh=None is THE golden path:
+it must not even construct sharding machinery.  Multi-device cases run
+on the CI leg that forces 8 host devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (they skip on a
+plain single-device backend); one subprocess test forces the flag
+itself so the 8-way parity is exercised from any checkout.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding
+
+from repro.distributed.sharding import (DECODE_RULES, TRAIN_RULES,
+                                        NO_SHARD, ShardCtx)
+from repro.launch.mesh import make_decode_mesh
+from repro.models import schema
+from repro.models.layers import Runtime
+from repro.models.registry import get_smoke
+from repro.serving.engine import Engine
+from repro.serving.pagepool import PagePool
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _prompt(cfg, seed, n=10):
+    return list(np.random.RandomState(seed).randint(0, cfg.vocab_size, n))
+
+
+def _run_engine(cfg, params, rt, mesh):
+    eng = Engine(cfg, params, rt, max_len=64, max_batch=4, mesh=mesh)
+    gids = [eng.submit(_prompt(cfg, i), max_new_tokens=6, temperature=0.0)
+            for i in range(3)]
+    eng.step_all()
+    f = eng.fork(gids[0], max_new_tokens=4, temperature=0.0)
+    out = eng.run_all()
+    return [out[g] for g in gids] + [out[f]]
+
+
+# ------------------------------------------------------------- the rules
+def test_decode_rules_are_bitwise_safe():
+    """Only data-movement axes shard: batch rows and arena pages.  Every
+    contraction axis replicates (a TP partial-sum all-reduce would
+    reassociate and break the byte-identical-trace contract) and
+    weights stay put."""
+    assert DECODE_RULES["act_batch"] == "data"
+    assert DECODE_RULES["kv_pages"] == "model"
+    assert DECODE_RULES["param_use"] == "keep"
+    for k in TRAIN_RULES:
+        if k not in ("act_batch", "param_use"):
+            assert DECODE_RULES[k] is None, k
+
+
+def test_cache_shardings_structure():
+    """pool.cache_shardings mirrors the cache structure exactly (its
+    walk must not confuse container tuples with axes-leaves) and puts
+    the fused arena's page axis on 'model'."""
+    cfg = get_smoke("qwen2-1.5b")
+    mesh = make_decode_mesh(1, 1)
+    ctx = ShardCtx(mesh=mesh, rules=DECODE_RULES)
+    for layout in ("layers", "fused"):
+        pool = PagePool(cfg, max_batch=4, max_len=64, page_size=16,
+                        layout=layout)
+        cache = pool.init_cache()
+        sh = pool.cache_shardings(ctx, cache)
+        flat_c = jax.tree.leaves(cache)
+        flat_s = [s for s in jax.tree.leaves(
+            sh, is_leaf=lambda x: isinstance(x, NamedSharding))
+            if isinstance(s, NamedSharding)]
+        assert len(flat_s) == len(flat_c), layout
+        if layout == "fused":
+            spec = sh["arena"]["k"].spec
+            # 1x1 mesh: 'model' has size 1 and still divides -> present
+            assert spec and spec[0] == "model"
+
+
+# -------------------------------------------------- 1x1 mesh, any backend
+@pytest.mark.parametrize("rt", [Runtime(), Runtime(scan_layers=True)],
+                         ids=["loop", "scan"])
+def test_mesh_engine_matches_plain_engine_1x1(rt):
+    """The degenerate 1x1 mesh exercises the full sharded plumbing
+    (replicated params, device_put cache shardings, constrained
+    dispatch) and must emit exactly the mesh=None tokens."""
+    cfg = get_smoke("qwen2-1.5b")
+    params = schema.init_params(cfg, RNG)
+    base = _run_engine(cfg, params, rt, mesh=None)
+    meshed = _run_engine(cfg, params, rt, mesh=make_decode_mesh(1, 1))
+    assert meshed == base
+
+
+# ----------------------------------------------- multi-device (CI 8-dev leg)
+@pytest.mark.parametrize("shape", [(2, 1), (8, 1), (4, 2)])
+@pytest.mark.parametrize("rt", [Runtime(), Runtime(scan_layers=True)],
+                         ids=["loop", "scan"])
+def test_mesh_engine_matches_single_device(shape, rt):
+    need = shape[0] * shape[1]
+    if jax.device_count() < need:
+        pytest.skip(f"needs {need} devices (forced-host CI leg)")
+    cfg = get_smoke("qwen2-1.5b")
+    params = schema.init_params(cfg, RNG)
+    base = _run_engine(cfg, params, rt, mesh=None)
+    meshed = _run_engine(cfg, params, rt, mesh=make_decode_mesh(*shape))
+    assert meshed == base, shape
+
+
+_SUBPROC = r"""
+import jax, numpy as np
+assert jax.device_count() == 8, jax.device_count()
+from repro.models import schema
+from repro.models.layers import Runtime
+from repro.models.registry import get_smoke
+from repro.launch.mesh import make_decode_mesh
+from repro.serving.engine import Engine
+
+cfg = get_smoke("qwen2-1.5b")
+params = schema.init_params(cfg, jax.random.PRNGKey(0))
+
+def run(mesh, rt):
+    eng = Engine(cfg, params, rt, max_len=64, max_batch=4, mesh=mesh)
+    gids = [eng.submit(list(np.random.RandomState(i).randint(
+        0, cfg.vocab_size, 10)), max_new_tokens=5, temperature=0.0)
+        for i in range(2)]
+    out = eng.run_all()
+    return [out[g] for g in gids]
+
+scan = Runtime(scan_layers=True)
+assert run(make_decode_mesh(8, 1), scan) == run(None, scan)
+assert run(make_decode_mesh(4, 2), Runtime()) == run(None, Runtime())
+print("OK")
+"""
+
+
+def test_8way_parity_in_forced_subprocess():
+    """Force 8 host devices in a fresh process: 8x1 scan decode and 4x2
+    loop decode must match their single-mesh=None runs token for
+    token."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                       capture_output=True, text=True, timeout=540,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

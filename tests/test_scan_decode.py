@@ -1,0 +1,195 @@
+"""Scan-over-layers decode (DESIGN.md §Sharded-scan-decode).
+
+The contract the tentpole rests on: running the layer stack as ONE
+``lax.scan`` over pattern units changes dispatch structure, never
+numbers.  Under jit, scan decode must equal the unit-barrier loop
+BITWISE — dense, paged (fused arena) and active-masked alike — and
+scan prefill + scan decode must reproduce the scan forward exactly.
+At the engine level the scan engine's tokens (forks included) must
+match the barrier-loop engine's, through ONE compiled decode
+executable (the retrace guard).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import schema, transformer as T
+from repro.models.layers import Runtime
+from repro.models.registry import ARCH_IDS, get_smoke
+from repro.serving.engine import Engine
+from repro.serving.pagepool import PagePool
+
+RNG = jax.random.PRNGKey(0)
+RT_BAR = Runtime(layer_barrier=True)    # loop with scan's fusion boundaries
+RT_SCAN = Runtime(scan_layers=True)
+
+
+def _tree_equal(a, b, msg=""):
+    def leaf(x, y):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+    jax.tree.map(leaf, a, b)
+
+
+def _decode_fns(cfg):
+    loop_fn = jax.jit(lambda p, t, c, q, a: T.decode_step(
+        cfg, p, t, c, q, RT_BAR, active=a))
+    scan_fn = jax.jit(lambda p, t, c, q, a: T.decode_step(
+        cfg, p, t, c, q, RT_SCAN, active=a))
+    return loop_fn, scan_fn
+
+
+# ------------------------------------------------------- dense, every arch
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_scan_decode_matches_loop_dense(arch):
+    """Scanned dense decode == unit-barrier loop decode, bitwise (bf16),
+    from a prefilled cache, including an active-masked step; final
+    caches agree leaf-for-leaf."""
+    cfg = dataclasses.replace(get_smoke(arch), dtype="bfloat16")
+    params = schema.init_params(cfg, RNG)
+    B, S, P = 2, 16, 8
+    toks = jnp.asarray(np.random.RandomState(1).randint(
+        0, cfg.vocab_size, (B, S)), jnp.int32)
+    cache = T.init_cache(cfg, B, S)
+    _, cache = T.prefill(cfg, params, toks[:, :P], cache=cache,
+                         runtime=Runtime())
+    loop_fn, scan_fn = _decode_fns(cfg)
+    sparams = T.stack_params(cfg, params)
+    sstate = T.stack_decode_state(cfg, cache)
+    for i, pos in enumerate(range(P, P + 3)):
+        act = jnp.asarray([True, i != 1])       # step 1 masks row 1
+        gl, cache = loop_fn(params, toks[:, pos:pos + 1], cache,
+                            jnp.int32(pos), act)
+        gs, sstate = scan_fn(sparams, toks[:, pos:pos + 1], sstate,
+                             jnp.int32(pos), act)
+        np.testing.assert_array_equal(np.asarray(gl), np.asarray(gs),
+                                      err_msg=f"{arch} step {i}")
+    _tree_equal(list(cache), T.unstack_decode_state(cfg, sstate),
+                msg=f"{arch} final cache")
+
+
+# ------------------------------------------------- paged (fused arena)
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "llama4-scout-17b-a16e",
+                                  "phi3.5-moe-42b-a6.6b",
+                                  "recurrentgemma-2b", "mamba2-2.7b"])
+def test_scan_decode_matches_loop_paged(arch):
+    """Scanned paged decode over the FUSED arena == per-layer-arena loop
+    decode, bitwise, with identical LOGICAL block tables — including an
+    active-masked (write-dropping) step.  Covers attention, MoE, hybrid
+    (arena exists but some layers dense) and pure-SSM (arena is None
+    while block tables are still passed)."""
+    cfg = dataclasses.replace(get_smoke(arch), dtype="bfloat16")
+    params = schema.init_params(cfg, RNG)
+    B, S, ps = 2, 16, 4
+    pool_l = PagePool(cfg, max_batch=B, max_len=S, page_size=ps)
+    pool_f = PagePool(cfg, max_batch=B, max_len=S, page_size=ps,
+                      layout="fused")
+    assert pool_l.num_pages == pool_f.num_pages
+    cache_l, cache_f = pool_l.init_cache(), pool_f.init_cache()
+    nb = S // ps
+    assert pool_l.num_pages > B * nb            # distinct pages + null 0
+    tbl = jnp.asarray(1 + np.arange(B * nb).reshape(B, nb), jnp.int32)
+    toks = jnp.asarray(np.random.RandomState(2).randint(
+        0, cfg.vocab_size, (B, 6)), jnp.int32)
+    loop_fn = jax.jit(lambda p, t, c, q, a: T.decode_step(
+        cfg, p, t, c, q, RT_BAR, active=a, block_tables=tbl))
+    scan_fn = jax.jit(lambda p, t, c, q, a: T.decode_step(
+        cfg, p, t, c, q, RT_SCAN, active=a, block_tables=tbl))
+    sparams = T.stack_params(cfg, params)
+    for i in range(6):
+        act = jnp.asarray([True, i != 2])       # step 2 drops row 1 write
+        gl, cache_l = loop_fn(params, toks[:, i:i + 1], cache_l,
+                              jnp.int32(i), act)
+        gs, cache_f = scan_fn(sparams, toks[:, i:i + 1], cache_f,
+                              jnp.int32(i), act)
+        np.testing.assert_array_equal(np.asarray(gl), np.asarray(gs),
+                                      err_msg=f"{arch} step {i}")
+    # fused slabs unstack to exactly the per-layer arenas / dense rows
+    _tree_equal(list(cache_l),
+                T.unstack_decode_state(cfg, cache_f, paged=True),
+                msg=f"{arch} arenas")
+
+
+# ------------------------------------- strict: scan prefill+decode==forward
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "recurrentgemma-2b",
+                                  "llama4-scout-17b-a16e", "mamba2-2.7b",
+                                  "phi3.5-moe-42b-a6.6b"])
+def test_scan_prefill_decode_matches_forward(arch):
+    """Scan prefill of S-1 tokens + ONE scan decode step reproduces the
+    scan forward's last-token logits exactly (the decode==forward
+    invariant carried onto the scan path).  MoE capacity drops are
+    sequence-composition-dependent, so they are disabled exactly as the
+    seed invariant test does; S exceeds recurrentgemma's local window
+    so ring caches fully wrap."""
+    cfg = dataclasses.replace(get_smoke(arch), dtype="bfloat16")
+    pat_len = len(cfg.block_pattern) if cfg.block_pattern else 1
+    if cfg.num_layers <= pat_len:               # scan needs >1 unit
+        cfg = dataclasses.replace(cfg, num_layers=2 * pat_len)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.num_experts))
+    params = schema.init_params(cfg, RNG)
+    B, S = 2, 40                                # > local_window(32) + 1
+    toks = jnp.asarray(np.random.RandomState(1).randint(
+        0, cfg.vocab_size, (B, S)), jnp.int32)
+    full, _ = jax.jit(lambda p, t: T.forward(
+        cfg, p, t, runtime=RT_SCAN))(params, toks)
+    _, pc = jax.jit(lambda p, t: T.prefill(
+        cfg, p, t, runtime=RT_SCAN))(params, toks[:, :S - 1])
+    state = T.state_from_scan_prefill(cfg, pc, max_len=S)
+    sparams = T.stack_params(cfg, params)
+    lg, _ = jax.jit(lambda p, t, c: T.decode_step(
+        cfg, p, t, c, jnp.int32(S - 1), RT_SCAN))(
+            sparams, toks[:, S - 1:S], state)
+    np.testing.assert_array_equal(np.asarray(lg),
+                                  np.asarray(full[:, -1]), err_msg=arch)
+
+
+# -------------------------------------------------------- engine level
+def _prompt(cfg, seed, n=10):
+    return list(np.random.RandomState(seed).randint(0, cfg.vocab_size, n))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "recurrentgemma-2b",
+                                  "llama4-scout-17b-a16e"])
+def test_engine_scan_matches_loop(arch):
+    """The scan engine (fused pool layout, stacked params, scan
+    dispatch) emits token-for-token what the barrier-loop engine does —
+    through mid-flight forks and suffix-prefill admissions."""
+    cfg = get_smoke(arch)
+    params = schema.init_params(cfg, RNG)
+    outs = {}
+    for name, rt in (("loop", RT_BAR), ("scan", RT_SCAN)):
+        eng = Engine(cfg, params, rt, max_len=64, max_batch=4)
+        roots = [eng.submit(_prompt(cfg, i), max_new_tokens=8,
+                            temperature=0.0) for i in range(2)]
+        for _ in range(2):
+            eng.step_all()
+        forks = [eng.fork(r, max_new_tokens=4, temperature=0.0)
+                 for r in roots]
+        out = eng.run_all()
+        # re-submit root 0's prompt: prefix-store hit -> suffix prefill
+        g = eng.submit(_prompt(cfg, 0), max_new_tokens=4, temperature=0.0)
+        out["rehit"] = eng.run(g)
+        outs[name] = ([out[r] for r in roots], [out[f] for f in forks],
+                      out["rehit"])
+    assert outs["loop"] == outs["scan"], arch
+
+
+def test_engine_decode_retrace_guard():
+    """ONE compiled decode executable serves an engine's whole life —
+    admissions, retires, forks, both loop and scan modes.  A second
+    trace would mean the fixed-shape dispatch contract regressed."""
+    cfg = get_smoke("qwen2-1.5b")
+    params = schema.init_params(cfg, RNG)
+    for rt in (Runtime(), RT_SCAN):
+        eng = Engine(cfg, params, rt, max_len=64, max_batch=4)
+        gids = [eng.submit(_prompt(cfg, i), max_new_tokens=3 + 2 * i,
+                           temperature=0.0) for i in range(3)]
+        eng.step_all()
+        eng.fork(gids[0], max_new_tokens=3, temperature=0.0)
+        eng.run_all()
+        assert eng._decode._cache_size() == 1, rt
