@@ -8,7 +8,8 @@
 #   make serve   - continuous-batched real-model serving demo with
 #                  speculative forks + two-tier prefix cache
 #   make bench-smoke - work-stealing + async-eval-plane + remote-KV
-#                  transport + paged-kernel + decode-dispatch tables
+#                  transport + paged-kernel + decode-dispatch +
+#                  prefill-dispatch (bucketed admission) tables
 #                  on reduced grids,
 #                  then writes the machine-readable BENCH_e2e.json
 #                  (composed-trace makespan, per-plane breakdown,
@@ -38,6 +39,7 @@ bench-smoke:
 	$(PY) -m benchmarks.table_remote_kv --smoke
 	$(PY) -m benchmarks.table_paged_kernel --smoke
 	$(PY) -m benchmarks.table_decode_dispatch --smoke
+	$(PY) -m benchmarks.table_prefill_dispatch --smoke
 	$(PY) -m benchmarks.e2e_json --smoke
 
 smoke-real:

@@ -23,15 +23,24 @@ a trajectory consumer needs without parsing CSV tables:
 
   * ``decode_dispatch`` — the scan-over-layers dispatch table
     (benchmarks/table_decode_dispatch): per-step host dispatch and
-    lowering cost, Python-loop vs scanned vs sharded decode.  This is
-    the ONE wall-clock-measured section; it runs LAST so its jax config
-    toggling can't perturb the simulated sections.
+    lowering cost, Python-loop vs scanned vs sharded decode.
+
+  * ``admission_dispatch`` — the suffix-prefill analogue
+    (benchmarks/table_prefill_dispatch): bucketed-admission host
+    dispatch + per-bucket lowering, loop vs ONE scanned executable,
+    plus the DETERMINISTIC engine bucket/retrace counters (those are
+    byte-stable; the determinism job also pins them via
+    ``--counters-out``).
+
+The two dispatch tables are the wall-clock-measured sections; they run
+LAST so their jax config toggling can't perturb the simulated sections.
 
 ``--trace-out PATH`` additionally serializes the engine-backed pool's
 composed trace (the CI determinism job byte-diffs two runs).
 Byte-stable output (sorted keys, fixed float rounding) so two runs of
-the same commit produce identical files — except ``decode_dispatch``,
-which is real timing (the determinism job diffs the trace, not this
+the same commit produce identical files — except ``decode_dispatch``
+and ``admission_dispatch``'s timing rows, which are real timing (the
+determinism job diffs the trace and the admission counters, not this
 file).
 """
 from __future__ import annotations
@@ -110,9 +119,20 @@ def build(smoke: bool = False) -> dict:
     drows = rows(configs=CONFIGS[:1] if smoke else CONFIGS,
                  iters=10 if smoke else 20)
     decode_dispatch = {name: derived for name, _, derived in drows}
+    # admission analogue: bucketed suffix-prefill dispatch (timing) +
+    # the deterministic engine bucket/retrace counters
+    from benchmarks.table_prefill_dispatch import (CONFIGS as PCONFIGS,
+                                                   admission_counters,
+                                                   rows as prows)
+    admission_dispatch = dict(admission_counters())
+    admission_dispatch.update(
+        {name: derived for name, _, derived in prows(
+            configs=PCONFIGS[:1] if smoke else PCONFIGS,
+            iters=10 if smoke else 20)})
     return {"engine_pool": engine_pool, "shared_pool": shared_pool,
             "engine_shared_pool": engine_shared_pool,
-            "decode_dispatch": decode_dispatch, "smoke": smoke,
+            "decode_dispatch": decode_dispatch,
+            "admission_dispatch": admission_dispatch, "smoke": smoke,
             "_engine_shared_trace": esched.loop.trace}
 
 

@@ -28,6 +28,26 @@ plain CPU backend, an 8-way mesh under the CI leg's
 partitioned dispatch path.  Each config also pins the bitwise contract
 while we're here: scan logits == unit-barrier-loop logits, exactly.
 
+**Scan-carry donation (measured, honest mixed result):** the
+``*_scan_donate_*`` rows jit the scanned step with the stacked decode
+state donated (``donate_argnums`` → XLA ``input_output_aliases``, the
+same aliasing the serving engine requests on its decode dispatch), and
+thread the returned carry between timed calls like a real decode loop.
+This container's CPU backend DOES honor the donation (the input buffer
+is deleted, no fallback warning), and on the dense 16-layer config the
+synchronous step drops ~20% — consistent with the aliasing recovering
+part of the while-loop double-buffer copy noted above — but the hybrid
+and MoE configs land at or slightly below the plain scan column.  The
+cost is unambiguous: a donated call stops overlapping with async
+dispatch (its call-return time rises to the full step time, see the
+``dispatch_scan_donate`` rows vs ``dispatch_scan``), because the
+runtime cannot hand back control while the caller's donated buffer is
+being consumed.  Since per-step HOST dispatch is the overhead this
+table exists to shrink, we report donation as not-a-win for the
+standalone scan step on CPU; the serving engine still donates its
+cache argument, which it needs for in-place arena updates rather than
+for speed.
+
 Run standalone (``python -m benchmarks.table_decode_dispatch``), via
 ``make bench-smoke`` (reduced iters), or from benchmarks/run.py.
 """
@@ -36,6 +56,7 @@ from __future__ import annotations
 import dataclasses
 import sys
 import time
+import warnings
 
 import numpy as np
 import jax
@@ -92,6 +113,30 @@ def _step_us(fn, args, iters):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _carry_us(fn, p, tokens, state, pos, iters, *, dispatch):
+    """Timing for the DONATED scan variant: the state is a carry — each
+    call consumes the previous call's output (backends that honor the
+    donation invalidate the input buffer), so args cannot be reused.
+    ``dispatch=True`` mirrors ``_dispatch_us`` (min call-return us,
+    async queue drained outside the timed region); otherwise the
+    ``_step_us`` mean-synchronous protocol."""
+    _, state = fn(p, tokens, state, pos)         # compile/warm
+    jax.block_until_ready(state)
+    if dispatch:
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out, state = fn(p, tokens, state, pos)
+            best = min(best, time.perf_counter() - t0)
+            jax.block_until_ready((out, state))
+        return best * 1e6
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out, state = fn(p, tokens, state, pos)
+    jax.block_until_ready((out, state))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
 def _lower_s(fn, args):
     t0 = time.perf_counter()
     fn.lower(*args)
@@ -145,6 +190,21 @@ def rows(configs=CONFIGS, iters=20):
             stp_mesh = _step_us(mesh_fn, (sparams, tokens, sstate, pos),
                                 iters)
 
+            # scan-carry donation experiment (see module docstring for
+            # the honest CPU result): donated state threads call-to-call
+            # — fresh copy so earlier columns' buffers stay valid on
+            # backends that honor the donation
+            don_fn = jax.jit(lambda p, t, c, q: T.decode_step(
+                cfg, p, t, c, q, rt_scan), donate_argnums=(2,))
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")   # CPU: donation no-op
+                sdon = jax.tree.map(jnp.copy, sstate)
+                dis_don = _carry_us(don_fn, sparams, tokens, sdon, pos,
+                                    iters, dispatch=True)
+                sdon = jax.tree.map(jnp.copy, sstate)
+                stp_don = _carry_us(don_fn, sparams, tokens, sdon, pos,
+                                    iters, dispatch=False)
+
             tag = f"{arch.split('-')[0]}_{nl}L"
             out.append((f"decode_dispatch_loop_us_{tag}", dis_loop,
                         round(dis_loop, 1)))
@@ -162,6 +222,10 @@ def rows(configs=CONFIGS, iters=20):
                         round(stp_scan, 1)))
             out.append((f"decode_step_sharded{ndev}_us_{tag}", stp_mesh,
                         round(stp_mesh, 1)))
+            out.append((f"decode_dispatch_scan_donate_us_{tag}", dis_don,
+                        round(dis_don, 1)))
+            out.append((f"decode_step_scan_donate_us_{tag}", stp_don,
+                        round(stp_don, 1)))
     finally:
         jax.config.update("jax_cpu_enable_async_dispatch", prev_async)
     return out

@@ -1,0 +1,211 @@
+"""Bucketed suffix-prefill (admission) dispatch: loop vs scan.
+
+The admission analogue of ``table_decode_dispatch``: PR 7 made the
+per-token decode step ONE scanned executable; the scan-suffix-prefill
+tentpole (DESIGN.md §Scan suffix prefill) does the same to ADMISSION —
+continuing a stored prefix cache at ``start_pos`` through the
+scan-over-pattern-units prefill instead of ~n_layers traced per-layer
+dispatches.  The two host-side costs it shrinks:
+
+  * **trace/lowering time** — paid on every NEW (rows, length) bucket:
+    the per-layer loop traces every layer of the suffix prefill into
+    the jaxpr, the scan traces one pattern-unit body, so the program a
+    bucket compile lowers shrinks ~n_layers/pattern-fold
+    (``prefill_lower_loop_over_scan`` rows);
+  * **per-admission dispatch** — min call-return time with
+    ``jax_cpu_enable_async_dispatch=True``, queue drained outside the
+    timed region, exactly the decode table's protocol
+    (``prefill_dispatch_*`` rows).
+
+Both variants run the SAME bucketed executable shape the engine uses:
+traced ``start_pos`` and ``valid_len`` scalars over a pow2-padded
+suffix, continuing a prefix cache — so each config also pins the
+bitwise admission contract in passing (scan continuation ==
+unit-barrier loop continuation, logits and cache, exactly).
+
+The ``admission_counters`` section is DETERMINISTIC (no wall clock): it
+drives the retrace-guard traffic pattern through a real fused scan
+engine and reports the executable/bucket bookkeeping —
+``suffix_prefill_dispatches`` vs rows admitted (the batching saving),
+``prefill_retraces`` (must stay 0: one executable per bucket), and the
+bucket keys themselves.  ``--counters-out PATH`` serializes exactly
+that section as sorted JSON; the CI determinism job runs it twice and
+byte-compares.  ``--counters-only`` skips the wall-clock rows (the
+determinism job's mode).
+
+Run standalone (``python -m benchmarks.table_prefill_dispatch``), via
+``make bench-smoke``, or from benchmarks/e2e_json (the
+``admission_dispatch`` section of BENCH_e2e.json).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.models import schema
+from repro.models import transformer as T
+from repro.models.layers import Runtime
+from repro.serving.engine import Engine
+
+# (arch, layers): ≥12 layers — lowering/trace cost is per-layer, so the
+# smoke configs' 2-3 layers would understate the fold the scan buys.
+CONFIGS = (
+    ("qwen2-1.5b", 16),             # dense GQA
+    ("recurrentgemma-2b", 12),      # hybrid rglru/rglru/local pattern
+)
+
+RT_BAR = Runtime(layer_barrier=True)
+RT_SCAN = Runtime(scan_layers=True)
+
+
+def _build(arch: str, num_layers: int, B=4, P=23, m=32, seed=0):
+    """A prefix cache at ``start_pos=P`` plus a pow2 ``m``-token suffix
+    — the engine's bucketed admission shape (gathered dense rows,
+    traced offset/length)."""
+    cfg = dataclasses.replace(get_smoke(arch), num_layers=num_layers)
+    params = schema.init_params(cfg, jax.random.PRNGKey(seed))
+    rs = np.random.RandomState(seed)
+    S = P + m
+    toks = jnp.asarray(rs.randint(0, cfg.vocab_size, (B, S)), jnp.int32)
+    cache = T.init_cache(cfg, B, S)
+    _, cache = jax.jit(lambda p, t, c: T.prefill(
+        cfg, p, t, cache=c, runtime=Runtime()))(params, toks[:, :P], cache)
+    jax.block_until_ready(cache)
+    return cfg, params, toks, cache
+
+
+def _dispatch_us(fn, args, iters):
+    """MIN call-return microseconds with async dispatch ON (= host
+    dispatch cost); the queue drains outside the timed region."""
+    jax.block_until_ready(fn(*args))             # compile/warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        best = min(best, time.perf_counter() - t0)
+        jax.block_until_ready(out)
+    return best * 1e6
+
+
+def _lower_s(fn, args):
+    t0 = time.perf_counter()
+    fn.lower(*args)
+    return time.perf_counter() - t0
+
+
+def rows(configs=CONFIGS, iters=20):
+    out = []
+    prev_async = jax.config.values.get("jax_cpu_enable_async_dispatch",
+                                       True)
+    jax.config.update("jax_cpu_enable_async_dispatch", True)
+    try:
+        for arch, nl in configs:
+            cfg, params, toks, cache = _build(arch, nl)
+            P = 23
+            suffix = toks[:, P:]
+            m = suffix.shape[1]
+            sp, vl = jnp.int32(P), jnp.int32(m)
+            sparams = T.stack_params(cfg, params)
+            state = T.stack_decode_state(cfg, cache)
+
+            loop_fn = jax.jit(lambda p, t, c, s, v: T.prefill(
+                cfg, p, t, cache=c, start_pos=s, valid_len=v,
+                runtime=RT_BAR))
+            scan_fn = jax.jit(lambda p, t, c, s, v: T.prefill(
+                cfg, p, t, cache=c, start_pos=s, valid_len=v,
+                runtime=RT_SCAN))
+            largs = (params, suffix, cache, sp, vl)
+            sargs = (sparams, suffix, state, sp, vl)
+
+            # lowering: the cost every NEW (rows, length) bucket pays
+            low_loop = _lower_s(loop_fn, largs)
+            low_scan = _lower_s(scan_fn, sargs)
+
+            # bitwise admission contract, while we're here
+            gl, cl = loop_fn(*largs)
+            gs, cs = scan_fn(*sargs)
+            np.testing.assert_array_equal(np.asarray(gl), np.asarray(gs))
+            jax.tree.map(
+                lambda a, b: np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b)),
+                list(cl), T.unstack_decode_state(cfg, cs))
+
+            dis_loop = _dispatch_us(loop_fn, largs, iters)
+            dis_scan = _dispatch_us(scan_fn, sargs, iters)
+
+            tag = f"{arch.split('-')[0]}_{nl}L"
+            out.append((f"prefill_dispatch_loop_us_{tag}", dis_loop,
+                        round(dis_loop, 1)))
+            out.append((f"prefill_dispatch_scan_us_{tag}", dis_scan,
+                        round(dis_scan, 1)))
+            out.append((f"prefill_dispatch_loop_over_scan_{tag}",
+                        dis_loop + dis_scan,
+                        round(dis_loop / max(dis_scan, 1e-9), 2)))
+            out.append((f"prefill_lower_loop_over_scan_{tag}",
+                        (low_loop + low_scan) * 1e6,
+                        round(low_loop / max(low_scan, 1e-9), 2)))
+    finally:
+        jax.config.update("jax_cpu_enable_async_dispatch", prev_async)
+    return out
+
+
+def admission_counters(arch: str = "qwen2-1.5b") -> dict:
+    """Deterministic executable/bucket bookkeeping of a real fused scan
+    engine under the retrace-guard traffic pattern (distinct lengths
+    into one bucket, a batched same-length group, an unaligned partial
+    rehit).  Byte-stable across runs — the determinism CI pins it."""
+    cfg = get_smoke(arch)
+    params = schema.init_params(cfg, jax.random.PRNGKey(0))
+
+    def prompt(seed, n):
+        return list(np.random.RandomState(seed).randint(
+            0, cfg.vocab_size, n))
+
+    eng = Engine(cfg, params, RT_SCAN, max_len=64, max_batch=8)
+    gids = [eng.submit(prompt(i, n), max_new_tokens=4, temperature=0.0)
+            for i, n in enumerate((6, 7, 9))]     # m=5,6,8 -> bucket 8
+    for i in range(2):                            # batched group G=2
+        eng.submit(prompt(10 + i, 8), max_new_tokens=4, temperature=0.0)
+    eng.run_all()
+    p1 = list(eng.generation(gids[0]).tokens) + prompt(20, 6)
+    eng.run(eng.submit(p1, max_new_tokens=3, temperature=0.0))
+    return {
+        "arch": arch,
+        "buckets": sorted(list(k) for k in eng._prefills),
+        "prefill_retraces": eng.prefill_retraces,
+        "suffix_prefill_dispatches": eng.suffix_prefill_dispatches,
+        "suffix_prefill_rows": eng.suffix_prefill_rows,
+        "admission_dispatches_saved": eng.admission_dispatches_saved,
+    }
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    counters = admission_counters()
+    if "--counters-out" in sys.argv:
+        path = sys.argv[sys.argv.index("--counters-out") + 1]
+        with open(path, "w") as f:
+            json.dump(counters, f, indent=2, sort_keys=True)
+            f.write("\n")
+    print("name,us_per_call,derived")
+    for k in sorted(counters):
+        if k != "arch":
+            name = k if k.startswith("admission_") else f"admission_{k}"
+            print(f"{name},0,{counters[k]}", flush=True)
+    if "--counters-only" in sys.argv:
+        return
+    for name, us, derived in rows(
+            configs=CONFIGS[:1] if smoke else CONFIGS,
+            iters=5 if smoke else 20):
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

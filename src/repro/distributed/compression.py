@@ -14,12 +14,22 @@ bf16), and the quantization error is re-injected next step so SGD-style
 convergence is preserved (Seide et al. / 1-bit-Adam lineage).  Off by
 default; enabled via ``TrainFlags.grad_compression`` and benchmarked in
 EXPERIMENTS.md §Perf.
+
+The same int8 abs-max codec also compresses the serving plane's
+remote-KV page transfers (``compress_kv_pages`` below): the streamed
+migrate/fetch chunk hooks in ``serving.pagepool.PagedPrefix`` quantize
+K/V page payloads before they ride the modeled RDMA link, under
+``TransportConfig.compress``.  Unlike the gradient path there is no
+error-feedback loop — a parked prefix is written once and read once —
+so the scale is PER PAGE (leading axis), keeping the quantization error
+local to each page's own dynamic range.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Tuple
+from typing import Any, List, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -73,3 +83,45 @@ def compressed_psum_pod(grads, mesh, *, axis: str = "pod",
 
 def compression_ratio(dtype_bytes_in: int = 4) -> float:
     return dtype_bytes_in / 1.0                      # int8 payload
+
+
+# ------------------------------------------------- KV-page wire codec
+# Host-side (numpy) on purpose: these payloads are already off-device —
+# ``PagePool.read_pages`` device_get stands in for the RDMA NIC — so
+# quantizing them must not bounce through XLA.
+
+def compress_kv_pages(pages: List[dict]) -> List[dict]:
+    """int8-quantize the float K/V leaves of a host page payload.
+
+    ``pages`` is the migrate-out format (one dict per attention layer,
+    arrays with a leading page axis).  Float leaves become
+    ``{"q": int8, "s": f32}`` with one abs-max scale per page; integer
+    leaves (``kv_pos``) pass through untouched.  The nested dicts stay
+    jax-pytree-sliceable/concatenatable, so the streamed chunk plumbing
+    (``PagedPrefix._slice_pages`` / ``_host_chunk``) needs no changes.
+    """
+    def leaf(a):
+        a = np.asarray(a)
+        if np.issubdtype(a.dtype, np.integer):
+            return a
+        f = a.astype(np.float32)
+        red = tuple(range(1, f.ndim))
+        s = np.maximum(np.max(np.abs(f), axis=red, keepdims=True),
+                       1e-12) / 127.0
+        q = np.clip(np.rint(f / s), -127, 127).astype(np.int8)
+        return {"q": q, "s": s.astype(np.float32)}
+
+    return [{k: leaf(v) for k, v in d.items()} for d in pages]
+
+
+def decompress_kv_pages(pages: List[dict], dtype) -> List[dict]:
+    """Inverse of ``compress_kv_pages``: float leaves come back in the
+    arena's storage ``dtype`` (the quantization error this bakes in is
+    the wire-compression tradeoff; ``TransportConfig.compress`` is off
+    by default)."""
+    def leaf(v):
+        if isinstance(v, dict):
+            return (v["q"].astype(np.float32) * v["s"]).astype(dtype)
+        return v
+
+    return [{k: leaf(v) for k, v in d.items()} for d in pages]

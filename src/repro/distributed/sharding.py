@@ -94,6 +94,37 @@ DECODE_RULES: Dict[str, MeshAxes] = dict(
 )
 
 
+def project_to_decode_mesh(rules: Dict[str, MeshAxes]
+                           ) -> Dict[str, MeshAxes]:
+    """Project a rules table onto the decode mesh's bitwise-safe subset.
+
+    The engine's admission (bucketed suffix prefill) runs on the SAME
+    mesh as decode, under the same parity contract: only data-movement
+    axes may shard.  Sequence parallelism (``act_seq``/``kv_seq`` over
+    'model') is dropped — splitting the suffix axis would reassociate
+    attention/recurrent reductions and break the strict scan==loop
+    bitwise equality the admission executable is tested against — and
+    ZeRO-3 gather-at-use becomes 'keep' (decode weights already live
+    replicated/TP-resident on the mesh).  What survives is exactly the
+    pair decode itself uses: batch rows over 'data', arena pages over
+    'model'.
+    """
+    out: Dict[str, MeshAxes] = {k: None for k in rules}
+    out["act_batch"] = "data"
+    out["kv_pages"] = "model"
+    out["param_use"] = "keep"
+    return out
+
+
+# Bucketed suffix prefill on the decode mesh (DESIGN.md §Scan suffix
+# prefill): PREFILL_RULES projected onto make_decode_mesh — suffix rows
+# shard over 'data' like decode's batch rows, the fused page arena over
+# 'model'; every contraction axis replicates so mesh=None stays
+# byte-identical to the sharded path.
+PREFILL_DECODE_RULES: Dict[str, MeshAxes] = \
+    project_to_decode_mesh(PREFILL_RULES)
+
+
 @dataclasses.dataclass
 class ShardCtx:
     """shard(x, *logical_axes) -> with_sharding_constraint(x, rules)."""

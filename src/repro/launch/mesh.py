@@ -22,12 +22,18 @@ def make_host_mesh():
 
 
 def make_decode_mesh(data: int = 0, model: int = 1):
-    """Mesh for Engine(mesh=...) paged decode (DECODE_RULES: batch rows
-    over 'data', arena pages over 'model').  ``data=0`` takes every
-    visible device on the data axis — on CPU runners the device count
-    comes from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-    (see device_mesh_shape), so the same call is a 1x1 mesh locally and
-    an 8-way mesh on the forced-device CI leg."""
+    """Mesh for Engine(mesh=...) paged SERVING: the decode dispatch
+    (DECODE_RULES: batch rows over 'data', arena pages over 'model')
+    and the bucketed suffix-prefill admission executable
+    (PREFILL_DECODE_RULES — the projection of PREFILL_RULES onto the
+    same two data-movement axes) share this one mesh, so admission
+    never reshards the cache between prefill and decode.  ``data=0``
+    takes every visible device on the data axis — on CPU runners the
+    device count comes from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (see
+    device_mesh_shape), so the same call is a 1x1 mesh locally and an
+    8-way mesh on the forced-device CI leg."""
+    assert model >= 1 and data >= 0, (data, model)
     if not data:
         data = device_mesh_shape(model)
     return make_mesh((data, model), ("data", "model"))

@@ -216,33 +216,54 @@ def attend(q, k, v, q_positions, kv_positions, window, shard,
     return shard(out, "act_batch", "act_seq", "act_heads", None)
 
 
-def _cache_write(cache, k, v, positions, window):
+def _cache_write(cache, k, v, positions, window, valid_to=None):
     """Scatter freshly projected K/V into the cache at per-row slots.
 
     positions (B,S) absolute; window>0 uses a ring buffer of ``window``
     slots (slot = pos % window), else slot = pos.  Rows may sit at
     different positions (continuous batching) — the scatter is fully
-    batched.  Returns the updated cache dict.
+    batched.  ``valid_to`` (traced scalar, length-bucketed suffix
+    prefill) marks positions >= valid_to as PADDING: their writes
+    scatter out of range and DROP, so the cache bytes are identical to
+    an unpadded write.  Returns the updated cache dict.
     """
     B, S = positions.shape
     if window:
         w = cache["k"].shape[1]                 # min(window, max_len)
         if S > w:                               # only the last w survive
-            k, v, positions = k[:, -w:], v[:, -w:], positions[:, -w:]
+            if valid_to is None:
+                k, v, positions = k[:, -w:], v[:, -w:], positions[:, -w:]
+            else:
+                # keep the last w REAL tokens: a static tail slice would
+                # cut in-window keys when the tail is padding
+                m = valid_to - positions[:, 0]                  # (B,)
+                lo = jnp.maximum(m - w, 0)
+                idx = lo[:, None] + jnp.arange(w)[None, :]      # (B,w)
+                k = jnp.take_along_axis(k, idx[..., None, None], axis=1)
+                v = jnp.take_along_axis(v, idx[..., None, None], axis=1)
+                positions = jnp.take_along_axis(positions, idx, axis=1)
         slots = positions % window
     else:
         slots = positions
+    if valid_to is not None:
+        # padded suffix tokens scatter out of range -> dropped
+        slots = jnp.where(positions < valid_to, slots,
+                          cache["k"].shape[1])
     b = jnp.arange(B)[:, None]
     new = dict(cache)
     new["k"] = cache["k"].at[b, slots].set(k.astype(cache["k"].dtype))
     new["v"] = cache["v"].at[b, slots].set(v.astype(cache["v"].dtype))
     new["kv_pos"] = cache["kv_pos"].at[b, slots].set(positions)
-    new["pos"] = positions[:, -1] + 1
+    pos_next = positions[:, -1] + 1
+    if valid_to is not None:
+        pos_next = jnp.minimum(pos_next, valid_to)
+    new["pos"] = pos_next
     return new
 
 
 def attention(cfg, p, x, positions, shard, runtime: Runtime,
-              window: int = 0, cache=None, q_offset: int = 0):
+              window: int = 0, cache=None, q_offset: int = 0,
+              valid_to=None):
     """The unified attention layer: one code path for all three modes.
 
     * ``cache is None``  — training / plain forward over x (B,S,D);
@@ -251,16 +272,24 @@ def attention(cfg, p, x, positions, shard, runtime: Runtime,
       cache, i.e. prefill is literally forward with ``position=0``;
     * ``cache`` given, S==1 — decode: same code, Sq=1.
 
+    ``q_offset`` may be a TRACED scalar (length-bucketed suffix prefill
+    shares one executable across prefix lengths); the static key-band
+    slices below then widen to the full cache, which is bitwise-neutral
+    because the extra slots are EMPTY/future-masked and contribute
+    exact zeros through the masked softmax.  ``valid_to`` (traced)
+    drops cache writes of padded suffix positions (>= valid_to).
+
     Returns (out, new_cache-or-None).
     """
     B, S, _ = x.shape
     q, k, v = _qkv(cfg, p, x, positions, shard)
     sdt = jnp.dtype(runtime.score_dtype)
+    q_static = isinstance(q_offset, int)
     # pos_keys: key index i holds position q_offset+i exactly, so the
     # chunked path may slice keys to the causal band
     if cache is not None:
-        new_cache = _cache_write(cache, k, v, positions, window)
-        if window and S > 1 and q_offset == 0:
+        new_cache = _cache_write(cache, k, v, positions, window, valid_to)
+        if window and S > 1 and q_static and q_offset == 0:
             # ring prefill: the post-write ring only serves the LAST
             # window of queries (later tokens overwrite slots earlier
             # queries still need) — attend the full fresh K/V instead,
@@ -289,14 +318,17 @@ def attention(cfg, p, x, positions, shard, runtime: Runtime,
     if impl == "auto":
         impl = "full" if S <= runtime.full_attn_threshold else "chunked"
     if impl == "full" or S <= runtime.q_chunk:
-        if pos_keys and cache is not None and S > 1:
+        if pos_keys and cache is not None and S > 1 and q_static:
             # prefill into a wide cache: only slots [0, q_offset+S)
             # can be written — slice so cost tracks prompt length, not
-            # buffer width (decode S==1 still attends the full cache)
+            # buffer width (decode S==1 still attends the full cache).
+            # Traced q_offset attends the full width instead: the slots
+            # beyond the prompt are EMPTY and mask to exact zeros.
             hi = q_offset + S
             ck, cv, kv_pos = ck[:, :hi], cv[:, :hi], kv_pos[:, :hi]
         out = attend(q, ck, cv, positions, kv_pos, window, shard, sdt)
     else:
+        assert q_static, "chunked attention needs a static q_offset"
         # q-chunked (python-unrolled: exact HLO cost accounting).  When
         # key index == position (pos_keys), keys are sliced to the
         # causal band per chunk; otherwise (ring buffers, width =
@@ -418,7 +450,8 @@ def mlp(cfg: ModelConfig, p, x, shard):
 
 
 # ----------------------------------------------------------------------- MoE
-def moe(cfg: ModelConfig, p, x, shard) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+def moe(cfg: ModelConfig, p, x, shard, valid_len=None
+        ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """Group-local top-k MoE with capacity.  x (B, S, D).
 
     Groups = batch rows: each group routes its own S tokens, so the
@@ -426,11 +459,26 @@ def moe(cfg: ModelConfig, p, x, shard) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     axis with no cross-device token movement; expert weights are sharded
     over the 'model' axis (expert parallelism).  Overflowing tokens are
     dropped (standard capacity-factor semantics).
+
+    ``valid_len`` (traced scalar): only the first valid_len positions
+    are real tokens (length-bucketed suffix prefill).  The capacity
+    CUTOFF is computed from valid_len — so keep/drop decisions match an
+    unpadded run of valid_len tokens exactly — while the dispatch-table
+    WIDTH stays the static S-derived cap (padding tokens queue behind
+    the real ones in cumsum order, so they never displace a real slot).
     """
     B, S, D = x.shape
     E, K = cfg.num_experts, cfg.experts_per_token
     cap = int(math.ceil(S * K * cfg.capacity_factor / E))
     cap = min(cap, S)
+    if valid_len is None:
+        cap_cut = cap
+    else:
+        cap_cut = jnp.minimum(
+            jnp.ceil(valid_len.astype(jnp.float32) * K
+                     * cfg.capacity_factor / E).astype(jnp.int32),
+            valid_len)
+        cap_cut = jnp.minimum(cap_cut, cap)  # table width is the bound
 
     # SP -> EP boundary: routing/dispatch need the full local sequence,
     # so re-shard the tokens to batch-only (all-to-all-ish reshard), and
@@ -447,7 +495,7 @@ def moe(cfg: ModelConfig, p, x, shard) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     flat = onehot.reshape(B, S * K, E)
     pos_in_e = jnp.cumsum(flat, axis=1) - flat             # (B,S*K,E)
     pos = jnp.sum(pos_in_e * flat, axis=-1).reshape(B, S, K)
-    keep = pos < cap
+    keep = pos < cap_cut
 
     # scatter token indices into the (E, cap) dispatch table
     token_id = jnp.broadcast_to(jnp.arange(S)[None, :, None], (B, S, K))
@@ -508,8 +556,13 @@ def moe(cfg: ModelConfig, p, x, shard) -> Tuple[jnp.ndarray, Dict[str, Any]]:
 
 # --------------------------------------------------------------- causal conv
 def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
-                  state: Optional[jnp.ndarray] = None):
-    """Depthwise causal conv.  x (B,S,C), w (W,C).  Returns y, new_state."""
+                  state: Optional[jnp.ndarray] = None, valid_len=None):
+    """Depthwise causal conv.  x (B,S,C), w (W,C).  Returns y, new_state.
+
+    ``valid_len`` (traced scalar): positions >= valid_len are padding
+    (length-bucketed suffix prefill) — the carried state is then the
+    W-1 inputs ENDING at valid_len, not at the padded tail.  Real
+    outputs y[:, :valid_len] never see padded inputs (causality)."""
     W = w.shape[0]
     if state is None:
         pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
@@ -520,7 +573,14 @@ def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     for i in range(W):                                     # W is tiny (4)
         y = y + xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
     y = y + b.astype(x.dtype)
-    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    if W <= 1:
+        new_state = pad
+    elif valid_len is None:
+        new_state = xp[:, -(W - 1):]
+    else:
+        # xp[:, valid_len : valid_len + W-1] == last W-1 REAL inputs
+        new_state = jax.lax.dynamic_slice_in_dim(xp, valid_len, W - 1,
+                                                 axis=1)
     return y, new_state
 
 
@@ -534,8 +594,17 @@ def _segsum(s: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(mask, d, -jnp.inf)
 
 
-def ssd_forward(cfg: ModelConfig, p, x, shard, state=None):
-    """Mamba-2 SSD block.  x (B,S,D) -> y (B,S,D), new recurrent state."""
+def ssd_forward(cfg: ModelConfig, p, x, shard, state=None, valid_len=None):
+    """Mamba-2 SSD block.  x (B,S,D) -> y (B,S,D), new recurrent state.
+
+    ``valid_len`` (traced scalar): positions >= valid_len are padding —
+    their dt is zeroed (decay exp(0)=1, contribution x*dt=0, the same
+    trick the internal chunk padding below uses), and the chunk width
+    is pinned to ``ssm_chunk`` (no min with S) so every length bucket
+    of the same suffix shares ONE chunk grid: the f32 chunk reductions
+    reassociate across grids, so the grid must not depend on the
+    padded length.  The carried ssm state is then bitwise what an
+    unpadded valid_len-token run (under the same pinning) produces."""
     B, S, D = x.shape
     DI, N, HS, P_ = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
     use = getattr(shard, "use", lambda w: w)
@@ -545,16 +614,19 @@ def ssd_forward(cfg: ModelConfig, p, x, shard, state=None):
     conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
     conv_state = None if state is None else state.get("conv")
     conv_out, new_conv = causal_conv1d(conv_in, p["conv_w"], p["conv_b"],
-                                       conv_state)
+                                       conv_state, valid_len)
     conv_out = jax.nn.silu(conv_out)
     xin = conv_out[..., :DI].reshape(B, S, HS, P_)
     Bc = conv_out[..., DI : DI + N]                        # (B,S,N)
     Cc = conv_out[..., DI + N :]
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32))   # (B,S,HS)
+    if valid_len is not None:
+        # dt = 0 on padding -> decay 1, contribution 0: state is exact
+        dt = dt * (jnp.arange(S) < valid_len).astype(dt.dtype)[None, :, None]
     A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (HS,)
 
-    Q = min(cfg.ssm_chunk, S)
+    Q = cfg.ssm_chunk if valid_len is not None else min(cfg.ssm_chunk, S)
     Sp = S
     if S % Q:
         pad = Q - S % Q
@@ -651,8 +723,18 @@ def ssd_decode_step(cfg: ModelConfig, p, x, state, shard):
 _LRU_C = 8.0
 
 
-def rglru_forward(cfg: ModelConfig, p, x, shard, state=None):
-    """RecurrentGemma recurrent block.  x (B,S,D)."""
+def rglru_forward(cfg: ModelConfig, p, x, shard, state=None, valid_len=None):
+    """RecurrentGemma recurrent block.  x (B,S,D).
+
+    ``valid_len`` (traced scalar): padded positions become the EXACT
+    scan identity (a=1, b=0), and the sequence is further padded with
+    identities to the next power of two BEFORE the associative scan —
+    the scan's balanced combine tree is shaped by S, so without the
+    pad two length buckets of the same suffix would reassociate the
+    f32 combines of the same real tokens.  Pinned to the pow2 tree,
+    every bucket of a given suffix shares one bracketing, and identity
+    combines are exact (a*1, 1*b+0) even under FMA contraction, so h
+    at each real position is bitwise bucket-independent."""
     B, S, D = x.shape
     R = cfg.lru_width
     use = getattr(shard, "use", lambda w: w)
@@ -660,7 +742,8 @@ def rglru_forward(cfg: ModelConfig, p, x, shard, state=None):
     gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, use(p["wy"])),
                        approximate=True)
     conv_state = None if state is None else state.get("conv")
-    x1, new_conv = causal_conv1d(x1, p["conv_w"], p["conv_b"], conv_state)
+    x1, new_conv = causal_conv1d(x1, p["conv_w"], p["conv_b"], conv_state,
+                                 valid_len)
 
     xf = x1.astype(jnp.float32)
     r = jax.nn.sigmoid(jnp.einsum("bsr,rt->bst", xf, p["w_a"].astype(
@@ -671,10 +754,20 @@ def rglru_forward(cfg: ModelConfig, p, x, shard, state=None):
     log_a = log_a0 * r                                     # (B,S,R)
     a = jnp.exp(log_a)
     b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    if valid_len is not None:
+        valid = (jnp.arange(S) < valid_len)[None, :, None]
+        a = jnp.where(valid, a, 1.0)                       # scan identity
+        b = jnp.where(valid, b, 0.0)
 
     if state is not None and state.get("lru") is not None:
         h0 = state["lru"].astype(jnp.float32)              # (B,R)
         b = b.at[:, 0].add(a[:, 0] * h0)
+
+    Sp = 1 << (S - 1).bit_length() if valid_len is not None else S
+    if Sp != S:                         # pin the combine tree (docstring)
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        a = jnp.pad(a, pad, constant_values=1.0)
+        b = jnp.pad(b, pad)
 
     def combine(c1, c2):
         a1, b1 = c1
@@ -682,6 +775,7 @@ def rglru_forward(cfg: ModelConfig, p, x, shard, state=None):
         return a1 * a2, a2 * b1 + b2
 
     aa, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h[:, :S]
     new_state = {"conv": new_conv, "lru": h[:, -1]}
     y = (h * gate.astype(jnp.float32)).astype(x.dtype)
     out = jnp.einsum("bsr,rd->bsd", y, use(p["out"]))

@@ -20,7 +20,8 @@ from repro.distributed.sharding import NO_SHARD, ShardCtx
 # ------------------------------------------------------------------ blocks
 def block_apply(cfg: ModelConfig, kind: str, p, x, positions, shard,
                 runtime: Runtime, cache=None, decode: bool = False,
-                q_offset: int = 0, block_table=None, write_active=None
+                q_offset: int = 0, block_table=None, write_active=None,
+                valid_len=None
                 ) -> Tuple[jnp.ndarray, Dict[str, Any], Any]:
     """One block, any mode: forward (cache=None), prefill (cache given),
     decode (cache given, decode=True, S==1).  Attention needs no decode
@@ -29,7 +30,10 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, shard,
     single-step kernel.  With ``block_table`` given (paged decode), the
     attention cache is the page-pool arena set instead of a dense row
     and inactive rows mask their write via ``write_active`` (the arena
-    has no per-row leading axis to reselect).  Returns
+    has no per-row leading axis to reselect).  ``valid_len`` (traced
+    scalar, length-bucketed suffix prefill) marks positions past it as
+    padding: cache writes drop, recurrent contributions vanish exactly
+    (layers.py), MoE capacity cuts at the real token count.  Returns
     (x, aux_losses, new_cache)."""
     aux: Dict[str, Any] = {}
     new_cache = None
@@ -41,14 +45,15 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, shard,
                 positions, shard, runtime, cache, block_table,
                 write_active)
         else:
+            valid_to = None if valid_len is None else q_offset + valid_len
             h, new_cache = L.attention(cfg, p["attn"],
                                        L.apply_norm(cfg, p["ln1"], x),
                                        positions, shard, runtime, window,
-                                       cache, q_offset)
+                                       cache, q_offset, valid_to)
         x = x + h
         if kind == "moe":
             m, aux = L.moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x),
-                           shard)
+                           shard, valid_len)
             x = x + m
         else:
             x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x),
@@ -59,7 +64,8 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, shard,
                 cfg, p["ssd"], L.apply_norm(cfg, p["ln1"], x), cache, shard)
         else:
             h, new_cache = L.ssd_forward(
-                cfg, p["ssd"], L.apply_norm(cfg, p["ln1"], x), shard, cache)
+                cfg, p["ssd"], L.apply_norm(cfg, p["ln1"], x), shard, cache,
+                valid_len)
         x = x + h
     elif kind == "rglru":
         if decode:
@@ -69,7 +75,7 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, shard,
         else:
             h, new_cache = L.rglru_forward(
                 cfg, p["rglru"], L.apply_norm(cfg, p["ln1"], x), shard,
-                cache)
+                cache, valid_len)
         x = x + h
         x = x + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x), shard)
     else:
@@ -649,8 +655,65 @@ def _fresh_cache_for(cfg: ModelConfig, kind: str, batch: int, max_len: int):
             for k, (shape, dtype) in spec.items()}
 
 
+def _prefill_scan_units(cfg: ModelConfig, params, x, positions, state,
+                        q_offset, valid_len, runtime: Runtime,
+                        shard: ShardCtx):
+    """Suffix prefill as ONE lax.scan over pattern units, CONTINUING an
+    existing stacked dense state at ``q_offset``.
+
+    The per-unit dense caches ride the scan carry: sliced per iteration
+    via dynamic_index, written back via ``dynamic_update_slice_in_dim``
+    — the prefill mirror of ``_decode_step_scan``, so bucketed
+    admission is one compiled executable instead of ~n_layers
+    dispatches.  The state must be GATHERED dense rows (every entry
+    materialized, ``pagepool.gather_rows``); the fused page arena is
+    written back afterwards by one scatter per leaf
+    (``pagepool.write_rows_traced``), because prefill needs the full
+    position-ordered prefix that only the gathered layout provides."""
+    assert "layers_units" in params, \
+        "scan suffix prefill needs stack_params(cfg, params)"
+    assert state.get("arena") is None and all(
+        c is not None for c in tuple(state["units"]) + tuple(state["tail"])
+    ), ("scan suffix prefill runs on GATHERED dense rows "
+        "(pagepool.gather_rows); write the fused arena back afterwards "
+        "with pagepool.write_rows_traced")
+    kinds = cfg.layer_kinds()
+    _, pat = _pattern(cfg)
+    K = len(pat)
+    n_units = len(kinds) // K
+
+    def body(carry, xs):
+        xx, units_c = carry
+        unit_params, it = xs
+        units_c = list(units_c)
+        for j, kind in enumerate(pat):
+            uc = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, it, 0, keepdims=False), units_c[j])
+            xx, _, c2 = block_apply(cfg, kind, unit_params[j], xx,
+                                    positions, shard, runtime, cache=uc,
+                                    q_offset=q_offset, valid_len=valid_len)
+            units_c[j] = jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_slice_in_dim(
+                    a, n.astype(a.dtype)[None], it, 0), units_c[j], c2)
+        return (xx, tuple(units_c)), None
+
+    units = state["units"]
+    if n_units:
+        (x, units), _ = jax.lax.scan(
+            body, (x, units),
+            (params["layers_units"], jnp.arange(n_units, dtype=jnp.int32)))
+    tail_state = []
+    for t, (p, c) in enumerate(zip(params["layers_tail"], state["tail"])):
+        x, _, c2 = block_apply(cfg, pat[t], p, x, positions, shard,
+                               runtime, cache=c, q_offset=q_offset,
+                               valid_len=valid_len)
+        tail_state.append(c2)
+    return x, {"units": units, "tail": tuple(tail_state), "arena": None}
+
+
 def prefill(cfg: ModelConfig, params, tokens=None, *, embeds=None,
-            cache=None, start_pos: int = 0,
+            cache=None, start_pos=0, valid_len=None,
             runtime: Runtime = Runtime(), shard: ShardCtx = NO_SHARD):
     """Run the prompt through the model, filling the cache.
 
@@ -659,16 +722,25 @@ def prefill(cfg: ModelConfig, params, tokens=None, *, embeds=None,
     continue the identical computation.  ``start_pos`` allows suffix
     prefill: continue a restored prefix cache from position
     ``start_pos`` without recomputing the cached tokens (the engine's
-    partial prefix-cache hits).
+    partial prefix-cache hits).  ``start_pos`` may be a TRACED scalar
+    so one bucketed executable serves every prefix length, and
+    ``valid_len`` (traced) marks tokens past it as length-bucket
+    padding whose cache writes drop (layers.py) — the final-token
+    logits are then garbage (the last token is a pad) and the caller
+    must ignore them, as the engine's admission does.
 
     Returns (last-token logits, cache).  With ``runtime.scan_layers``
     the stack runs as one lax.scan over pattern units and the cache
     comes back STACKED: a tuple (one entry per pattern position) of
     pytrees with a leading (num_units,) axis — the production layout
     big models serve with.  Otherwise the cache is a per-layer list.
+    A STACKED state dict (``stack_decode_state`` layout, gathered
+    dense rows) as ``cache`` runs the scan CONTINUATION at
+    ``start_pos`` and returns the updated state dict.
     """
+    static_start = isinstance(start_pos, int)
     positions = None
-    if start_pos:
+    if not (static_start and start_pos == 0):
         # suffix prefill: absolute positions must be offset BEFORE the
         # positional embedding is applied (sinusoidal) and rope'd
         assert tokens is not None and embeds is None
@@ -679,10 +751,18 @@ def prefill(cfg: ModelConfig, params, tokens=None, *, embeds=None,
                                 shard)
     B, S, _ = x.shape
     kinds = cfg.layer_kinds()
+    stacked_state = isinstance(cache, dict) and "units" in cache
 
-    if runtime.scan_layers and len(kinds) > len(cfg.block_pattern or (1,)):
-        assert cache is None and not start_pos, \
-            "scan-prefill builds its own cache from position 0"
+    if stacked_state:
+        assert runtime.scan_layers, \
+            "stacked prefill state requires runtime.scan_layers"
+        x, new_cache = _prefill_scan_units(
+            cfg, params, x, positions, cache, start_pos, valid_len,
+            runtime, shard)
+    elif runtime.scan_layers and len(kinds) > len(cfg.block_pattern or (1,)):
+        assert cache is None and static_start and not start_pos, \
+            "fresh scan-prefill builds its own cache from position 0 " \
+            "(pass a stacked state dict to continue at start_pos)"
         pat, stacked, tail = _stack_units(cfg, params["layers"])
         max_len = S
 
@@ -706,15 +786,25 @@ def prefill(cfg: ModelConfig, params, tokens=None, *, embeds=None,
             new_cache = (new_cache, tuple(tail_caches))
     else:
         if cache is None:
-            assert not start_pos, (
+            assert static_start and not start_pos, (
                 "start_pos without a cache would attend an EMPTY "
                 "prefix: pass the cache holding positions [0, start_pos)")
             cache = init_cache(cfg, B, S)
+        if runtime.layer_barrier:
+            # same unit-boundary contract as decode_step: barrier after
+            # embed and at every pattern-unit end, so loop-with-barrier
+            # == the scan continuation BITWISE
+            x = jax.lax.optimization_barrier(x)
         new_cache = []
-        for kind, p, c in zip(kinds, params["layers"], cache):
+        _, pat = _pattern(cfg)
+        for l, (kind, p, c) in enumerate(zip(kinds, params["layers"],
+                                             cache)):
             x, _, c2 = block_apply(cfg, kind, p, x, positions, shard,
-                                   runtime, cache=c, q_offset=start_pos)
+                                   runtime, cache=c, q_offset=start_pos,
+                                   valid_len=valid_len)
             new_cache.append(c2)
+            if runtime.layer_barrier and (l + 1) % len(pat) == 0:
+                x = jax.lax.optimization_barrier(x)
 
     x = L.apply_norm(cfg, params["final_norm"], x)
     head = _head(cfg, params, shard)

@@ -51,7 +51,8 @@ import jax.numpy as jnp
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.layers import Runtime
-from repro.distributed.sharding import DECODE_RULES, NO_SHARD, ShardCtx
+from repro.distributed.sharding import (DECODE_RULES, NO_SHARD,
+                                        PREFILL_DECODE_RULES, ShardCtx)
 from repro.serving.kvcache import (PendingFetch, PrefixCacheStore,
                                    tree_bytes)
 from repro.serving.pagepool import PagePool, PagedPrefix, \
@@ -104,7 +105,7 @@ class Engine:
                  store_prefixes: bool = True, max_batch: int = 8,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  top_k: int = 0, transport=None, clocking: str = "event",
-                 mesh=None):
+                 mesh=None, bucket_lengths: bool = True):
         assert clocking in ("event", "stall")
         self.cfg, self.params, self.runtime = cfg, params, runtime
         # scan decode (DESIGN.md §Sharded-scan-decode): with
@@ -112,15 +113,30 @@ class Engine:
         # arena, pattern-stacked dense state) and the decode dispatch is
         # one lax.scan over pattern units on pre-stacked params —
         # bitwise == the layer_barrier loop, ~n_layers fewer traced
-        # dispatches per step.  Suffix prefill keeps per-layer params
-        # (scan prefill owns its cache; a suffix continues one).
+        # dispatches per step.  Suffix prefill rides the same scan as a
+        # CONTINUATION of the stacked state at start_pos, so bucketed
+        # admission is ONE compiled executable per length bucket.
         self.scan = bool(runtime.scan_layers)
+        # length-bucketed admission (DESIGN.md §Scan suffix prefill):
+        # suffix token counts pad to the next power of two (the padded
+        # tail's cache writes DROP via valid_len, so padded == unpadded
+        # bitwise) and start_pos is a traced scalar — executable count
+        # is bounded by the (rows, length) bucket grid instead of
+        # growing with every distinct prefix offset.  bucket_lengths=
+        # False keeps exact-length groups (the unpadded reference the
+        # parity tests compare against).
+        self.bucket_lengths = bool(bucket_lengths)
         # mesh=None is THE golden path (byte-identical traces); a mesh
         # shards batch rows over 'data' and arena pages over 'model'
-        # under DECODE_RULES — data movement only, numerics untouched
+        # under DECODE_RULES — data movement only, numerics untouched.
+        # Admission shards under PREFILL_DECODE_RULES, the projection
+        # of PREFILL_RULES onto the same two axes.
         self.mesh = mesh
         self.shard = (ShardCtx(mesh=mesh, rules=DECODE_RULES)
                       if mesh is not None else NO_SHARD)
+        self._prefill_shard = (
+            ShardCtx(mesh=mesh, rules=PREFILL_DECODE_RULES)
+            if mesh is not None else NO_SHARD)
         # who owns virtual time (DESIGN.md §Engine-on-loop):
         #   "event"  batched run_all() is DRIVEN FROM the shared event
         #            loop — each decode dispatch is a scheduled
@@ -192,12 +208,11 @@ class Engine:
         # tree otherwise
         self._dparams = T.stack_params(cfg, params) if self.scan \
             else params
-        self._prefills: Dict[int, Any] = {}     # start_pos -> jitted fn
-        # suffix prefill continues an existing cache, which the scan
-        # prefill path (owns its cache, start_pos 0) cannot — admission
-        # always runs the per-layer loop prefill
-        self._prefill_rt = dataclasses.replace(runtime, scan_layers=False) \
-            if self.scan else runtime
+        # suffix-prefill executables, keyed on the (rows, length)
+        # BUCKET (Gp, mp) — prefix offset and real suffix length are
+        # traced inputs, so each entry holds exactly one executable
+        # (prefill_retraces observes any drift from that)
+        self._prefills: Dict[Tuple[int, int], Any] = {}
         # THE decode dispatch: whole batch, per-row positions/block
         # tables, active mask, fused on-device sampling; the cache
         # (arenas + dense rows) is donated and updated in place
@@ -456,6 +471,8 @@ class Engine:
         Gp = _pow2_pad(G)
         first = clen // ps
         n_new = _ceil_div(n, ps) - first
+        m = n - clen                    # real suffix tokens
+        mp = _pow2_pad(m) if self.bucket_lengths else m
         fresh = []
         try:
             for _ in items:
@@ -472,32 +489,57 @@ class Engine:
             raise
         self._cache = pool.flush_scrub(self._cache)
         page_mat = np.zeros((Gp, W), np.int64)      # pad: null page 0
-        toks = np.zeros((Gp, n - clen), np.int32)
+        toks = np.zeros((Gp, mp), np.int32)         # length pad: token 0
         for i, (g, pages, _) in enumerate(items):
             page_mat[i, : len(pages)] = pages
-            toks[i] = g.tokens[clen:n]
+            toks[i, :m] = g.tokens[clen:n]
         rows = pool.gather_rows(self._cache, page_mat,
                                 np.full((Gp,), clen, np.int64))
         rows = self._overlay_extras(rows, items)
-        _, rows = self._suffix_prefill(clen)(
-            self.params, jnp.asarray(toks), rows)
+        # prefix offset and real length are TRACED scalars: one
+        # executable per (Gp, mp) bucket serves every offset, and the
+        # padded tail [m, mp) drops all its cache writes via valid_len
+        sp, vl = jnp.int32(clen), jnp.int32(m)
+        slots = [self._free.pop(0) for _ in range(G)]
+        if self.scan:
+            # ONE fused admit executable: stack the gathered rows, run
+            # the scan-continuation prefill, scatter the suffix pages
+            # into the fused arena and the dense rows into their slots
+            # — the admission analogue of the scan decode dispatch.
+            # The write window [w0, w0+nw) covers the fresh block-table
+            # columns at any page alignment; clamping w0 (not the
+            # slice) keeps the traced dynamic_slice exact.
+            nw = min((mp + 2 * ps - 2) // ps, W)
+            w0 = min(first, W - nw)
+            write_mat = np.full((Gp, nw), pool.num_pages, np.int64)
+            for i in range(G):
+                write_mat[i, first - w0: first - w0 + n_new] = fresh[i]
+            slot_arr = np.full((Gp,), self.max_batch, np.int32)
+            slot_arr[:G] = slots
+            self._cache, rows = self._admit_fused(Gp, mp)(
+                self._dparams, self._cache, jnp.asarray(toks), rows,
+                jnp.asarray(write_mat, jnp.int32),
+                jnp.asarray(slot_arr), jnp.int32(w0), sp, vl)
+            pool.note_rows_written(write_mat)
+        else:
+            _, rows = self._suffix_prefill(Gp, mp)(
+                self.params, jnp.asarray(toks), rows, sp, vl)
+            write_mat = np.full((Gp, n_new), pool.num_pages, np.int64)
+            for i in range(G):
+                write_mat[i] = fresh[i]
+            self._cache = pool.write_rows(self._cache, rows, write_mat,
+                                          first)
         self.suffix_prefill_dispatches += 1
         self.suffix_prefill_rows += G
-        write_mat = np.full((Gp, n_new), pool.num_pages, np.int64)
-        for i in range(G):
-            write_mat[i] = fresh[i]
-        self._cache = pool.write_rows(self._cache, rows, write_mat, first)
-        slots = []
         for i, (g, pages, _) in enumerate(items):
             if pages[first:]:
                 # the shared boundary page was merged into a fresh page
                 # by the prefill write — drop the acquired ref on it
                 pool.release(pages[first:])
             g.pages = pages[:first] + fresh[i]
-            slot = self._free.pop(0)
-            slots.append(slot)
-            g.slot, g.pos, g.status = slot, n, "running"
-        self._cache = pool.dense_admit(self._cache, rows, slots)
+            g.slot, g.pos, g.status = slots[i], n, "running"
+        if not self.scan:
+            self._cache = pool.dense_admit(self._cache, rows, slots)
         self.tokens_prefilled += (n - clen) * G
         if self.store_prefixes:
             for i, (g, _, _) in enumerate(items):
@@ -528,19 +570,59 @@ class Engine:
                 if li in dense else None
                 for li, c in enumerate(rows)]
 
-    def _suffix_prefill(self, start_pos: int):
-        """Jitted prefill continuing from ``start_pos`` (0 = cold).
-        Memoized per offset: jax.jit caches executables on the wrapper
-        object (one per (rows, suffix) shape), so a fresh lambda per
-        call would recompile every admission."""
-        fn = self._prefills.get(start_pos)
+    def _suffix_prefill(self, Gp: int, mp: int):
+        """Jitted per-layer-loop prefill for one (rows, length) bucket.
+        Prefix offset and real suffix length arrive as traced scalars,
+        so the memo entry compiles exactly once — a memo keyed on exact
+        offsets (the pre-bucketing design) grew one executable per
+        distinct prefix length."""
+        key = (Gp, mp)
+        fn = self._prefills.get(key)
         if fn is None:
-            cfg, rt, shard = self.cfg, self._prefill_rt, self.shard
-            fn = self._prefills[start_pos] = jax.jit(
-                lambda p, t, c, sp=start_pos: T.prefill(
-                    cfg, p, t, cache=c, start_pos=sp, runtime=rt,
-                    shard=shard))
+            cfg, rt, shard = self.cfg, self.runtime, self._prefill_shard
+            fn = self._prefills[key] = jax.jit(
+                lambda p, t, c, sp, vl: T.prefill(
+                    cfg, p, t, cache=c, start_pos=sp, valid_len=vl,
+                    runtime=rt, shard=shard))
         return fn
+
+    def _admit_fused(self, Gp: int, mp: int):
+        """The scan path's ONE admission executable per (rows, length)
+        bucket: stack the gathered dense rows into the scan-state
+        layout, CONTINUE them through the scan-over-pattern-units
+        prefill at the traced offset, then land the results — suffix
+        pages into the fused arena (one scatter per leaf, traced window
+        start) and dense rows into their slots (padded slots index out
+        of bounds and drop).  The whole chain is one compiled dispatch,
+        vs ~n_layers for the per-layer loop it replaces."""
+        key = (Gp, mp)
+        fn = self._prefills.get(key)
+        if fn is None:
+            cfg, rt = self.cfg, self.runtime
+            shard, pool = self._prefill_shard, self.pool
+
+            def admit(p, cache, toks, rows, write_mat, slots, w0, sp, vl):
+                state = T.stack_decode_state(cfg, rows)
+                _, state = T.prefill(cfg, p, toks, cache=state,
+                                     start_pos=sp, valid_len=vl,
+                                     runtime=rt, shard=shard)
+                rows2 = T.unstack_decode_state(cfg, state)
+                cache = pool.write_rows_traced(cache, rows2, write_mat,
+                                               w0)
+                cache = pool._dense_admit_fused_impl(cache, rows2, slots)
+                return cache, rows2
+
+            fn = self._prefills[key] = jax.jit(admit, donate_argnums=(1,))
+        return fn
+
+    @property
+    def prefill_retraces(self) -> int:
+        """Executables beyond one per (rows, length) bucket: 0 when the
+        bucket keying is shape-complete (every admission shape a bucket
+        sees maps to the same compiled signature); anything else means
+        admission is silently recompiling."""
+        return sum(max(f._cache_size() - 1, 0)
+                   for f in self._prefills.values())
 
     @property
     def admission_dispatches_saved(self) -> int:

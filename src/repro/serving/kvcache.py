@@ -338,9 +338,12 @@ class PrefixCacheStore:
         self._remote.move_to_end(entry.key)
         self.stats.migrations += 1
         if hasattr(payload, "migrate_out_begin"):
+            if hasattr(payload, "wire_compress"):
+                payload.wire_compress = bool(plane.cfg.compress)
             n_pages = payload.migrate_out_begin()
-            page_bytes = payload.engine.pool.page_bytes
+            page_bytes = self._wire_page_bytes(payload)
             chunks = self._chunks(entry.nbytes, n_pages, page_bytes)
+            self._note_wire_compression(payload, n_pages, chunks)
 
             def mover(lo, hi):
                 payload.migrate_out_chunk(lo, hi)
@@ -361,6 +364,27 @@ class PrefixCacheStore:
                 entry.job = None
                 self.stats.bytes_migrated += entry.nbytes
         entry.job = MigrationJob(plane, entry, chunks, mover, on_done)
+
+    def _wire_page_bytes(self, payload) -> int:
+        """Per-page bytes a streamed transfer of this payload puts on
+        the modeled link: the raw arena page, or the int8-quantized
+        wire format when the payload migrated out compressed
+        (TransportConfig.compress)."""
+        pool = payload.engine.pool
+        if getattr(payload, "wire_compress", False):
+            return pool.compressed_page_bytes
+        return pool.page_bytes
+
+    def _note_wire_compression(self, payload, n_pages: int,
+                               chunks) -> None:
+        """Account compressed wire traffic on the plane: bytes actually
+        put on the link, and the raw-minus-wire savings."""
+        if not getattr(payload, "wire_compress", False):
+            return
+        raw = n_pages * payload.engine.pool.page_bytes
+        wire = sum(c[2] for c in chunks)
+        self.plane.wire_bytes_compressed += wire
+        self.plane.wire_bytes_saved += max(raw - wire, 0)
 
     def _chunks(self, nbytes: int, n_pages: int, page_bytes: int):
         """[(lo, hi, nbytes)] page-index ranges for streamed transfer."""
@@ -397,9 +421,11 @@ class PrefixCacheStore:
                 payload.fetch_begin()
             except Exception:               # page pool dry: recompute
                 return None
-            page_bytes = payload.engine.pool.page_bytes
+            page_bytes = self._wire_page_bytes(payload)
             chunks = self._chunks(entry.nbytes, payload.num_pages,
                                   page_bytes)
+            self._note_wire_compression(payload, payload.num_pages,
+                                        chunks)
 
             def uploader(lo, hi):
                 payload.fetch_chunk(lo, hi)
@@ -570,7 +596,7 @@ class PrefixCacheStore:
             return None
         payload = e.payload
         n_pages = getattr(payload, "num_pages", 0)
-        page_bytes = (payload.engine.pool.page_bytes
+        page_bytes = (self._wire_page_bytes(payload)
                       if hasattr(payload, "engine") else 0)
         if not self.plane.prefer_fetch(e.nbytes, e.length, n_pages,
                                        page_bytes):

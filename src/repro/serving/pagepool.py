@@ -111,6 +111,14 @@ class PagePool:
                     * self.dtype.itemsize)
         self.page_bytes = len(self._attn_set) * (2 * kv_bytes
                                                  + page_size * 4)
+        # wire bytes of one page under int8 K/V quantization
+        # (distributed.compression.compress_kv_pages): K and V become
+        # one byte per element plus a 4-byte per-page scale each;
+        # kv_pos stays int32.  Used by the store to price streamed
+        # transfers when TransportConfig.compress is on.
+        kv_q = page_size * cfg.num_kv_heads * cfg.head_dim
+        self.compressed_page_bytes = len(self._attn_set) * (
+            2 * (kv_q + 4) + page_size * 4)
         # ---- host-side accounting.  refcount[p] == 0 <=> p is free.
         self.refcount = np.zeros((num_pages,), np.int64)
         self.refcount[0] = 1                    # null page: never handed out
@@ -459,6 +467,48 @@ class PagePool:
             out.append(c)
         return out
 
+    def write_rows_traced(self, cache, rows, page_mat, first_page):
+        """Trace-level fused write-back for the scan-admission
+        executable (length-bucketed suffix prefill): the
+        ``_write_fused_impl`` scatter with a TRACED ``first_page``, so
+        ONE bucketed executable serves every prefix offset.  page_mat
+        (G, nw) covers a fixed pow2-bucket window of block-table
+        columns; pad columns hold ``num_pages`` and drop.  The caller
+        must keep the window in range (window_start + nw <=
+        pages_per_row — see Engine._admit_group) and account host-side
+        via ``note_rows_written``."""
+        assert self.layout == "fused"
+        if cache["arena"] is None:
+            return cache
+        cfg, ps = self.cfg, self.page_size
+        G, nw = page_mat.shape
+        lo = first_page * ps
+        offs = (jnp.arange(self._A, dtype=page_mat.dtype)
+                * self.num_pages)[:, None, None]
+        mats = jnp.where(page_mat[None] < self.num_pages,
+                         page_mat[None] + offs,
+                         self._A * self.num_pages)
+        ar = dict(cache["arena"])
+        for name in ("k", "v", "kv_pos"):
+            tail_shape = ((ps, cfg.num_kv_heads, cfg.head_dim)
+                          if name != "kv_pos" else (ps,))
+            stacked = jnp.stack([
+                jax.lax.dynamic_slice_in_dim(
+                    rows[i][name], lo, nw * ps, axis=1
+                ).reshape((G, nw) + tail_shape)
+                for i in self._ranks])
+            ar[name] = ar[name].at[mats].set(stacked, mode="drop")
+        return dict(cache, arena=ar)
+
+    def note_rows_written(self, page_mat: np.ndarray) -> None:
+        """Host accounting for a trace-level ``write_rows_traced``:
+        written pages need no scrub (overwritten whole) and count as
+        page writes."""
+        real = np.asarray(page_mat)
+        real = real[real < self.num_pages]
+        self._unschedule_scrub(real.ravel().tolist())
+        self.page_writes += int(real.size)
+
     def _write_fused_impl(self, cache, rows, page_mat, first_page):
         # stack the per-layer prefilled rows along a leading rank axis
         # and land them in ONE scatter per leaf, whatever the depth
@@ -656,6 +706,12 @@ class PagedPrefix:
     length: int
     host: Any = None                    # host payload when migrated out
     migrating: bool = False             # streamed migrate-out in flight
+    # host payload is int8-quantized (TransportConfig.compress): set by
+    # the store at streamed migrate-out, consulted for wire pricing and
+    # chunk decode on the way back.  Tier BUDGETS stay in raw arena
+    # bytes (capacity semantics); only link pricing and the host copy
+    # shrink.
+    wire_compress: bool = False
 
     @classmethod
     def capture(cls, engine, pages: Sequence[int], extra, length: int):
@@ -701,6 +757,7 @@ class PagedPrefix:
 
     def migrate_out(self):
         eng = self.engine
+        self.wire_compress = False      # sync path: raw pages, always
         data = eng.pool.read_pages(eng._cache, self.pages)
         self.host = {"data": data, "n": list(self.pages)}
         if self.extra is not None:
@@ -713,11 +770,8 @@ class PagedPrefix:
     def migrate_in(self):
         eng = self.engine
         pages = eng.pool.alloc(len(self.host["n"]))
-        if "pages" in self.host:        # streamed-out (per-page) format
-            data = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
-                                *self.host["pages"])
-        else:
-            data = self.host["data"]
+        # _host_chunk handles both host formats AND wire decompression
+        data = self._host_chunk(0, len(self.host["n"]))
         eng._cache = eng.pool.upload_pages(eng._cache, data, pages)
         self.pages, self.host = pages, None
         if self.extra is not None:
@@ -749,9 +803,13 @@ class PagedPrefix:
         """Move block-table slice [lo, hi) host-side and release those
         device pages immediately — they can serve live generations
         while the rest of the migration is still on the wire."""
+        from repro.distributed.compression import compress_kv_pages
+
         eng = self.engine
         ids = self._out_ids[lo:hi]
         data = eng.pool.read_pages(eng._cache, ids)
+        if self.wire_compress:
+            data = compress_kv_pages(data)
         for j in range(lo, hi):
             self._out_data[j] = self._slice_pages(data, j - lo, j - lo + 1)
         eng.pool.release(ids)
@@ -785,10 +843,16 @@ class PagedPrefix:
         return list(self._in_pages)
 
     def _host_chunk(self, lo: int, hi: int):
+        from repro.distributed.compression import decompress_kv_pages
+
         if "pages" in self.host:
-            return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
+            data = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
                                 *self.host["pages"][lo:hi])
-        return self._slice_pages(self.host["data"], lo, hi)
+        else:
+            data = self._slice_pages(self.host["data"], lo, hi)
+        if self.wire_compress:
+            data = decompress_kv_pages(data, self.engine.pool.dtype)
+        return data
 
     def fetch_chunk(self, lo: int, hi: int) -> None:
         eng = self.engine

@@ -271,6 +271,13 @@ class TransportConfig:
     bytes_per_token: int = 4096
     # streamed chunk size for paged payloads, in PAGES per transfer
     pages_per_transfer: int = 1
+    # int8-quantize streamed K/V page chunks on the wire
+    # (distributed.compression codec).  Applies to the ASYNC streamed
+    # migrate/fetch hooks only — the sync/urgent paths keep moving raw
+    # pages — and is lossy (per-page abs-max quantization), so it stays
+    # off by default: golden traces and the bitwise admission contract
+    # are pinned with it disabled.
+    compress: bool = False
     # deferred-migration AGING (ROADMAP item): the "defer" policy keeps
     # the local tier over budget until remote headroom returns — bound
     # it.  After ``defer_max_puts`` consecutive deferred puts OR
@@ -315,6 +322,10 @@ class TransportPlane:
         self.recomputes_chosen = 0       # cost model said prefill instead
         self.prefix_fetches = 0          # controller-side fork fetches
         self.prefix_fetch_s = 0.0
+        # wire compression (cfg.compress): bytes actually put on the
+        # link in compressed form, and raw-minus-wire savings
+        self.wire_bytes_compressed = 0
+        self.wire_bytes_saved = 0
 
     # ------------------------------------------------------------- timing
     def tick(self, dt: Optional[float] = None) -> None:

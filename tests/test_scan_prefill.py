@@ -1,0 +1,307 @@
+"""Scan suffix prefill + length bucketing (DESIGN.md §Scan suffix
+prefill).
+
+The admission contract: CONTINUING a stacked decode state through the
+scan-over-pattern-units prefill at ``start_pos`` equals the unit-barrier
+per-layer loop BITWISE; pow2 length bucketing (padded suffix tokens
+whose cache writes drop via ``valid_len``) changes nothing a generation
+can observe; the bucketed executables are pinned to ONE compile per
+(rows, length) bucket; and putting admission on the decode mesh under
+PREFILL_DECODE_RULES stays token-identical to the single-device engine.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import (PREFILL_DECODE_RULES, PREFILL_RULES,
+                                        project_to_decode_mesh)
+from repro.launch.mesh import make_decode_mesh
+from repro.models import schema, transformer as T
+from repro.models.layers import Runtime
+from repro.models.registry import get_smoke
+from repro.serving.engine import Engine
+
+RNG = jax.random.PRNGKey(0)
+RT_BAR = Runtime(layer_barrier=True)    # loop with scan's fusion boundaries
+RT_SCAN = Runtime(scan_layers=True)
+
+PAGED_ARCHS = ["qwen2-1.5b", "llama4-scout-17b-a16e",
+               "phi3.5-moe-42b-a6.6b", "recurrentgemma-2b", "mamba2-2.7b"]
+
+
+def _tree_equal(a, b, msg=""):
+    def leaf(x, y):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+    jax.tree.map(leaf, a, b)
+
+
+def _scan_cfg(arch):
+    cfg = dataclasses.replace(get_smoke(arch), dtype="bfloat16")
+    pat_len = len(cfg.block_pattern) if cfg.block_pattern else 1
+    if cfg.num_layers <= pat_len:               # scan needs >1 unit
+        cfg = dataclasses.replace(cfg, num_layers=2 * pat_len)
+    return cfg
+
+
+def _prompt(cfg, seed, n=10):
+    return list(np.random.RandomState(seed).randint(0, cfg.vocab_size, n))
+
+
+# ------------------------------------------ scan continuation == loop
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_scan_suffix_matches_loop_suffix(arch):
+    """Scan continuation of a prefix cache at start_pos == per-layer
+    barrier-loop suffix prefill, bitwise (bf16) on logits and every
+    cache leaf — and the pow2-PADDED variant (traced offset, traced
+    valid_len, pad tokens past m) lands the exact same caches as an
+    unpadded run under the same valid_len semantics (the engine's
+    bucket_lengths=False reference), on both paths.  S exceeds
+    recurrentgemma's local window so ring caches wrap; P is
+    page-unaligned on purpose."""
+    cfg = _scan_cfg(arch)
+    params = schema.init_params(cfg, RNG)
+    B, S, P = 2, 63, 23                         # m=40 real suffix tokens
+    m = S - P
+    mp = 64                                     # pow2 bucket of 40
+    toks = jnp.asarray(np.random.RandomState(1).randint(
+        0, cfg.vocab_size, (B, S)), jnp.int32)
+    cache = T.init_cache(cfg, B, S)
+    _, cache = T.prefill(cfg, params, toks[:, :P], cache=cache,
+                         runtime=Runtime())
+    # unpadded reference: static offset, per-layer loop (seed semantics)
+    lg_ref, cache_ref = jax.jit(lambda p, t, c: T.prefill(
+        cfg, p, t, cache=c, start_pos=P, runtime=RT_BAR))(
+            params, toks[:, P:], cache)
+    # scan continuation, unpadded: one executable, traced offset
+    sparams = T.stack_params(cfg, params)
+    state = T.stack_decode_state(cfg, cache)
+    lg_s, state_s = jax.jit(lambda p, t, c, sp: T.prefill(
+        cfg, p, t, cache=c, start_pos=sp, runtime=RT_SCAN))(
+            sparams, toks[:, P:], state, jnp.int32(P))
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_ref),
+                                  err_msg=f"{arch} logits")
+    _tree_equal(list(cache_ref), T.unstack_decode_state(cfg, state_s),
+                msg=f"{arch} scan cache")
+    # pow2-padded bucket: pad tokens are zeros, valid_len drops their
+    # writes — final-token logits are pad garbage (ignored), but the
+    # caches must come out IDENTICAL to the unpadded valid_len run on
+    # both paths (valid_len pins the recurrence bracketing and the SSD
+    # chunk grid, so the bucket width is unobservable)
+    padded = jnp.zeros((B, mp), jnp.int32).at[:, :m].set(toks[:, P:])
+    sp, vl = jnp.int32(P), jnp.int32(m)
+    loop_v = jax.jit(lambda p, t, c, sp, vl: T.prefill(
+        cfg, p, t, cache=c, start_pos=sp, valid_len=vl, runtime=RT_BAR))
+    _, cache_rv = loop_v(params, toks[:, P:], cache, sp, vl)
+    _, cache_lp = loop_v(params, padded, cache, sp, vl)
+    _, state_sp = jax.jit(lambda p, t, c, sp, vl: T.prefill(
+        cfg, p, t, cache=c, start_pos=sp, valid_len=vl,
+        runtime=RT_SCAN))(sparams, padded, state, sp, vl)
+    _tree_equal(list(cache_lp), list(cache_rv),
+                msg=f"{arch} padded loop cache")
+    _tree_equal(list(cache_lp), T.unstack_decode_state(cfg, state_sp),
+                msg=f"{arch} padded scan cache")
+
+
+# --------------------------- continuation + decode == forward (strict)
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_scan_suffix_then_decode_matches_forward(arch):
+    """Fresh scan prefill of [0,P) -> stacked state -> scan suffix
+    CONTINUATION of [P,S-1) -> one scan decode step reproduces the scan
+    forward's last-token logits exactly.  MoE capacity drops are
+    sequence-composition-dependent, so they are disabled exactly as the
+    seed invariant test does; P exceeds the local window so ring caches
+    keep their full width through state_from_scan_prefill."""
+    cfg = _scan_cfg(arch)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.num_experts))
+    params = schema.init_params(cfg, RNG)
+    B, S, P = 2, 40, 33                         # P > local_window(32)
+    toks = jnp.asarray(np.random.RandomState(3).randint(
+        0, cfg.vocab_size, (B, S)), jnp.int32)
+    full, _ = jax.jit(lambda p, t: T.forward(
+        cfg, p, t, runtime=RT_SCAN))(params, toks)
+    _, pc = jax.jit(lambda p, t: T.prefill(
+        cfg, p, t, runtime=RT_SCAN))(params, toks[:, :P])
+    state = T.state_from_scan_prefill(cfg, pc, max_len=S)
+    sparams = T.stack_params(cfg, params)
+    # no valid_len: the unpadded continuation stays on forward's
+    # associative-recurrence/auto-chunk path, which is what the
+    # forward run it must match bitwise uses
+    _, state = jax.jit(lambda p, t, c, sp: T.prefill(
+        cfg, p, t, cache=c, start_pos=sp, runtime=RT_SCAN))(
+            sparams, toks[:, P:S - 1], state, jnp.int32(P))
+    lg, _ = jax.jit(lambda p, t, c: T.decode_step(
+        cfg, p, t, c, jnp.int32(S - 1), RT_SCAN))(
+            sparams, toks[:, S - 1:S], state)
+    np.testing.assert_array_equal(np.asarray(lg),
+                                  np.asarray(full[:, -1]), err_msg=arch)
+
+
+# ------------------------------------------- engine: bucketed == exact
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "recurrentgemma-2b"])
+def test_engine_bucketed_matches_unpadded(arch):
+    """pow2 length bucketing (the default) emits token-for-token what
+    the unpadded exact-length engine emits — loop and scan runtimes,
+    through odd prompt lengths AND a partial prefix-store hit whose
+    suffix starts at a page-unaligned offset.  The loop engine runs
+    with the unit-barrier runtime: the cross-runtime assert (loop ==
+    scan) is the bitwise contract, which only the barrier loop
+    carries."""
+    cfg = get_smoke(arch)
+    params = schema.init_params(cfg, RNG)
+    outs = {}
+    for rt_name, rt in (("loop", RT_BAR), ("scan", RT_SCAN)):
+        for bucket in (True, False):
+            eng = Engine(cfg, params, rt, max_len=64, max_batch=4,
+                         bucket_lengths=bucket)
+            gids = [eng.submit(_prompt(cfg, i, n), max_new_tokens=6,
+                               temperature=0.0)
+                    for i, n in enumerate((9, 12, 15))]
+            out = eng.run_all()
+            # extend gen 0's full transcript: partial hit at an
+            # unaligned clen, short real suffix in an 8-token bucket
+            p1 = list(eng.generation(gids[0]).tokens) + \
+                _prompt(cfg, 9, 6)
+            g1 = eng.submit(p1, max_new_tokens=4, temperature=0.0)
+            outs[(rt_name, bucket)] = ([out[g] for g in gids],
+                                       eng.run(g1))
+    for rt_name in ("loop", "scan"):
+        assert outs[(rt_name, True)] == outs[(rt_name, False)], rt_name
+    assert outs[("loop", True)] == outs[("scan", True)]
+
+
+def test_prefill_bucket_retrace_guard():
+    """One compiled suffix-prefill executable per (rows, length) bucket
+    serves every admission shape that maps into it — distinct prompt
+    lengths, batched same-length groups, and an unaligned partial-hit
+    suffix all reuse their bucket's executable without retracing."""
+    cfg = get_smoke("qwen2-1.5b")
+    params = schema.init_params(cfg, RNG)
+    for rt in (Runtime(), RT_SCAN):
+        eng = Engine(cfg, params, rt, max_len=64, max_batch=8)
+        gids = [eng.submit(_prompt(cfg, i, n), max_new_tokens=4,
+                           temperature=0.0)
+                for i, n in enumerate((6, 7, 9))]   # m=5,6,8 -> bucket 8
+        for i in range(2):                          # batched group G=2
+            eng.submit(_prompt(cfg, 10 + i, 8), max_new_tokens=4,
+                       temperature=0.0)
+        eng.run_all()
+        # partial hit at gen 0's stored transcript: suffix still in
+        # the 8-token bucket
+        p1 = list(eng.generation(gids[0]).tokens) + _prompt(cfg, 20, 6)
+        eng.run(eng.submit(p1, max_new_tokens=3, temperature=0.0))
+        # buckets seen: (1 row, 8 toks) and (2 rows, 8 toks)
+        assert sorted(eng._prefills) == [(1, 8), (2, 8)], rt
+        assert eng.prefill_retraces == 0, rt
+        assert eng.suffix_prefill_dispatches == 5, rt
+        assert eng.admission_dispatches_saved == 1, rt
+
+
+# ---------------------------------------------------- rules projection
+def test_prefill_decode_rules_projection():
+    """Admission on the decode mesh keeps only the bitwise-safe
+    data-movement axes: suffix rows over 'data', arena pages over
+    'model', weights stationary; every contraction axis (incl.
+    PREFILL_RULES' sequence parallelism) replicates."""
+    assert PREFILL_DECODE_RULES == project_to_decode_mesh(PREFILL_RULES)
+    assert PREFILL_DECODE_RULES["act_batch"] == "data"
+    assert PREFILL_DECODE_RULES["kv_pages"] == "model"
+    assert PREFILL_DECODE_RULES["param_use"] == "keep"
+    for k, v in PREFILL_DECODE_RULES.items():
+        if k not in ("act_batch", "kv_pages", "param_use"):
+            assert v is None, k
+    assert set(PREFILL_DECODE_RULES) >= set(PREFILL_RULES)
+
+
+# ----------------------------------------------------- mesh admission
+def _run_engine_with_rehit(cfg, params, rt, mesh):
+    eng = Engine(cfg, params, rt, max_len=64, max_batch=4, mesh=mesh)
+    gids = [eng.submit(_prompt(cfg, i, 9 + i), max_new_tokens=5,
+                       temperature=0.0) for i in range(3)]
+    out = eng.run_all()
+    p1 = list(eng.generation(gids[0]).tokens) + _prompt(cfg, 7, 6)
+    g1 = eng.submit(p1, max_new_tokens=4, temperature=0.0)
+    return [out[g] for g in gids] + [eng.run(g1)]
+
+
+@pytest.mark.parametrize("rt", [Runtime(), RT_SCAN], ids=["loop", "scan"])
+def test_mesh_bucketed_admission_1x1(rt):
+    """The degenerate 1x1 decode mesh runs the full sharded admission
+    plumbing (PREFILL_DECODE_RULES-constrained bucketed suffix prefill,
+    partial-hit rehit included) and must emit exactly the mesh=None
+    tokens."""
+    cfg = get_smoke("qwen2-1.5b")
+    params = schema.init_params(cfg, RNG)
+    base = _run_engine_with_rehit(cfg, params, rt, mesh=None)
+    meshed = _run_engine_with_rehit(cfg, params, rt,
+                                    mesh=make_decode_mesh(1, 1))
+    assert meshed == base
+
+
+@pytest.mark.parametrize("shape", [(2, 1), (8, 1), (4, 2)])
+@pytest.mark.parametrize("rt", [Runtime(), RT_SCAN], ids=["loop", "scan"])
+def test_mesh_bucketed_admission_multi_device(shape, rt):
+    need = shape[0] * shape[1]
+    if jax.device_count() < need:
+        pytest.skip(f"needs {need} devices (forced-host CI leg)")
+    cfg = get_smoke("qwen2-1.5b")
+    params = schema.init_params(cfg, RNG)
+    base = _run_engine_with_rehit(cfg, params, rt, mesh=None)
+    meshed = _run_engine_with_rehit(cfg, params, rt,
+                                    mesh=make_decode_mesh(*shape))
+    assert meshed == base, shape
+
+
+_SUBPROC = r"""
+import jax, numpy as np
+assert jax.device_count() == 8, jax.device_count()
+from repro.models import schema
+from repro.models.layers import Runtime
+from repro.models.registry import get_smoke
+from repro.launch.mesh import make_decode_mesh
+from repro.serving.engine import Engine
+
+cfg = get_smoke("qwen2-1.5b")
+params = schema.init_params(cfg, jax.random.PRNGKey(0))
+
+def prompt(seed, n):
+    return list(np.random.RandomState(seed).randint(0, cfg.vocab_size, n))
+
+def run(mesh):
+    eng = Engine(cfg, params, Runtime(scan_layers=True), max_len=64,
+                 max_batch=4, mesh=mesh)
+    gids = [eng.submit(prompt(i, 9 + i), max_new_tokens=5,
+                       temperature=0.0) for i in range(2)]
+    out = eng.run_all()
+    p1 = list(eng.generation(gids[0]).tokens) + prompt(7, 6)
+    g1 = eng.submit(p1, max_new_tokens=4, temperature=0.0)
+    assert eng.prefill_retraces == 0
+    return [out[g] for g in gids] + [eng.run(g1)]
+
+assert run(make_decode_mesh(8, 1)) == run(None)
+print("OK")
+"""
+
+
+def test_8way_suffix_admission_in_forced_subprocess():
+    """Force 8 host devices in a fresh process: 8x1 scan-engine bucketed
+    admission (partial-hit suffix included) matches mesh=None token for
+    token, with zero prefill retraces."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                       capture_output=True, text=True, timeout=540,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
