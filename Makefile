@@ -13,7 +13,9 @@
 #                  on reduced grids,
 #                  then writes the machine-readable BENCH_e2e.json
 #                  (composed-trace makespan, per-plane breakdown,
-#                  feedback latency) at the repo root
+#                  feedback latency + registry percentiles) and the
+#                  engine-backed pool's Perfetto span trace
+#                  (BENCH_perfetto.json) at the repo root
 #   make smoke-real - real-eval deferred plane end to end: bounded
 #                  kernel_search with interpret-mode builds executing
 #                  at device dispatch; prints build-overlap AND
@@ -40,7 +42,7 @@ bench-smoke:
 	$(PY) -m benchmarks.table_paged_kernel --smoke
 	$(PY) -m benchmarks.table_decode_dispatch --smoke
 	$(PY) -m benchmarks.table_prefill_dispatch --smoke
-	$(PY) -m benchmarks.e2e_json --smoke
+	$(PY) -m benchmarks.e2e_json --smoke --perfetto-out BENCH_perfetto.json
 
 smoke-real:
 	$(PY) examples/kernel_search.py T6 3

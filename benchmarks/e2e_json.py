@@ -35,8 +35,17 @@ a trajectory consumer needs without parsing CSV tables:
 The two dispatch tables are the wall-clock-measured sections; they run
 LAST so their jax config toggling can't perturb the simulated sections.
 
+Observability rows (DESIGN.md §Observability): ``shared_pool`` carries
+``feedback_latency_p50/p99/p999`` and queue-wait / fork-depth
+percentiles straight from the virtual-clock metrics registry, plus a
+``utilization_timeline`` (per-plane busy fraction per time bucket);
+``engine_shared_pool`` gets the same timeline and its span count.
+
 ``--trace-out PATH`` additionally serializes the engine-backed pool's
-composed trace (the CI determinism job byte-diffs two runs).
+composed trace (the CI determinism job byte-diffs two runs);
+``--perfetto-out PATH`` writes the engine-backed pool's causal span
+tree as Chrome trace-event JSON (bench-smoke uploads it as an
+artifact, the determinism job byte-diffs it).
 Byte-stable output (sorted keys, fixed float rounding) so two runs of
 the same commit produce identical files — except ``decode_dispatch``
 and ``admission_dispatch``'s timing rows, which are real timing (the
@@ -52,7 +61,10 @@ import sys
 from benchmarks._data import SEED, T10
 from benchmarks.table_async_overlap import feedback_latency
 from benchmarks.table_remote_kv import run_pool
-from repro.core.trace import (dump_trace, plane_breakdown,
+from repro.core.metrics import utilization_timeline
+from repro.core.perfetto import dump_perfetto
+from repro.core.spans import unclosed_spans
+from repro.core.trace import (dump_trace, makespan, plane_breakdown,
                               unclosed_generations)
 from repro.search.driver import run_shared_pool
 
@@ -78,14 +90,31 @@ def build(smoke: bool = False) -> dict:
     }
 
     tasks = T10[:3] if smoke else T10
+    ndev = 4 if smoke else 10
     sched, ctls = run_shared_pool(
         tasks, model="glm", iterations=10 if smoke else 100,
-        devices=4 if smoke else 10, seed=SEED, trace=True)
+        devices=ndev, seed=SEED, trace=True, spans=True, metrics=True)
     sbd = plane_breakdown(sched.loop.trace)
+    # percentiles come from the metrics registry (§Observability):
+    # virtual-clock histograms, byte-deterministic
+    fb = sched.loop.metrics.get_histogram("feedback_latency")
+    qw = sched.loop.metrics.get_histogram("queue_wait")
+    fd = sched.loop.metrics.get_histogram("fork_depth")
+    sut = utilization_timeline(sched.loop.trace, ndev,
+                               makespan(sched.loop.trace))
     shared_pool = {
         "makespan_s": _r(sched.loop.now),
         "planes_busy_s": {k: _r(v) for k, v in sbd.items()},
         "feedback_latency_s": _r(feedback_latency(sched)),
+        "feedback_latency_p50": _r(fb.percentile(0.50)),
+        "feedback_latency_p99": _r(fb.percentile(0.99)),
+        "feedback_latency_p999": _r(fb.percentile(0.999)),
+        "queue_wait_p50": _r(qw.percentile(0.50)),
+        "queue_wait_p99": _r(qw.percentile(0.99)),
+        "fork_depth_p50": _r(fd.percentile(0.50)),
+        "fork_depth_p99": _r(fd.percentile(0.99)),
+        "utilization_timeline": {k: [_r(f) for f in v]
+                                 for k, v in sut.items()},
         "early_terminations": sum(c.result.early_terminations
                                   for c in ctls),
         "utilization_any": _r(sched.utilization_any()),
@@ -96,14 +125,26 @@ def build(smoke: bool = False) -> dict:
     etasks = T10[:2] if smoke else T10[:4]
     esched, ectls = run_shared_pool(
         etasks, model="glm", iterations=2 if smoke else 3,
-        devices=4, seed=SEED, trace=True, llm="engine")
+        devices=4, seed=SEED, trace=True, llm="engine",
+        spans=True, metrics=True)
     eng2 = esched.engine
     dt = esched.transport.cfg.decode_step_s
     gbd = plane_breakdown(esched.loop.trace, dt)
     assert not unclosed_generations(esched.loop.trace)
+    # the loop stops the instant every controller finishes; in-flight
+    # step/park spans are "time stopped", not leaks — close them at the
+    # frozen clock so the span audit (and the Perfetto export) is total
+    eng2.close_open_spans()
+    assert not unclosed_spans(esched.loop.spans)
+    eut = utilization_timeline(esched.loop.trace, 4,
+                               makespan(esched.loop.trace),
+                               decode_step_s=dt)
     engine_shared_pool = {
         "makespan_s": _r(esched.loop.now),
         "planes_busy_s": {k: _r(v) for k, v in gbd.items()},
+        "utilization_timeline": {k: [_r(f) for f in v]
+                                 for k, v in eut.items()},
+        "span_count": len(esched.loop.spans.spans),
         "engine_forks": sum(c.gen.forks for c in ectls),
         "pages_shared": eng2.store.stats.pages_shared,
         "tokens_decoded": eng2.tokens_decoded,
@@ -133,15 +174,22 @@ def build(smoke: bool = False) -> dict:
             "engine_shared_pool": engine_shared_pool,
             "decode_dispatch": decode_dispatch,
             "admission_dispatch": admission_dispatch, "smoke": smoke,
-            "_engine_shared_trace": esched.loop.trace}
+            "_engine_shared_trace": esched.loop.trace,
+            "_engine_shared_spans": esched.loop.spans.spans}
 
 
 def main() -> None:
     smoke = "--smoke" in sys.argv
     data = build(smoke=smoke)
     etrace = data.pop("_engine_shared_trace")
+    espans = data.pop("_engine_shared_spans")
     if "--trace-out" in sys.argv:
         dump_trace(etrace, sys.argv[sys.argv.index("--trace-out") + 1])
+    if "--perfetto-out" in sys.argv:
+        # chrome://tracing / ui.perfetto.dev loadable span tree of the
+        # engine-backed pool; byte-deterministic (CI diffs two runs)
+        dump_perfetto(espans,
+                      sys.argv[sys.argv.index("--perfetto-out") + 1])
     out = ROOT / "BENCH_e2e.json"
     out.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
     print(f"wrote {out}")

@@ -18,12 +18,25 @@ means no event-ordering perturbation between equivalent runs).
 ``(t, plane, event, tag)`` records via ``record()``, producing the one
 trace end-to-end benchmarks derive makespan and per-plane breakdowns
 from (``core.trace`` has the helpers).
+
+Two further observability planes ride the same loop (DESIGN.md
+§Observability), both ALWAYS present but disabled by default so
+instrumented call sites never branch: ``loop.spans`` (a
+``SpanRecorder`` — the causal span tree over the raw trace, enabled by
+``enable_spans()``) and ``loop.metrics`` (a ``MetricsRegistry`` —
+counters/gauges/histograms sampled on the virtual clock, enabled by
+``enable_metrics()``).  Neither schedules events, records trace lines,
+or consumes randomness: enabling them cannot perturb the byte-pinned
+golden traces.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 from typing import Any, Callable, List, Optional
+
+from .metrics import MetricsRegistry
+from .spans import SpanRecorder
 
 
 class Future:
@@ -93,11 +106,21 @@ class EventLoop:
         # per-plane breakdowns come from a single trace.  None (the
         # default) disables recording; enable_trace() opts a run in.
         self.trace: Optional[List[tuple]] = None
+        # causal spans + metrics (DESIGN.md §Observability): inert
+        # until enable_spans()/enable_metrics() opts a run in
+        self.spans = SpanRecorder(self)
+        self.metrics = MetricsRegistry(self)
 
     def enable_trace(self) -> List[tuple]:
         if self.trace is None:
             self.trace = []
         return self.trace
+
+    def enable_spans(self) -> SpanRecorder:
+        return self.spans.enable()
+
+    def enable_metrics(self) -> MetricsRegistry:
+        return self.metrics.enable()
 
     def record(self, plane: str, event: str, tag: str = "") -> None:
         if self.trace is not None:

@@ -34,6 +34,7 @@ import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
 from repro.core.clock import EventLoop
+from repro.core.metrics import COUNT_BOUNDS as _COUNT_BOUNDS
 from repro.core.scheduler import ElasticScheduler
 from repro.core.termination import get_criterion
 from repro.core.triggers import StreamTriggerParser
@@ -301,6 +302,10 @@ class SpecController:
         self._early_terms = 0
         self._feedback_total = 0
         self._t0 = self.loop.now
+        # causal root (§Observability): everything this workflow causes
+        # — generations, forks, evals, transfers — parents up to here
+        self._wspan = self.loop.spans.begin(
+            "gen", "workflow", f"{self.name}:{task_id}")
         # schedule the first iteration as an event so multiple controllers
         # can be started before the loop runs
         self.loop.schedule(0.0, lambda: self._begin_iteration(0))
@@ -324,6 +329,14 @@ class SpecController:
             "spec_live": 0, "spec_handles": [], "probe_events": [],
             "fallback_pending": False, "best": None,
             "t_gen_start": self.loop.now,
+            # causal spans: the reasoning-generation span (closed with
+            # the ("gen","end") record by _close_gen) and the sids of
+            # forks still in flight (closed at spec-done, or with
+            # status "cancel" when the iteration tears them down)
+            "span": self.loop.spans.begin("gen", "gen",
+                                          f"{self.name}:{it}",
+                                          parent=self._wspan),
+            "fork_open": [],
         }
 
         def on_chunk(text):
@@ -352,9 +365,13 @@ class SpecController:
             else:
                 self._maybe_finish(state)
 
+        # the backend parents whatever it opens (the engine backend's
+        # decode row) under this iteration's gen span via the cursor
+        self.loop.spans.push_parent(state["span"])
         state["handle"] = self.gen.begin_reasoning(
             task_id, it, ctx, on_chunk=on_chunk,
             on_done=on_reason_complete)
+        self.loop.spans.pop_parent()
 
         # idle-fork probe (Alg 1 line 7: "... or GPU is idle")
         if self.cfg.enable_speculation and self.cfg.idle_fork:
@@ -393,13 +410,27 @@ class SpecController:
             return
         it, rec = state["it"], state["rec"]
         for _ in range(k):
+            # fork span opens BEFORE the backend call so the engine
+            # backend's forked decode row parents under it; a declined
+            # fork closes it immediately with status "declined".  The
+            # .get() fallbacks (here and below) tolerate the minimal
+            # hand-built states tests drive _fork with directly.
+            fork_sid = self.loop.spans.begin(
+                "gen", "fork", f"{self.name}:{it}",
+                parent=state.get("span", -1))
+            self.loop.spans.push_parent(fork_sid)
             h = self.gen.fork(self._task_id, it, self._ctx, frac)
+            self.loop.spans.pop_parent()
             if h is None:
                 # the serving substrate declined (no free slot / parent
                 # not decoding) — skip this speculative slot
+                self.loop.spans.end(fork_sid, status="declined")
                 continue
             state["spec_live"] += 1
+            state.setdefault("fork_open", []).append(fork_sid)
             self.loop.record("gen", "fork", f"{self.name}:{it}")
+            self.loop.metrics.histogram("fork_depth", _COUNT_BOUNDS) \
+                .observe(float(state["spec_live"]))
             self._mark_gen(state)
             # prefix-cache accounting (paper §6.2.3): fork prompt KV is
             # shared with the live reasoning generation; without the
@@ -418,8 +449,10 @@ class SpecController:
                     # available only once the prefix KV has ACTUALLY
                     # landed — the queued completion below, not the
                     # queue-free estimate.
+                    self.loop.spans.push_parent(fork_sid)
                     _lat, xfer = self.transport.prefix_fetch(
                         h.prompt_tokens, tag=f"prefix-{self.name}")
+                    self.loop.spans.pop_parent()
                     self._fetch["n"] += 1
 
                     def account(_f, x=xfer):
@@ -430,7 +463,7 @@ class SpecController:
                 rec.spec_tokens += h.prompt_tokens
                 extra_delay = h.prompt_tokens / 2500.0
 
-            def on_spec_done(tokens, candidate, x=xfer):
+            def on_spec_done(tokens, candidate, x=xfer, sid=fork_sid):
                 if x is not None and not x.done and \
                         not (state["done"] or state["terminated"]):
                     # the generation finished but its prefix KV is still
@@ -443,6 +476,9 @@ class SpecController:
                         else on_spec_done(tokens, candidate, None))
                     return
                 state["spec_live"] -= 1
+                if sid in state.get("fork_open", ()):
+                    state["fork_open"].remove(sid)
+                    self.loop.spans.end(sid)
                 self._mark_gen(state)
                 if state["done"] or state["terminated"]:
                     return
@@ -468,6 +504,12 @@ class SpecController:
         req = fut.request
         req.owner = self.name
         req.priority = PRIO_FALLBACK if fallback else PRIO_SPEC
+        # eval span: open at SUBMIT (queue wait is part of the span);
+        # the scheduler closes it at complete or abort — either path,
+        # including queued-at-iteration-boundary aborts
+        req.span = self.loop.spans.begin(
+            "eval", "eval", f"validation:{self.name}",
+            parent=state.get("span", -1))
 
         def done(f: EvalFuture):
             if state["done"]:
@@ -490,6 +532,9 @@ class SpecController:
         req = fut.request
         req.owner = self.name
         req.priority = PRIO_FALLBACK if fallback else PRIO_SPEC
+        req.span = self.loop.spans.begin(
+            "eval", "eval", f"profiling:{self.name}",
+            parent=state.get("span", -1))
 
         def done(f: EvalFuture):
             if state["done"]:
@@ -533,6 +578,7 @@ class SpecController:
             h.cancel()
         for ev in state["probe_events"]:
             ev.cancel()
+        self._close_forks(state, status="cancel")
         self._finish_iteration(state)
 
     def _maybe_finish(self, state) -> None:
@@ -540,7 +586,16 @@ class SpecController:
                 and not state["done"]:
             for h in state["spec_handles"]:
                 h.cancel()
+            self._close_forks(state, status="cancel")
             self._finish_iteration(state)
+
+    def _close_forks(self, state, status: str) -> None:
+        """Close every fork span still open when the iteration tears
+        its speculative generations down — the cancel half of the
+        every-span-closes invariant."""
+        for sid in state.get("fork_open", ()):
+            self.loop.spans.end(sid, status=status)
+        state["fork_open"] = []
 
     def _close_gen(self, state, tag: str) -> None:
         """Close this iteration's "gen" span exactly once.  Termination
@@ -553,6 +608,8 @@ class SpecController:
             return
         state["gen_closed"] = True
         self.loop.record("gen", "end", tag)
+        self.loop.spans.end(state.get("span", -1),
+                            status="term" if state["terminated"] else "ok")
 
     def _finish_iteration(self, state) -> None:
         state["done"] = True
@@ -572,6 +629,7 @@ class SpecController:
 
     def _finalize(self) -> None:
         self.done = True
+        self.loop.spans.end(self._wspan)
         self.result = TaskResult(
             task_id=self._task_id, records=self._records,
             best_speedup=self._best_speedup, best_candidate=self._best,

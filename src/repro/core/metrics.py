@@ -1,0 +1,262 @@
+"""Virtual-clock metrics registry (DESIGN.md §Observability).
+
+Counters, gauges and fixed-bucket histograms, all sampled on the
+VIRTUAL clock — never wall time — so a registry snapshot is as
+byte-deterministic as the composed trace it rides beside, and
+`BENCH_e2e.json` rows sourced from it byte-compare run-to-run in CI.
+
+Like ``SpanRecorder``, a ``MetricsRegistry`` is always present on an
+``EventLoop`` but disabled by default: instrumentation sites call
+``loop.metrics.counter(...)`` / ``.observe(...)`` unconditionally, and
+a disabled registry hands back shared inert null instruments so the
+golden paths pay one attribute load and a truthiness test, nothing
+more.  Enabling a registry schedules NO loop events and consumes NO
+randomness.
+
+Histograms are Prometheus-style fixed-bound cumulative buckets with
+linear-interpolation percentiles — deterministic because bounds are
+fixed up front and observations only bump integer counts.  Percentile
+queries interpolate within the winning bucket (last bucket clamps to
+its lower bound), matching how promql's ``histogram_quantile`` reads.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Default bounds (virtual seconds) for latency-flavored histograms:
+# roughly log-spaced over the simulated regimes the benchmarks hit.
+LATENCY_BOUNDS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
+                  500.0, 1000.0, 2000.0, 5000.0)
+# Small-integer bounds for depth/count-flavored histograms.
+COUNT_BOUNDS = (0.0, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 32.0)
+
+
+class Counter:
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        self.value += amount
+
+
+class Gauge:
+    """Gauge with a timestamped sample series (virtual-clock seconds).
+
+    ``set`` records ``(t, value)`` so occupancy (e.g. pagepool pages in
+    use) is a TIMELINE, not just a last-write — the Perfetto counter
+    track and the utilization-timeline bench rows read the series."""
+    __slots__ = ("name", "value", "samples", "_loop")
+
+    def __init__(self, name: str, loop=None):
+        self.name = name
+        self.value = 0.0
+        self.samples: List[Tuple[float, float]] = []
+        self._loop = loop
+
+    def set(self, value: float) -> None:
+        self.value = value
+        t = self._loop.now if self._loop is not None else 0.0
+        # Collapse same-timestamp rewrites to the final value so the
+        # series is a function of time (byte-stable under re-sampling).
+        if self.samples and self.samples[-1][0] == t:
+            self.samples[-1] = (t, value)
+        else:
+            self.samples.append((t, value))
+
+
+class Histogram:
+    """Fixed-bound cumulative-bucket histogram (le semantics)."""
+    __slots__ = ("name", "bounds", "counts", "total", "sum")
+
+    def __init__(self, name: str, bounds: Sequence[float] = LATENCY_BOUNDS):
+        self.name = name
+        self.bounds = tuple(bounds)   # finite upper bounds; +inf implied
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.total = 0
+        self.sum = 0.0
+
+    def observe(self, value: float) -> None:
+        lo, hi = 0, len(self.bounds)
+        while lo < hi:                      # first bound >= value
+            mid = (lo + hi) // 2
+            if value <= self.bounds[mid]:
+                hi = mid
+            else:
+                lo = mid + 1
+        self.counts[lo] += 1
+        self.total += 1
+        self.sum += value
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.total if self.total else 0.0
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 1].  Linear interpolation inside the winning bucket;
+        the overflow bucket clamps to its lower bound (promql-style)."""
+        if not self.total:
+            return 0.0
+        rank = q * self.total
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if not c:
+                continue
+            prev_cum = cum
+            cum += c
+            if cum >= rank:
+                if i == len(self.bounds):      # +inf bucket
+                    return self.bounds[-1] if self.bounds else 0.0
+                lower = self.bounds[i - 1] if i else 0.0
+                upper = self.bounds[i]
+                frac = (rank - prev_cum) / c
+                return lower + (upper - lower) * frac
+        return self.bounds[-1] if self.bounds else 0.0
+
+
+class _NullCounter:
+    __slots__ = ()
+    name = ""
+    value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        pass
+
+
+class _NullGauge:
+    __slots__ = ()
+    name = ""
+    value = 0.0
+    samples: List[Tuple[float, float]] = []
+
+    def set(self, value: float) -> None:
+        pass
+
+
+class _NullHistogram:
+    __slots__ = ()
+    name = ""
+    bounds: Tuple[float, ...] = ()
+    total = 0
+    sum = 0.0
+    mean = 0.0
+
+    def observe(self, value: float) -> None:
+        pass
+
+    def percentile(self, q: float) -> float:
+        return 0.0
+
+
+_NULL_COUNTER = _NullCounter()
+_NULL_GAUGE = _NullGauge()
+_NULL_HISTOGRAM = _NullHistogram()
+
+
+class MetricsRegistry:
+    """Named-instrument registry attached to one EventLoop
+    (``loop.metrics``).  Disabled registries hand out shared null
+    instruments; instruments are created on first use and keep
+    creation order for the byte-stable ``snapshot()``."""
+
+    def __init__(self, loop=None):
+        self._loop = loop
+        self.enabled = False
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def enable(self) -> "MetricsRegistry":
+        self.enabled = True
+        return self
+
+    def counter(self, name: str) -> Counter:
+        if not self.enabled:
+            return _NULL_COUNTER
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter(name)
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        if not self.enabled:
+            return _NULL_GAUGE
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge(name, self._loop)
+        return g
+
+    def histogram(self, name: str,
+                  bounds: Sequence[float] = LATENCY_BOUNDS) -> Histogram:
+        if not self.enabled:
+            return _NULL_HISTOGRAM
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram(name, bounds)
+        return h
+
+    def get_histogram(self, name: str) -> Optional[Histogram]:
+        return self._histograms.get(name)
+
+    def get_gauge(self, name: str) -> Optional[Gauge]:
+        return self._gauges.get(name)
+
+    def snapshot(self) -> Dict[str, object]:
+        """Byte-stable dict (sorted names, plain floats/ints) suitable
+        for ``json.dumps(..., sort_keys=True)``."""
+        out: Dict[str, object] = {}
+        for name in sorted(self._counters):
+            out[f"counter/{name}"] = self._counters[name].value
+        for name in sorted(self._gauges):
+            g = self._gauges[name]
+            out[f"gauge/{name}"] = g.value
+            out[f"gauge/{name}/samples"] = len(g.samples)
+        for name in sorted(self._histograms):
+            h = self._histograms[name]
+            out[f"hist/{name}/count"] = h.total
+            out[f"hist/{name}/sum"] = h.sum
+            out[f"hist/{name}/p50"] = h.percentile(0.50)
+            out[f"hist/{name}/p99"] = h.percentile(0.99)
+            out[f"hist/{name}/p999"] = h.percentile(0.999)
+        return out
+
+
+def utilization_timeline(trace, devices: int, makespan: float,
+                         buckets: int = 10,
+                         decode_step_s: float = 0.0) -> Dict[str, List[float]]:
+    """Per-plane busy-fraction per time bucket from the composed trace.
+
+    Splits ``[0, makespan]`` into ``buckets`` equal windows and
+    attributes each plane's busy intervals (same open/close pairing as
+    ``plane_breakdown``, shared via ``plane_intervals``) across the
+    windows pro-rata.  Returns ``{plane: [fraction, ...]}`` with
+    fractions normalized by window width (validation/profiling
+    additionally by device count so a fully-busy pool reads 1.0)."""
+    from .trace import plane_intervals
+
+    if makespan <= 0.0 or buckets <= 0:
+        return {}
+    width = makespan / buckets
+    intervals = plane_intervals(trace, decode_step_s=decode_step_s,
+                                end=makespan)
+    out: Dict[str, List[float]] = {}
+    for plane in sorted(intervals):
+        frac = [0.0] * buckets
+        for (t0, t1) in intervals[plane]:
+            t0 = max(0.0, min(t0, makespan))
+            t1 = max(0.0, min(t1, makespan))
+            if t1 <= t0:
+                continue
+            b0 = min(int(t0 / width), buckets - 1)
+            b1 = min(int(t1 / width), buckets - 1)
+            for b in range(b0, b1 + 1):
+                w0, w1 = b * width, (b + 1) * width
+                frac[b] += max(0.0, min(t1, w1) - max(t0, w0))
+        # validation/profiling intervals overlap across the device pool:
+        # normalize by device count so a fully-busy pool reads 1.0
+        pooled = plane in ("validation", "profiling") and devices > 0
+        scale = width * (devices if pooled else 1)
+        out[plane] = [f / scale for f in frac]
+    return out

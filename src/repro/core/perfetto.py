@@ -1,0 +1,86 @@
+"""Chrome trace-event / Perfetto JSON export of the causal span tree
+(DESIGN.md §Observability).
+
+``perfetto_trace(spans)`` renders a ``SpanRecorder``'s spans as a
+Chrome trace-event JSON object loadable in ``chrome://tracing`` or
+https://ui.perfetto.dev:
+
+  * one *track* (pid=1, tid) per ``plane/kind`` pair — e.g. the
+    ``eval/exec`` track shows device-execution intervals, ``gen/gen``
+    the reasoning generations — with a ``thread_name`` metadata event
+    naming it;
+  * one complete event (``ph: "X"``) per closed span, ``ts``/``dur``
+    in integer microseconds of VIRTUAL time (the virtual clock ticks in
+    seconds, so ``us = round(t * 1e6)`` is exact for the event grid the
+    simulator produces);
+  * a *flow arrow* (``ph: "s"`` -> ``ph: "f"``) along every causal
+    parent edge that crosses tracks, so clicking a fork shows the
+    transfer and eval work it caused.
+
+The export is a pure function of the span list — no wall time, no ids
+beyond the deterministic sids — so two runs of a deterministic pool
+serialize to byte-identical JSON (the determinism CI job cmp's them)
+and the bench-smoke job can upload the file as a stable artifact.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from .spans import SpanRecorder
+
+
+def _us(t: float) -> int:
+    return int(round(t * 1e6))
+
+
+def perfetto_trace(spans) -> Dict[str, object]:
+    """Build the trace-event dict (see module docstring).  Accepts a
+    SpanRecorder or a plain span list; open spans are skipped (exports
+    happen after the run, when the no-unclosed-spans audit holds)."""
+    if isinstance(spans, SpanRecorder):
+        spans = spans.spans
+    spans = [s for s in (spans or []) if not s.open]
+
+    # Deterministic track table: plane/kind pairs in sorted order.
+    tracks = sorted({(s.plane, s.kind) for s in spans})
+    tid_of = {pk: i + 1 for i, pk in enumerate(tracks)}
+    events: List[Dict[str, object]] = [
+        {"ph": "M", "pid": 1, "tid": tid_of[pk], "name": "thread_name",
+         "args": {"name": f"{pk[0]}/{pk[1]}"}}
+        for pk in tracks]
+
+    by_sid = {s.sid: s for s in spans}
+    for s in spans:                      # sid order = recording order
+        tid = tid_of[(s.plane, s.kind)]
+        events.append({
+            "ph": "X", "pid": 1, "tid": tid,
+            "ts": _us(s.t0), "dur": _us(s.t1) - _us(s.t0),
+            "name": s.kind, "cat": s.plane,
+            "args": {"tag": s.tag, "sid": s.sid, "parent": s.parent,
+                     "status": s.status},
+        })
+        parent = by_sid.get(s.parent)
+        if parent is None or (parent.plane, parent.kind) == (s.plane, s.kind):
+            continue            # same-track nesting needs no arrow
+        # Flow arrow parent -> child, id = child sid (unique).
+        events.append({
+            "ph": "s", "pid": 1, "tid": tid_of[(parent.plane, parent.kind)],
+            "ts": _us(max(parent.t0, min(s.t0, parent.t1))),
+            "name": "causes", "cat": "flow", "id": s.sid})
+        events.append({
+            "ph": "f", "pid": 1, "tid": tid, "ts": _us(s.t0), "bp": "e",
+            "name": "causes", "cat": "flow", "id": s.sid})
+
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def format_perfetto(spans) -> str:
+    """Byte-stable JSON text (sorted keys, no wall-time fields)."""
+    return json.dumps(perfetto_trace(spans), sort_keys=True,
+                      separators=(",", ":")) + "\n"
+
+
+def dump_perfetto(spans, path) -> None:
+    with open(path, "w") as f:
+        f.write(format_perfetto(spans))

@@ -1,0 +1,207 @@
+"""Trace-driven replay + divergence bisection (DESIGN.md
+§Observability).
+
+The determinism CI job byte-compares two serialized composed traces
+(``cmp a.trace b.trace``) — which proves *that* a run diverged but not
+*where*.  This module turns the byte diff into an actionable report:
+
+  * ``parse_trace``/``load_trace`` — exact inverse of
+    ``core.trace.format_trace`` (``repr(t)`` round-trips floats, so
+    parse(format(x)) == x event-for-event);
+  * ``first_divergence(golden, fresh)`` — walk both event sequences in
+    lockstep and report the FIRST index where they disagree (changed
+    event, or one trace ending early), with the offending plane, tag
+    and virtual time;
+  * ``divergence_report`` — human-readable bisection: the diverging
+    event, a context window of the surrounding golden events, and the
+    causal ancestry reconstructed by replaying the golden prefix
+    through a ``TraceReplayer`` (which tracks which plane intervals are
+    open at every index using the same pairing rules as
+    ``plane_breakdown``).
+
+CI wiring: ``python -m repro.core.replay golden.trace fresh.trace``
+exits 0 on byte-identical traces and prints the first-divergence
+report + exits 1 otherwise, so the determinism job's failure message
+names the plane that diverged first instead of just "bytes differ".
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from .trace import TraceEvent, _pair_key
+
+_CONTEXT = 5        # golden events shown around the divergence
+
+
+def parse_trace(text: str) -> List[TraceEvent]:
+    """Inverse of ``format_trace``: one ``repr(t)\\tplane\\tevent\\ttag``
+    line per event.  Raises ValueError on malformed lines (a corrupt
+    artifact should fail loudly, not bisect nonsense)."""
+    events: List[TraceEvent] = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line:
+            continue
+        parts = line.split("\t")
+        if len(parts) != 4:
+            raise ValueError(f"line {lineno}: expected 4 tab-separated "
+                             f"fields, got {len(parts)}: {line!r}")
+        t, plane, event, tag = parts
+        events.append((float(t), plane, event, tag))
+    return events
+
+
+def load_trace(path) -> List[TraceEvent]:
+    with open(path) as f:
+        return parse_trace(f.read())
+
+
+class TraceReplayer:
+    """Replays a composed trace event-by-event, maintaining the set of
+    OPEN plane intervals (same pairing rules as ``plane_breakdown``)
+    so that at any index we can say which work was in flight — the
+    causal context the divergence report prints."""
+
+    def __init__(self):
+        self.index = 0
+        self.now = 0.0
+        self.open: Dict[Tuple[str, str], Tuple[float, int]] = {}
+        self.counts: Dict[str, int] = {}
+
+    def feed(self, ev: TraceEvent) -> None:
+        t, plane, event, tag = ev
+        self.now = t
+        self.counts[plane] = self.counts.get(plane, 0) + 1
+        key: Optional[Tuple[str, str]] = None
+        opens = closes = False
+        if plane == "transport":
+            key = ("transport", _pair_key(tag))
+            opens, closes = event == "start", event == "done"
+        elif plane == "eval" and "@" in tag:
+            kind, dev = tag.split("@", 1)
+            key = (kind, dev)
+            opens = event == "grant"
+            closes = event in ("complete", "abort")
+        elif plane == "gen":
+            key = ("gen", _pair_key(tag))
+            opens, closes = event == "start", event == "end"
+        if key is not None:
+            if opens:
+                self.open[key] = (t, self.index)
+            elif closes:
+                self.open.pop(key, None)
+        self.index += 1
+
+    def open_work(self) -> List[str]:
+        return [f"{bucket}:{k} open since t={t0!r} (event #{i})"
+                for (bucket, k), (t0, i) in sorted(self.open.items())]
+
+
+@dataclasses.dataclass
+class Divergence:
+    index: int                      # first differing event index
+    kind: str                       # "changed" | "missing" | "extra"
+    golden: Optional[TraceEvent]    # golden event at index (None=extra)
+    fresh: Optional[TraceEvent]     # fresh event at index (None=missing)
+
+    @property
+    def plane(self) -> str:
+        ev = self.golden or self.fresh
+        return ev[1] if ev else ""
+
+    @property
+    def tag(self) -> str:
+        ev = self.golden or self.fresh
+        return ev[3] if ev else ""
+
+    @property
+    def t(self) -> float:
+        ev = self.golden or self.fresh
+        return ev[0] if ev else 0.0
+
+
+def first_divergence(golden: List[TraceEvent],
+                     fresh: List[TraceEvent]) -> Optional[Divergence]:
+    """First index where the two event sequences disagree, or None when
+    identical.  ``missing`` = fresh run ended early; ``extra`` = fresh
+    run emitted events past the golden end."""
+    n = min(len(golden), len(fresh))
+    for i in range(n):
+        if golden[i] != fresh[i]:
+            return Divergence(i, "changed", golden[i], fresh[i])
+    if len(golden) > n:
+        return Divergence(n, "missing", golden[n], None)
+    if len(fresh) > n:
+        return Divergence(n, "extra", None, fresh[n])
+    return None
+
+
+def _fmt(ev: Optional[TraceEvent]) -> str:
+    if ev is None:
+        return "<absent>"
+    t, plane, event, tag = ev
+    return f"t={t!r} {plane}/{event} {tag}"
+
+
+def divergence_report(golden: List[TraceEvent], fresh: List[TraceEvent],
+                      div: Divergence) -> str:
+    """Bisection message: WHICH plane diverged first, at what virtual
+    time, what was expected vs observed, the surrounding golden
+    context, and what work the golden replay had open at that point."""
+    rep = TraceReplayer()
+    for ev in golden[:div.index]:
+        rep.feed(ev)
+    lines = [
+        f"composed traces diverge at event #{div.index} ({div.kind}):",
+        f"  plane    : {div.plane}",
+        f"  tag      : {div.tag}",
+        f"  t        : {div.t!r}",
+        f"  golden   : {_fmt(div.golden)}",
+        f"  fresh    : {_fmt(div.fresh)}",
+        f"  {div.plane or 'trace'} plane diverged first at t={div.t!r}",
+    ]
+    lo = max(0, div.index - _CONTEXT)
+    hi = min(len(golden), div.index + _CONTEXT + 1)
+    if lo < hi:
+        lines.append("golden context:")
+        for i in range(lo, hi):
+            mark = ">>" if i == div.index else "  "
+            lines.append(f"  {mark} #{i}: {_fmt(golden[i])}")
+    open_work = rep.open_work()
+    if open_work:
+        lines.append("work in flight at divergence (golden replay):")
+        lines.extend(f"  - {w}" for w in open_work)
+    by_plane = ", ".join(f"{p}={n}" for p, n in sorted(rep.counts.items()))
+    lines.append(f"events replayed before divergence: {div.index}"
+                 + (f" ({by_plane})" if by_plane else ""))
+    return "\n".join(lines) + "\n"
+
+
+def bisect_traces(golden_path, fresh_path) -> Optional[str]:
+    """Compare two serialized traces; None when identical, else the
+    divergence report."""
+    golden = load_trace(golden_path)
+    fresh = load_trace(fresh_path)
+    div = first_divergence(golden, fresh)
+    if div is None:
+        return None
+    return divergence_report(golden, fresh, div)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if len(argv) != 2:
+        print("usage: python -m repro.core.replay GOLDEN.trace FRESH.trace",
+              file=sys.stderr)
+        return 2
+    report = bisect_traces(argv[0], argv[1])
+    if report is None:
+        print(f"traces identical: {argv[0]} == {argv[1]}")
+        return 0
+    sys.stdout.write(report)
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -122,7 +122,7 @@ class _PriorityQueue:
 
 class _Device:
     __slots__ = ("idx", "pool", "busy", "req", "busy_since", "busy_total",
-                 "completion")
+                 "completion", "exec_span")
 
     def __init__(self, idx: int):
         self.idx = idx
@@ -132,6 +132,7 @@ class _Device:
         self.busy_since = 0.0
         self.busy_total = 0.0
         self.completion = None           # scheduled Event
+        self.exec_span = -1              # causal device-execution span sid
 
 
 class ElasticScheduler:
@@ -159,6 +160,11 @@ class ElasticScheduler:
         self._svc_n = 0
         # remote-KV transport links sharing this loop (attach_transport)
         self.transport_links: List = []
+        # feedback-latency bookkeeping (§Observability): validation
+        # ARRIVAL per kernel_id, matched at profiling COMPLETION — the
+        # same submit->profile-done pairing table_async_overlap reports
+        # as its mean, here feeding the registry histogram (p50/p99)
+        self._val_arrival: dict = {}
         self._t0 = loop.now
         self._set_split(*self._initial_split())
 
@@ -263,6 +269,9 @@ class ElasticScheduler:
             r.cancelled = True
             if r.future is not None:
                 r.future.cancel()
+            # abort closes the eval span too (queued requests have no
+            # trace record, but their spans still must not leak)
+            self.loop.spans.end(r.span, status="abort")
             self.aborted.append(r)
 
         for d in self.devices:
@@ -271,6 +280,7 @@ class ElasticScheduler:
                 if d.completion is not None:
                     d.completion.cancel()
                 self.loop.record("eval", "abort", f"{d.req.kind}@{d.idx}")
+                self.loop.spans.end(d.exec_span, status="abort")
                 self._release(d, record=True)
         for q in (self.q_val, self.q_prof):
             keep = [r for r in q if not match(r)]
@@ -286,6 +296,8 @@ class ElasticScheduler:
     def submit(self, req: Request) -> None:
         req.arrival = self.loop.now
         req.iteration = self.iteration
+        if self.loop.metrics.enabled and req.kind == "validation":
+            self._val_arrival[req.candidate.kernel_id] = req.arrival
         q = self.q_val if req.kind == "validation" else self.q_prof
         q.push(req)
         self.L_val = max(self.L_val, len(self.q_val))
@@ -332,11 +344,19 @@ class ElasticScheduler:
         d.busy_since = self.loop.now
         req.started = self.loop.now
         self.loop.record("eval", "grant", f"{req.kind}@{d.idx}")
+        self.loop.metrics.histogram("queue_wait") \
+            .observe(req.started - req.arrival)
+        # device-execution child of the submit-time eval span; grant-time
+        # work (real-mode builds) parents under it via the cursor
+        d.exec_span = self.loop.spans.begin(
+            "eval", "exec", f"{req.kind}@{d.idx}", parent=req.span)
         if req.thunk is not None:
             # deferred execution: the work happens NOW, on the device's
             # turn — real-mode builds run here and their measured
             # wall-clock is the request's duration
+            self.loop.spans.push_parent(d.exec_span)
             req.duration, req.result = req.thunk()
+            self.loop.spans.pop_parent()
         d.completion = self.loop.schedule(
             req.duration, lambda dd=d, rr=req: self._complete(dd, rr),
             tag=f"{req.kind}-done")
@@ -345,6 +365,13 @@ class ElasticScheduler:
     def _complete(self, d: _Device, req: Request) -> None:
         req.finished = self.loop.now
         self.loop.record("eval", "complete", f"{req.kind}@{d.idx}")
+        self.loop.spans.end(d.exec_span)
+        self.loop.spans.end(req.span)
+        if self.loop.metrics.enabled and req.kind == "profiling":
+            t_sub = self._val_arrival.get(req.candidate.kernel_id)
+            if t_sub is not None:
+                self.loop.metrics.histogram("feedback_latency") \
+                    .observe(req.finished - t_sub)
         if req.kind == "validation" and req.started is not None:
             dur = req.finished - req.started
             self._svc_n += 1
@@ -367,6 +394,7 @@ class ElasticScheduler:
         d.busy = False
         d.req = None
         d.completion = None
+        d.exec_span = -1
 
     # ------------------------------------------------------------- metrics
     def _mark(self) -> None:

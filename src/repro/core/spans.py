@@ -1,0 +1,165 @@
+"""Causal spans over the composed timeline (DESIGN.md §Observability).
+
+The composed ``(t, plane, event, tag)`` trace answers *what happened
+when*; spans answer *why*: every interval of interest — a workflow, a
+reasoning generation, a speculative fork, an eval request (and its
+device-execution sub-interval), a transport transfer, an engine decode
+step — is recorded as a ``Span`` with a PARENT edge to the span that
+caused it, forming one causal tree per run:
+
+    workflow ─ gen ─ fork ─ transfer        (prefix fetch on the wire)
+                   └ eval ─ exec ─ build    (grant-time kernel build)
+             engine row / step / park       (decode substrate)
+
+Spans are pure bookkeeping on the virtual clock: opening or closing one
+schedules NO loop events, consumes NO randomness and appends NOTHING to
+``loop.trace`` — the byte-pinned golden traces are untouched whether
+spans are enabled or not.  ``SpanRecorder`` is always present on an
+``EventLoop`` but disabled by default; ``EventLoop.enable_spans()``
+opts a run in, and call sites record unconditionally (a disabled
+recorder's ``open`` returns -1 and ``close`` no-ops).
+
+Causal parents cross module boundaries without widening every call
+signature via the CURRENT-PARENT cursor: the initiator brackets the
+downstream call in ``push_parent``/``pop_parent`` and the callee reads
+``current_parent`` (calls are synchronous on the one loop, so the
+cursor cannot race).
+
+The tier-1-enforced invariant (generalizing the §One-loop
+``unclosed_generations`` audit): every opened span closes EXACTLY once
+on every path — normal completion, early termination, fork-declined,
+eval abort, cancelled fetch, ``PagePoolExhausted`` rollback.
+``unclosed_spans`` returns the offenders; ``double_closes`` counts
+close-after-close bugs (both must be empty/zero once a run finishes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+ROOT = -1          # parent of top-level spans
+
+
+@dataclasses.dataclass
+class Span:
+    sid: int
+    parent: int                      # sid of the causing span (ROOT = none)
+    plane: str                       # gen | eval | transport | engine
+    kind: str                        # workflow|gen|fork|eval|exec|build|
+    #                                  transfer|migration|fetch|row|step|park
+    tag: str
+    t0: float
+    t1: float = -1.0                 # -1.0 while open
+    status: str = ""                 # ""(open) | ok | abort | cancel | ...
+
+    @property
+    def open(self) -> bool:
+        return self.t1 < 0.0
+
+    @property
+    def duration(self) -> float:
+        return 0.0 if self.open else self.t1 - self.t0
+
+
+class SpanRecorder:
+    """Span store attached to one EventLoop (``loop.spans``).
+
+    Disabled recorders are inert null objects so instrumentation sites
+    never branch; ``enable()`` turns recording on for the run."""
+
+    def __init__(self, loop):
+        self._loop = loop
+        self.enabled = False
+        self.spans: List[Span] = []
+        self._open: Dict[int, Span] = {}
+        self._parents: List[int] = []
+        self.double_closes = 0
+
+    def enable(self) -> "SpanRecorder":
+        self.enabled = True
+        return self
+
+    # ------------------------------------------------------------ record
+    def begin(self, plane: str, kind: str, tag: str = "",
+              parent: Optional[int] = None) -> int:
+        """Open a span at ``loop.now``; returns its sid (-1 disabled).
+        ``parent=None`` inherits the current-parent cursor."""
+        if not self.enabled:
+            return ROOT
+        sid = len(self.spans)
+        s = Span(sid=sid,
+                 parent=self.current_parent if parent is None else parent,
+                 plane=plane, kind=kind, tag=tag, t0=self._loop.now)
+        self.spans.append(s)
+        self._open[sid] = s
+        return sid
+
+    def end(self, sid: int, status: str = "ok") -> None:
+        """Close a span at ``loop.now``.  Closing -1 (disabled open) is
+        a no-op; closing an already-closed span counts a double-close —
+        the audit the lifecycle tests pin to zero."""
+        if not self.enabled or sid < 0:
+            return
+        s = self._open.pop(sid, None)
+        if s is None:
+            if 0 <= sid < len(self.spans):
+                self.double_closes += 1
+            return
+        s.t1 = self._loop.now
+        s.status = status
+
+    def point(self, plane: str, kind: str, tag: str = "",
+              parent: Optional[int] = None) -> int:
+        """Instantaneous span (t0 == t1): grant-time build/cache events."""
+        sid = self.begin(plane, kind, tag, parent=parent)
+        self.end(sid)
+        return sid
+
+    # ---------------------------------------------------- causal cursor
+    @property
+    def current_parent(self) -> int:
+        return self._parents[-1] if self._parents else ROOT
+
+    def push_parent(self, sid: int) -> None:
+        if self.enabled:
+            self._parents.append(sid)
+
+    def pop_parent(self) -> None:
+        if self.enabled and self._parents:
+            self._parents.pop()
+
+    # ------------------------------------------------------------- query
+    def open_spans(self) -> List[Span]:
+        return [self._open[k] for k in sorted(self._open)]
+
+    def ancestry(self, sid: int) -> List[Span]:
+        """Causal chain root -> ... -> span (cycle-proof by sid order:
+        parents always precede children)."""
+        chain: List[Span] = []
+        while 0 <= sid < len(self.spans):
+            s = self.spans[sid]
+            chain.append(s)
+            sid = s.parent if s.parent < s.sid else ROOT
+        return chain[::-1]
+
+
+def unclosed_spans(spans) -> List[Tuple[str, str, str]]:
+    """(plane, kind, tag) of every span still open — the §Observability
+    invariant says this must be empty once a run finishes.  Accepts a
+    SpanRecorder or a plain span list."""
+    if isinstance(spans, SpanRecorder):
+        spans = spans.spans
+    return sorted((s.plane, s.kind, s.tag) for s in spans or [] if s.open)
+
+
+def format_top_spans(spans, n: int = 20) -> str:
+    """Byte-stable "top spans" report: the ``n`` longest closed spans,
+    duration-descending (ties broken by sid — deterministic), one
+    ``repr(dur)<TAB>plane<TAB>kind<TAB>tag<TAB>repr(t0)`` line each."""
+    if isinstance(spans, SpanRecorder):
+        spans = spans.spans
+    closed = [s for s in spans or [] if not s.open]
+    closed.sort(key=lambda s: (-s.duration, s.sid))
+    return "".join(
+        f"{s.duration!r}\t{s.plane}\t{s.kind}\t{s.tag}\t{s.t0!r}\n"
+        for s in closed[:n])

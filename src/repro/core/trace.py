@@ -40,35 +40,49 @@ def _pair_key(tag: str) -> str:
     return tag.split(":", 1)[0]
 
 
-def plane_breakdown(trace: Optional[Iterable[TraceEvent]],
-                    decode_step_s: float = 0.0) -> Dict[str, float]:
-    """Busy seconds per plane from one composed trace.
+def _pair_intervals(trace: List[TraceEvent], decode_step_s: float,
+                    end: float) -> Tuple[Dict[str, List[Tuple[float, float]]],
+                                         Dict[str, int]]:
+    """Shared open/close pairing: busy INTERVALS per plane bucket plus
+    an anomaly tally for malformed pairings.
 
-    ``decode_step_s`` prices engine decode steps (each ("engine",
-    "step") event occupies one step of virtual time); eval busy time is
-    split between the ``validation`` and ``profiling`` pools.  Unpaired
-    opens (still busy at trace end) are closed at the last event time.
+    Tolerated malformations (each counted, none corrupting):
+
+      * close with no matching open (an abort for a never-granted key,
+        or a duplicate close after the first already paired) — ignored,
+        counted as ``unmatched_close``;
+      * duplicate open on a live key (a re-grant before the close was
+        seen) — the prior interval is closed AT the new open time and
+        the key reopens, counted as ``duplicate_open`` (previously the
+        stale t0 survived and idle gaps were attributed as busy);
+      * open never closed by trace end — closed at ``end``, counted as
+        ``unpaired_open``.
     """
-    out = {"engine": 0.0, "transport": 0.0, "validation": 0.0,
-           "profiling": 0.0, "gen": 0.0}
-    if not trace:
-        return out
-    trace = list(trace)
-    end = makespan(trace)
+    intervals: Dict[str, List[Tuple[float, float]]] = {
+        "engine": [], "transport": [], "validation": [],
+        "profiling": [], "gen": []}
+    anomalies = {"duplicate_open": 0, "unmatched_close": 0,
+                 "unpaired_open": 0}
     open_at: Dict[tuple, float] = {}
 
     def open_(bucket: str, key: str, t: float) -> None:
-        open_at.setdefault((bucket, key), t)
+        prev = open_at.get((bucket, key))
+        if prev is not None:
+            anomalies["duplicate_open"] += 1
+            intervals[bucket].append((prev, t))
+        open_at[(bucket, key)] = t
 
     def close(bucket: str, key: str, t: float) -> None:
         t0 = open_at.pop((bucket, key), None)
-        if t0 is not None:
-            out[bucket] += t - t0
+        if t0 is None:
+            anomalies["unmatched_close"] += 1
+        else:
+            intervals[bucket].append((t0, t))
 
     for t, plane, event, tag in trace:
         if plane == "engine":
             if event == "step":
-                out["engine"] += decode_step_s
+                intervals["engine"].append((t, t + decode_step_s))
         elif plane == "transport":
             key = _pair_key(tag)
             if event == "start":
@@ -81,13 +95,12 @@ def plane_breakdown(trace: Optional[Iterable[TraceEvent]],
             if "@" not in tag:
                 continue
             kind, dev = tag.split("@", 1)
-            bucket = kind if kind in out else None
-            if bucket is None:
+            if kind not in intervals:
                 continue
             if event == "grant":
-                open_(bucket, dev, t)
+                open_(kind, dev, t)
             elif event in ("complete", "abort"):
-                close(bucket, dev, t)
+                close(kind, dev, t)
         elif plane == "gen":
             key = _pair_key(tag)
             if event == "start":
@@ -95,7 +108,61 @@ def plane_breakdown(trace: Optional[Iterable[TraceEvent]],
             elif event == "end":
                 close("gen", key, t)
     for (bucket, _key), t0 in open_at.items():
-        out[bucket] += end - t0
+        anomalies["unpaired_open"] += 1
+        intervals[bucket].append((t0, end))
+    return intervals, anomalies
+
+
+def plane_intervals(trace: Optional[Iterable[TraceEvent]],
+                    decode_step_s: float = 0.0,
+                    end: Optional[float] = None
+                    ) -> Dict[str, List[Tuple[float, float]]]:
+    """Busy ``(t0, t1)`` intervals per plane bucket — the raw material
+    for ``plane_breakdown`` totals and per-bucket utilization timelines
+    (``core.metrics.utilization_timeline``)."""
+    if not trace:
+        return {"engine": [], "transport": [], "validation": [],
+                "profiling": [], "gen": []}
+    trace = list(trace)
+    return _pair_intervals(trace, decode_step_s,
+                           makespan(trace) if end is None else end)[0]
+
+
+def plane_pairing_anomalies(trace: Optional[Iterable[TraceEvent]]
+                            ) -> Dict[str, int]:
+    """Counts of tolerated pairing malformations (see
+    ``_pair_intervals``).  Well-formed composed traces report all
+    zeros; regression tests pin the tolerance behavior."""
+    if not trace:
+        return {"duplicate_open": 0, "unmatched_close": 0,
+                "unpaired_open": 0}
+    trace = list(trace)
+    return _pair_intervals(trace, 0.0, makespan(trace))[1]
+
+
+def plane_breakdown(trace: Optional[Iterable[TraceEvent]],
+                    decode_step_s: float = 0.0) -> Dict[str, float]:
+    """Busy seconds per plane from one composed trace.
+
+    ``decode_step_s`` prices engine decode steps (each ("engine",
+    "step") event occupies one step of virtual time); eval busy time is
+    split between the ``validation`` and ``profiling`` pools.  Unpaired
+    opens (still busy at trace end) are closed at the last event time;
+    aborts for never-granted keys and duplicate closes are ignored and
+    duplicate opens re-key (``plane_pairing_anomalies`` counts all
+    three) instead of corrupting the attribution.
+    """
+    out = {"engine": 0.0, "transport": 0.0, "validation": 0.0,
+           "profiling": 0.0, "gen": 0.0}
+    for bucket, spans in plane_intervals(trace, decode_step_s).items():
+        if bucket == "engine":
+            # one decode_step_s per step, summed directly — NOT
+            # (t+step)-t, whose float rounding could drift the
+            # golden-pinned totals by an ulp
+            out[bucket] += decode_step_s * len(spans)
+        else:
+            for t0, t1 in spans:
+                out[bucket] += t1 - t0
     return out
 
 

@@ -68,6 +68,9 @@ class Request:
     cancelled: bool = False
     iteration: int = 0
     owner: str = ""                      # workflow/task that submitted it
+    span: int = -1                       # causal eval span sid (§Observability):
+    #                                      opened by the submitter, closed by the
+    #                                      scheduler at complete OR abort
 
 
 class EvalFuture(Future):

@@ -65,14 +65,21 @@ def _engine_opts(engine_opts, seed: int) -> dict:
     return o
 
 
-def _make_loop(trace: bool, evaluator) -> EventLoop:
+def _make_loop(trace: bool, evaluator, spans: bool = False,
+               metrics: bool = False) -> EventLoop:
     """One composed clock per run (DESIGN.md §Engine-on-loop): the
     loop every plane shares.  ``trace=True`` turns on the unified
-    (t, plane, event, tag) timeline; an evaluator that knows how joins
-    it (RealEvalBackend.attach_loop)."""
+    (t, plane, event, tag) timeline; ``spans``/``metrics`` switch on
+    the causal span tree and the metrics registry (DESIGN.md
+    §Observability) — pure bookkeeping, no loop events; an evaluator
+    that knows how joins the timeline (RealEvalBackend.attach_loop)."""
     loop = EventLoop()
     if trace:
         loop.enable_trace()
+    if spans:
+        loop.enable_spans()
+    if metrics:
+        loop.enable_metrics()
     attach = getattr(evaluator, "attach_loop", None)
     if attach is not None:
         attach(loop)
@@ -89,6 +96,7 @@ def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
                 seed: int = 0, max_concurrent_spec: int = 8,
                 evaluator=None, transport=None, trace: bool = False,
                 llm: str = "sim", engine_opts=None,
+                spans: bool = False, metrics: bool = False,
                 ) -> Tuple[TaskResult, ElasticScheduler, SpecController]:
     """``llm="sim"`` replays the calibrated scripted path (byte-pinned
     by the goldens); ``llm="engine"`` runs the workflow's generations
@@ -98,7 +106,7 @@ def run_specgen(task_id: str, model: str = "glm", iterations: int = 100,
     if llm == "engine" and transport is None:
         transport = "async"                  # the engine needs the plane
     eo = _engine_opts(engine_opts, seed)
-    loop = _make_loop(trace, evaluator)
+    loop = _make_loop(trace, evaluator, spans=spans, metrics=metrics)
     wl = WorkloadModel(model=model, seed=seed)
     sched = ElasticScheduler(loop, SchedulerConfig(
         num_devices=devices, mode=scheduler_mode,
@@ -158,7 +166,8 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
                     prefix_cache: bool = True,
                     termination="hist-avg", evaluator=None,
                     transport=None, trace: bool = False,
-                    llm: str = "sim", engine_opts=None):
+                    llm: str = "sim", engine_opts=None,
+                    spans: bool = False, metrics: bool = False):
     """The paper's evaluation setting: N workflows sharing one pool.
 
     The pool runs the async evaluation plane by default: continuous
@@ -181,7 +190,7 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
     if llm == "engine" and transport is None:
         transport = "async"                  # the engine needs the plane
     eo = _engine_opts(engine_opts, seed)
-    loop = _make_loop(trace, evaluator)
+    loop = _make_loop(trace, evaluator, spans=spans, metrics=metrics)
     wl = WorkloadModel(model=model, seed=seed)
     sched = ElasticScheduler(loop, SchedulerConfig(
         num_devices=devices, mode=scheduler_mode,
@@ -230,6 +239,7 @@ def run_engine_pool(arch: str = "qwen2-1.5b", n_workflows: int = 10,
                     forks_per_workflow: int = 1, fork_tokens: int = 6,
                     max_len: int = 160, seed: int = 0,
                     trace: bool = False,
+                    spans: bool = False, metrics: bool = False,
                     ) -> Tuple["object", Dict[int, List[int]]]:
     """The paper's serving-side setting on the REAL model: N concurrent
     kernel-refinement workflows (one reasoning generation each, plus
@@ -260,6 +270,10 @@ def run_engine_pool(arch: str = "qwen2-1.5b", n_workflows: int = 10,
     loop = EventLoop()
     if trace:
         loop.enable_trace()
+    if spans:
+        loop.enable_spans()
+    if metrics:
+        loop.enable_metrics()
     plane = TransportPlane(loop=loop, cfg=TransportConfig(mode="async"))
     eng = Engine(cfg, params, Runtime(), max_len=max_len,
                  max_batch=n_workflows * (1 + forks_per_workflow),

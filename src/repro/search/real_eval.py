@@ -105,6 +105,11 @@ class RealEvalBackend:
     def _record(self, event: str, tag: str = "") -> None:
         if self._loop is not None:
             self._loop.record("eval", event, tag)
+            # grant-time point span: the thunk runs under the
+            # scheduler's exec-span cursor, so build/batch/cache events
+            # parent under the device grant that triggered them
+            self._loop.spans.point("eval", "build", f"{event}:{tag}")
+            self._loop.metrics.counter(f"eval/{event}").inc()
 
     # ------------------------------------------------------ async protocol
     def _build_key(self, cand: KernelCandidate) -> tuple:

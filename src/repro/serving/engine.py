@@ -48,6 +48,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.metrics import MetricsRegistry
+from repro.core.spans import ROOT, SpanRecorder
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.layers import Runtime
@@ -58,6 +60,11 @@ from repro.serving.kvcache import (PendingFetch, PrefixCacheStore,
 from repro.serving.pagepool import PagePool, PagedPrefix, \
     PagePoolExhausted, _ceil_div, _pow2_pad
 from repro.serving.sampler import sample_tokens
+
+# shared inert recorders for engines with no transport plane (no loop):
+# disabled, so they never read a clock or store anything
+_NULL_SPANS = SpanRecorder(None)
+_NULL_METRICS = MetricsRegistry(None)
 
 
 @dataclasses.dataclass
@@ -95,6 +102,8 @@ class Generation:
     # cancellation — a cancelled stream just stops)
     on_token: Optional[Callable[["Generation", int], None]] = None
     on_done: Optional[Callable[["Generation"], None]] = None
+    span: int = -1                    # causal row span sid (§Observability):
+    #                                   opened at submit/fork, closed at retire
 
 
 class Engine:
@@ -182,6 +191,9 @@ class Engine:
         # across submissions via kick() without anyone calling run_all
         self._pump = {"scheduled": False, "parked_at": None,
                       "last_step": 0.0, "inflight": None}
+        # causal step/park span sids — at most one of each in flight
+        self._step_span = -1
+        self._park_span = -1
         # fetch jobs carrying a wake callback: holds the job OBJECTS
         # (identity via id() would go stale — a completed job can be
         # GC'd and a later, distinct job reuse its address, silently
@@ -224,6 +236,32 @@ class Engine:
                             active=act, block_tables=bt)),
             donate_argnums=(2,))
 
+    # ------------------------------------------------------- observability
+    @property
+    def _spans(self) -> SpanRecorder:
+        return self.transport.loop.spans if self.transport is not None \
+            else _NULL_SPANS
+
+    @property
+    def _metrics(self) -> MetricsRegistry:
+        return self.transport.loop.metrics if self.transport is not None \
+            else _NULL_METRICS
+
+    def sample_pool_metrics(self) -> None:
+        """Gauge-sample pagepool occupancy (pages in use / shared /
+        free) onto the virtual-clock timeline — called at every decode
+        dispatch so page pressure is visible per step, and callable at
+        run end to assert refcounts drained (tests/test_paged.py)."""
+        m = self._metrics
+        if not m.enabled:
+            return
+        pool = self.pool
+        # the null page (id 0) is bookkeeping, not occupancy
+        shared = int((pool.refcount[1:] > 1).sum())
+        m.gauge("pagepool/in_use").set(float(pool.pages_in_use))
+        m.gauge("pagepool/shared").set(float(shared))
+        m.gauge("pagepool/free").set(float(pool.pages_free))
+
     # ----------------------------------------------------------- lifecycle
     def submit(self, prompt_tokens: List[int], *, max_new_tokens: int = 64,
                temperature: float = 0.7, reasoning: bool = True,
@@ -238,8 +276,10 @@ class Engine:
             gen_id=gid, tokens=list(prompt_tokens),
             prompt_len=len(prompt_tokens), max_new_tokens=max_new_tokens,
             temperature=temperature, reasoning=reasoning, rng_seed=seed)
+        g.span = self._spans.begin("engine", "row", f"g{gid}")
         if max_new_tokens <= 0:             # nothing to decode: done
             g.status = "done"
+            self._spans.end(g.span)
         self._gens[gid] = g
         return gid
 
@@ -268,6 +308,7 @@ class Engine:
             max_new_tokens=max_new_tokens, temperature=temperature,
             reasoning=False, parent=parent_id, rng_seed=seed,
             pages=pages)
+        child.span = self._spans.begin("engine", "row", f"g{gid}")
         self._gens[gid] = child
         self.store.stats.tokens_reused += parent.pos
         return gid
@@ -356,6 +397,7 @@ class Engine:
 
     def _retire(self, g: Generation, status: str) -> None:
         g.status = status
+        self._spans.end(g.span, status=status)
         if status == "cancelled":
             # early termination's decode savings: tokens this row will
             # never compute (the paper's cut generation cost)
@@ -701,9 +743,18 @@ class Engine:
                 self.step_events.append(EngineStepEvent(
                     loop.now, tuple(g.gen_id for g in gens)))
             loop.record("engine", "step", f"n={len(gens)}")
+            # decode-step interval span: compute opens it, the step's
+            # completion (one decode_step_s later on the evented path,
+            # immediately on the legacy one) closes it
+            self._step_span = loop.spans.begin("engine", "step",
+                                               f"n={len(gens)}",
+                                               parent=ROOT)
+        self.sample_pool_metrics()
         return nxt
 
     def _dispatch_complete(self, gens: Sequence[Generation], nxt) -> None:
+        self._spans.end(self._step_span)
+        self._step_span = -1
         for g in gens:
             if g.status != "running":
                 # cancelled between this step's compute and completion
@@ -851,6 +902,8 @@ class Engine:
             plane.engine_blocked_s += loop.now - p["parked_at"]
             p["parked_at"] = None
             loop.record("engine", "wake", "")
+            self._spans.end(self._park_span)
+            self._park_span = -1
         if p["inflight"] is not None:
             # the dispatch launched one decode step ago completes NOW:
             # token appends, retirements and the migrations they
@@ -877,6 +930,9 @@ class Engine:
         p["parked_at"] = loop.now
         loop.record("engine", "park",
                     f"waiting={len(self._awaiting_fetch)}")
+        self._park_span = loop.spans.begin(
+            "engine", "park", f"waiting={len(self._awaiting_fetch)}",
+            parent=ROOT)
         self._pump_armed = [j for j in self._pump_armed
                             if not (j.done or j.cancelled)]
         for pf in list(self._awaiting_fetch.values()):
@@ -886,6 +942,19 @@ class Engine:
                 continue
             self._pump_armed.append(job)
             job.future.add_done_callback(self._on_fetch_landed)
+
+    def close_open_spans(self) -> None:
+        """End-of-run span closure.  A pool run stops the shared loop
+        the moment its controllers finish, which can freeze virtual
+        time MID decode step (the completion event never fires) or
+        while the pump is parked on a fetch.  Close the in-flight
+        step/park spans at the frozen clock — "time stopped" is not a
+        leak — so ``unclosed_spans`` afterwards reports only genuine
+        lifecycle bugs.  Idempotent; call before auditing/exporting."""
+        self._spans.end(self._step_span, status="eos")
+        self._step_span = -1
+        self._spans.end(self._park_span, status="eos")
+        self._park_span = -1
 
     def generation(self, gen_id: int) -> Generation:
         return self._gens[gen_id]

@@ -71,7 +71,7 @@ class Transfer:
     """One queued/in-flight/completed transfer on a link."""
 
     __slots__ = ("nbytes", "tag", "future", "submitted", "started",
-                 "finished", "duration", "cancelled")
+                 "finished", "duration", "cancelled", "span")
 
     def __init__(self, nbytes: int, tag: str, now: float):
         self.nbytes = int(nbytes)
@@ -82,6 +82,7 @@ class Transfer:
         self.finished: Optional[float] = None
         self.duration = 0.0
         self.cancelled = False
+        self.span = -1                   # causal span sid (§Observability)
 
     @property
     def done(self) -> bool:
@@ -137,6 +138,11 @@ class TransportLink:
 
     def submit(self, nbytes: int, tag: str = "") -> Transfer:
         t = Transfer(nbytes, tag, self.loop.now)
+        # transfer span opens at SUBMIT (queue wait is part of it) and
+        # closes at _finish — or at cancel when still queued, since a
+        # queued-cancelled transfer never reaches the wire
+        t.span = self.loop.spans.begin("transport", "transfer",
+                                       f"{self.name}:{tag}")
         self._record("enq", tag, t.nbytes)
         self._queue.append(t)
         self._pump()
@@ -152,6 +158,9 @@ class TransportLink:
             return
         t.cancelled = True
         t.future.cancel()
+        if t.started is None:
+            # never reaches _finish: close the span here
+            self.loop.spans.end(t.span, status="cancel")
         self._record("cancel", t.tag, t.nbytes)
 
     def _pump(self) -> None:
@@ -173,6 +182,8 @@ class TransportLink:
         self.busy_total += t.finished - t.started
         self._current = None
         self._record("done", t.tag, t.nbytes)
+        self.loop.spans.end(t.span,
+                            status="cancel" if t.cancelled else "ok")
         if t.cancelled:
             self.transfers_cancelled += 1
         else:
@@ -419,7 +430,7 @@ class MigrationJob:
     kind = "migration"
     __slots__ = ("plane", "entry", "chunks", "next_chunk", "done",
                  "cancelled", "future", "transfers", "on_done", "_mover",
-                 "waiters")
+                 "waiters", "span")
 
     def __init__(self, plane: TransportPlane, entry: Any,
                  chunks: List[Tuple[int, int, int]],
@@ -436,6 +447,10 @@ class MigrationJob:
         self.on_done = on_done
         self._mover = mover                  # (lo, hi) -> move bytes out
         self.waiters: set = set()
+        # job span spanning the whole streamed migration; its chunk
+        # transfers parent under it via the cursor
+        self.span = plane.loop.spans.begin(
+            "transport", "migration", str(getattr(entry, "key", "")))
         plane.migrations_started += 1
         self._submit_next()
 
@@ -445,11 +460,14 @@ class MigrationJob:
         if self.next_chunk >= len(self.chunks):
             self.done = True
             self.plane.migrations_done += 1
+            self.plane.loop.spans.end(self.span)
             self.on_done()
             self.future.resolve(self)
             return
         lo, hi, nbytes = self.chunks[self.next_chunk]
+        self.plane.loop.spans.push_parent(self.span)
         t = self.plane.link.submit(nbytes, tag="mig-out")
+        self.plane.loop.spans.pop_parent()
         self.transfers.append(t)
         t.future.add_done_callback(lambda _f, lo=lo, hi=hi:
                                    self._landed(lo, hi))
@@ -468,6 +486,7 @@ class MigrationJob:
             return
         self.cancelled = True
         self.future.cancel()
+        self.plane.loop.spans.end(self.span, status="cancel")
         for t in self.transfers:
             self.plane.link.cancel(t)
 
@@ -480,7 +499,7 @@ class FetchJob:
     kind = "fetch"
     __slots__ = ("plane", "entry", "chunks", "next_chunk", "done",
                  "cancelled", "future", "transfers", "on_done",
-                 "_uploader", "requested_at", "waiters")
+                 "_uploader", "requested_at", "waiters", "span")
 
     def __init__(self, plane: TransportPlane, entry: Any,
                  chunks: List[Tuple[int, int, int]],
@@ -498,6 +517,8 @@ class FetchJob:
         self._uploader = uploader            # (lo, hi) -> upload chunk
         self.requested_at = plane.loop.now
         self.waiters: set = set()            # engine gen_ids awaiting
+        self.span = plane.loop.spans.begin(
+            "transport", "fetch", str(getattr(entry, "key", "")))
         plane.fetches_started += 1
         self._submit_next()
 
@@ -509,11 +530,14 @@ class FetchJob:
             self.plane.fetches_done += 1
             self.plane.fetch_wait_s += (self.plane.loop.now
                                         - self.requested_at)
+            self.plane.loop.spans.end(self.span)
             self.on_done()
             self.future.resolve(self)
             return
         lo, hi, nbytes = self.chunks[self.next_chunk]
+        self.plane.loop.spans.push_parent(self.span)
         t = self.plane.link.submit(nbytes, tag="fetch")
+        self.plane.loop.spans.pop_parent()
         self.transfers.append(t)
         t.future.add_done_callback(lambda _f, lo=lo, hi=hi:
                                    self._landed(lo, hi))
@@ -532,6 +556,7 @@ class FetchJob:
             return
         self.cancelled = True
         self.future.cancel()
+        self.plane.loop.spans.end(self.span, status="cancel")
         for t in self.transfers:
             self.plane.link.cancel(t)
         self.plane.fetches_cancelled += 1

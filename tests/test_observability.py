@@ -1,0 +1,401 @@
+"""Observability plane (DESIGN.md §Observability).
+
+The composed ``(t, plane, event, tag)`` trace gets three consumers this
+PR pins down:
+
+  * causal SPANS — every interval of interest recorded with a parent
+    edge (workflow -> gen -> fork -> eval -> exec, transfers, engine
+    steps), the tier-1 invariant being that every opened span closes
+    exactly once on every path (abort/cancel included) and never twice;
+  * the METRICS registry — virtual-clock counters/gauges/histograms
+    whose percentiles feed BENCH_e2e.json byte-deterministically;
+  * the REPLAY bisector — ``repro.core.replay`` turns a determinism-CI
+    byte diff into "which plane diverged first, at what virtual time".
+
+Plus the ``plane_breakdown`` pairing regressions: an abort for a
+never-granted key, a duplicate close and a duplicate open must be
+tolerated (and counted), not corrupt the attribution.
+"""
+import json
+
+import pytest
+
+from repro.core.clock import EventLoop
+from repro.core.metrics import (COUNT_BOUNDS, Histogram, MetricsRegistry,
+                                utilization_timeline)
+from repro.core.perfetto import format_perfetto, perfetto_trace
+from repro.core.replay import (Divergence, TraceReplayer, bisect_traces,
+                               divergence_report, first_divergence,
+                               load_trace, main as replay_main,
+                               parse_trace)
+from repro.core.spans import (ROOT, SpanRecorder, format_top_spans,
+                              unclosed_spans)
+from repro.core.trace import (format_trace, plane_breakdown,
+                              plane_intervals, plane_pairing_anomalies)
+from repro.search.driver import run_shared_pool
+from repro.serving.transport import (LinkSpec, TransportConfig,
+                                     TransportLink, TransportPlane)
+
+from benchmarks.table_async_overlap import feedback_latency
+
+
+# One shared sim-pool run (fast, deterministic) for the span/metric
+# assertions; module-cached like test_one_loop's engine pool.
+_POOL = {}
+
+
+def sim_pool(run: str = "a"):
+    if run not in _POOL:
+        _POOL[run] = run_shared_pool(
+            ["T1", "T2", "T3"], iterations=4, devices=3, seed=0,
+            trace=True, spans=True, metrics=True)
+    return _POOL[run]
+
+
+# ------------------------------------------------- span recorder basics
+def test_disabled_recorder_is_inert():
+    loop = EventLoop()
+    rec = loop.spans
+    assert not rec.enabled
+    sid = rec.begin("gen", "workflow", "w0")
+    assert sid == ROOT
+    rec.end(sid)                       # no-op, no crash
+    rec.push_parent(5)
+    assert rec.current_parent == ROOT  # cursor inert while disabled
+    assert rec.spans == [] and rec.double_closes == 0
+
+
+def test_span_parent_cursor_and_ancestry():
+    loop = EventLoop()
+    rec = loop.spans.enable()
+    w = rec.begin("gen", "workflow", "w0")
+    g = rec.begin("gen", "gen", "w0:0", parent=w)
+    rec.push_parent(g)
+    child = rec.begin("eval", "eval", "validation:w0")  # inherits cursor
+    rec.pop_parent()
+    orphan = rec.begin("engine", "step", "n=1")         # cursor popped
+    assert rec.spans[child].parent == g
+    assert rec.spans[orphan].parent == ROOT
+    for sid in (child, orphan, g, w):
+        rec.end(sid)
+    chain = rec.ancestry(child)
+    assert [s.sid for s in chain] == [w, g, child]
+    assert unclosed_spans(rec) == []
+
+
+def test_double_close_counted_not_corrupting():
+    loop = EventLoop()
+    rec = loop.spans.enable()
+    sid = rec.begin("eval", "eval", "validation:w0")
+    rec.end(sid, status="ok")
+    t1 = rec.spans[sid].t1
+    rec.end(sid, status="abort")       # the bug the audit pins to zero
+    assert rec.double_closes == 1
+    assert rec.spans[sid].status == "ok" and rec.spans[sid].t1 == t1
+
+
+def test_unclosed_spans_reports_open_only():
+    loop = EventLoop()
+    rec = loop.spans.enable()
+    a = rec.begin("gen", "workflow", "w0")
+    rec.begin("transport", "transfer", "rdma0:prefix")
+    rec.end(a)
+    assert unclosed_spans(rec) == [("transport", "transfer",
+                                    "rdma0:prefix")]
+
+
+# --------------------------------- span lifecycle across the sim pool
+def test_sim_pool_closes_every_span():
+    """Every span kind the sim pool opens (workflow, gen, fork, eval,
+    exec) closes on every path the pooled setting exercises — early
+    termination, iteration-boundary eval aborts, fork teardown."""
+    sched, ctls = sim_pool()
+    rec = sched.loop.spans
+    assert len(rec.spans) > 0
+    assert unclosed_spans(rec) == []
+    assert rec.double_closes == 0
+    assert sum(c.result.early_terminations for c in ctls) > 0
+    statuses = {s.status for s in rec.spans}
+    assert "abort" in statuses         # aborted evals closed with abort
+    kinds = {(s.plane, s.kind) for s in rec.spans}
+    assert {("gen", "workflow"), ("gen", "gen"), ("gen", "fork"),
+            ("eval", "eval"), ("eval", "exec")} <= kinds
+
+
+def test_sim_pool_spans_do_not_perturb_golden_trace():
+    """Spans/metrics are pure bookkeeping: enabling them leaves the
+    byte-pinned composed trace and the final clock untouched."""
+    sched, _ = sim_pool()
+    bare, _ = run_shared_pool(["T1", "T2", "T3"], iterations=4,
+                              devices=3, seed=0, trace=True)
+    assert format_trace(bare.loop.trace) == format_trace(sched.loop.trace)
+    assert bare.loop.now == sched.loop.now
+
+
+def test_eval_span_parents_under_generation():
+    """Causal edges: eval spans hang off the gen span of the iteration
+    that submitted them; exec spans hang off their eval span."""
+    sched, _ = sim_pool()
+    rec = sched.loop.spans
+    by_sid = {s.sid: s for s in rec.spans}
+    evals = [s for s in rec.spans if (s.plane, s.kind) == ("eval", "eval")]
+    execs = [s for s in rec.spans if (s.plane, s.kind) == ("eval", "exec")]
+    assert evals and execs
+    for s in evals:
+        assert by_sid[s.parent].kind == "gen"
+    for s in execs:
+        assert by_sid[s.parent].kind == "eval"
+        # device execution starts at grant, inside the eval interval
+        assert by_sid[s.parent].t0 <= s.t0 <= s.t1 <= by_sid[s.parent].t1
+
+
+def test_cancelled_queued_transfer_closes_span():
+    """A transfer cancelled while still QUEUED never reaches the wire
+    (no _finish): its span must close at cancel, status "cancel"."""
+    loop = EventLoop()
+    loop.enable_spans()
+    link = TransportLink(loop, LinkSpec(bandwidth=1e3, latency=1e-3))
+    t1 = link.submit(10_000, tag="m1")       # hogs the wire
+    t2 = link.submit(10_000, tag="m2")       # queued behind it
+    link.cancel(t2)
+    loop.run(stop=lambda: link.idle)
+    rec = loop.spans
+    assert unclosed_spans(rec) == []
+    st = {s.tag: s.status for s in rec.spans}
+    assert st["rdma0:m1"] == "ok" and st["rdma0:m2"] == "cancel"
+    assert t1.done and t2.cancelled
+
+
+# --------------------------------------------- plane_breakdown pairing
+def test_breakdown_tolerates_abort_for_never_granted_key():
+    """An eval abort with no prior grant on that device slot (a queued
+    request aborted at the iteration boundary) must contribute zero
+    busy seconds — not corrupt pairing state."""
+    trace = [(0.0, "eval", "submit", "validation:w0"),
+             (5.0, "eval", "abort", "validation@2"),      # never granted
+             (6.0, "eval", "grant", "validation@0"),
+             (9.0, "eval", "complete", "validation@0")]
+    bd = plane_breakdown(trace)
+    assert bd["validation"] == 3.0
+    an = plane_pairing_anomalies(trace)
+    assert an == {"duplicate_open": 0, "unmatched_close": 1,
+                  "unpaired_open": 0}
+
+
+def test_breakdown_tolerates_duplicate_close():
+    trace = [(1.0, "eval", "grant", "profiling@1"),
+             (4.0, "eval", "complete", "profiling@1"),
+             (4.0, "eval", "abort", "profiling@1")]       # double close
+    assert plane_breakdown(trace)["profiling"] == 3.0
+    assert plane_pairing_anomalies(trace)["unmatched_close"] == 1
+
+
+def test_breakdown_duplicate_open_closes_prior_interval():
+    """A re-grant on a live slot closes the prior interval AT the new
+    open time (the old bug kept the stale t0, attributing the idle gap
+    as busy) and the tail open is closed at trace end."""
+    trace = [(0.0, "eval", "grant", "validation@0"),
+             (2.0, "eval", "grant", "validation@0"),      # re-grant
+             (7.0, "eval", "complete", "validation@0"),
+             (9.0, "gen", "start", "w0:0")]               # trace end 9.0
+    assert plane_breakdown(trace)["validation"] == 7.0    # 0-2 + 2-7
+    an = plane_pairing_anomalies(trace)
+    assert an["duplicate_open"] == 1 and an["unpaired_open"] == 1
+    iv = plane_intervals(trace)
+    assert iv["validation"] == [(0.0, 2.0), (2.0, 7.0)]
+    assert iv["gen"] == [(9.0, 9.0)]
+
+
+def test_breakdown_well_formed_trace_has_zero_anomalies():
+    sched, _ = sim_pool()
+    assert plane_pairing_anomalies(sched.loop.trace) == {
+        "duplicate_open": 0, "unmatched_close": 0, "unpaired_open": 0}
+
+
+# ------------------------------------------------------ metrics plane
+def test_histogram_percentiles_interpolate():
+    h = Histogram("lat", bounds=(10.0, 20.0, 40.0))
+    for v in (5.0, 15.0, 15.0, 35.0):
+        h.observe(v)
+    assert h.total == 4 and h.sum == 70.0 and h.mean == 17.5
+    assert h.percentile(0.25) == 10.0          # first bucket, full rank
+    assert h.percentile(1.0) == 40.0
+    assert 10.0 < h.percentile(0.5) <= 20.0
+    h.observe(1e9)                             # overflow clamps
+    assert h.percentile(1.0) == 40.0
+
+
+def test_histogram_mean_matches_offline_feedback_latency():
+    """The registry's feedback_latency histogram observes the same
+    submit->profile-done population table_async_overlap computes
+    offline — the means must agree exactly (sum is exact, only the
+    bucketing is approximate)."""
+    sched, _ = sim_pool()
+    h = sched.loop.metrics.get_histogram("feedback_latency")
+    assert h is not None and h.total > 0
+    assert h.mean == pytest.approx(feedback_latency(sched), abs=1e-12)
+
+
+def test_registry_disabled_hands_out_nulls():
+    reg = MetricsRegistry(None)
+    reg.counter("c").inc()
+    reg.gauge("g").set(3.0)
+    reg.histogram("h").observe(1.0)
+    assert reg.snapshot() == {}
+    reg.enable()
+    reg.counter("c").inc(2.0)
+    assert reg.snapshot()["counter/c"] == 2.0
+
+
+def test_snapshot_is_byte_stable():
+    sched1, _ = sim_pool("a")
+    sched2, _ = sim_pool("b")
+    s1 = json.dumps(sched1.loop.metrics.snapshot(), sort_keys=True)
+    s2 = json.dumps(sched2.loop.metrics.snapshot(), sort_keys=True)
+    assert s1 == s2
+    snap = sched1.loop.metrics.snapshot()
+    assert snap["hist/feedback_latency/count"] > 0
+    assert snap["hist/queue_wait/count"] > 0
+    assert snap["hist/fork_depth/count"] > 0
+    assert snap["hist/fork_depth/p99"] <= COUNT_BOUNDS[-1]
+
+
+def test_utilization_timeline_sums_to_breakdown():
+    """Bucketed busy fractions are a refinement of plane_breakdown:
+    sum(frac * width * scale) over buckets == total busy seconds."""
+    sched, _ = sim_pool()
+    trace = sched.loop.trace
+    mk = max(t[0] for t in trace)
+    devices = 3
+    ut = utilization_timeline(trace, devices, mk, buckets=7)
+    bd = plane_breakdown(trace)
+    width = mk / 7
+    for plane, fracs in ut.items():
+        scale = devices if plane in ("validation", "profiling") else 1
+        total = sum(f * width * scale for f in fracs)
+        assert total == pytest.approx(bd.get(plane, 0.0), rel=1e-9)
+        if plane in ("validation", "profiling"):
+            assert all(0.0 <= f <= 1.0 + 1e-12 for f in fracs)
+
+
+# ------------------------------------------------------ perfetto export
+def test_perfetto_is_valid_chrome_trace_json():
+    sched, _ = sim_pool()
+    text = format_perfetto(sched.loop.spans)
+    doc = json.loads(text)
+    evs = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    phases = {e["ph"] for e in evs}
+    assert {"M", "X", "s", "f"} <= phases
+    # every X event sits on a named track and has integer us timing
+    tids = {e["tid"] for e in evs if e["ph"] == "M"}
+    for e in evs:
+        if e["ph"] != "X":
+            continue
+        assert e["tid"] in tids
+        assert isinstance(e["ts"], int) and isinstance(e["dur"], int)
+        assert e["dur"] >= 0
+    # flow arrows come in s/f pairs keyed by child sid
+    starts = {e["id"] for e in evs if e["ph"] == "s"}
+    finishes = {e["id"] for e in evs if e["ph"] == "f"}
+    assert starts and starts == finishes
+
+
+def test_perfetto_export_is_byte_deterministic():
+    s1, _ = sim_pool("a")
+    s2, _ = sim_pool("b")
+    assert format_perfetto(s1.loop.spans) == format_perfetto(s2.loop.spans)
+
+
+def test_top_spans_report_is_byte_stable_and_sorted():
+    s1, _ = sim_pool("a")
+    s2, _ = sim_pool("b")
+    r1, r2 = format_top_spans(s1.loop.spans), format_top_spans(s2.loop.spans)
+    assert r1 == r2 and r1
+    durs = [float(line.split("\t")[0]) for line in r1.splitlines()]
+    assert durs == sorted(durs, reverse=True)
+
+
+# --------------------------------------------------- replay bisection
+def test_parse_trace_roundtrips_format_trace():
+    sched, _ = sim_pool()
+    trace = sched.loop.trace
+    assert parse_trace(format_trace(trace)) == list(trace)
+    with pytest.raises(ValueError, match="expected 4"):
+        parse_trace("1.0\tgen\tstart\n")
+
+
+def test_first_divergence_changed_missing_extra():
+    g = [(0.0, "gen", "start", "w0:0"), (1.0, "eval", "grant", "v@0"),
+         (2.0, "eval", "complete", "v@0")]
+    assert first_divergence(g, list(g)) is None
+    f = list(g)
+    f[1] = (1.5, "eval", "grant", "v@0")
+    d = first_divergence(g, f)
+    assert (d.index, d.kind) == (1, "changed")
+    assert (d.plane, d.tag, d.t) == ("eval", "v@0", 1.0)
+    d = first_divergence(g, g[:2])
+    assert (d.index, d.kind, d.plane) == (2, "missing", "eval")
+    d = first_divergence(g[:2], g)
+    assert (d.index, d.kind) == (2, "extra")
+
+
+def test_bisector_reports_injected_event(tmp_path):
+    """ISSUE acceptance: perturb one event in a serialized golden trace
+    and the bisector names its plane, tag and virtual time, plus the
+    causal context (what was in flight)."""
+    sched, _ = sim_pool()
+    golden = tmp_path / "golden.trace"
+    fresh = tmp_path / "fresh.trace"
+    golden.write_text(format_trace(sched.loop.trace))
+    lines = format_trace(sched.loop.trace).splitlines(keepends=True)
+    # inject a time-shifted transport-plane event mid-trace
+    idx = len(lines) // 2
+    t, plane, event, tag = lines[idx].rstrip("\n").split("\t")
+    lines[idx] = f"{float(t) + 0.5!r}\t{plane}\t{event}\t{tag}\n"
+    fresh.write_text("".join(lines))
+    report = bisect_traces(golden, fresh)
+    assert report is not None
+    assert f"diverge at event #{idx} (changed)" in report
+    assert f"plane    : {plane}" in report
+    assert f"tag      : {tag}" in report
+    assert f"t        : {float(t)!r}" in report
+    assert f"{plane} plane diverged first at t={float(t)!r}" in report
+    assert ">>" in report                      # context window marker
+    assert bisect_traces(golden, golden) is None
+
+
+def test_replay_main_exit_codes(tmp_path, capsys):
+    a = tmp_path / "a.trace"
+    b = tmp_path / "b.trace"
+    a.write_text("0.0\tgen\tstart\tw0:0\n1.0\tgen\tend\tw0:0\n")
+    b.write_text("0.0\tgen\tstart\tw0:0\n2.0\tgen\tend\tw0:0\n")
+    assert replay_main([str(a), str(a)]) == 0
+    assert replay_main([str(a), str(b)]) == 1
+    out = capsys.readouterr().out
+    assert "gen plane diverged first at t=1.0" in out
+    assert replay_main([str(a)]) == 2
+
+
+def test_replayer_tracks_open_work():
+    rep = TraceReplayer()
+    rep.feed((0.0, "gen", "start", "w0:0"))
+    rep.feed((1.0, "eval", "grant", "validation@0"))
+    assert len(rep.open_work()) == 2
+    rep.feed((2.0, "eval", "complete", "validation@0"))
+    rep.feed((3.0, "gen", "end", "w0:0"))
+    assert rep.open_work() == []
+    assert rep.counts == {"gen": 2, "eval": 2}
+    assert rep.now == 3.0 and rep.index == 4
+
+
+def test_divergence_report_lists_inflight_work():
+    g = [(0.0, "gen", "start", "w0:0"),
+         (1.0, "eval", "grant", "validation@0"),
+         (2.0, "eval", "complete", "validation@0")]
+    f = list(g)
+    f[2] = (2.5, "eval", "complete", "validation@0")
+    d = first_divergence(g, f)
+    rep = divergence_report(g, f, d)
+    assert "validation:0 open since t=1.0" in rep
+    assert "gen:w0 open since t=0.0" in rep

@@ -21,6 +21,7 @@ import jax
 
 from repro.core.clock import EventLoop
 from repro.core.controller import ScriptedGeneration
+from repro.core.spans import unclosed_spans
 from repro.core.trace import format_trace, unclosed_generations
 from repro.models import schema
 from repro.models.layers import Runtime
@@ -217,10 +218,14 @@ _POOL = {}
 
 
 def engine_pool(run: str):
+    # spans/metrics ride along (§Observability): pure bookkeeping, so
+    # the byte-pinned composed trace is identical with them enabled —
+    # test_engine_pool_run_to_run_identical would catch any drift
     if run not in _POOL:
         _POOL[run] = run_shared_pool(["T1", "T2"], iterations=2,
                                      devices=4, seed=0, trace=True,
-                                     llm="engine")
+                                     llm="engine", spans=True,
+                                     metrics=True)
     return _POOL[run]
 
 
@@ -269,6 +274,39 @@ def test_engine_pool_matches_backend_protocol_accounting():
         assert c.result.best_candidate is not None
         assert any(r.gen_time > 0 for r in c.result.records)
         assert any(r.reasoning_tokens > 0 for r in c.result.records)
+
+
+def test_engine_pool_every_span_closes():
+    """The §Observability generalization of the gen-span audit: EVERY
+    causal span (workflow, gen, fork, eval, exec, transfer, fetch,
+    engine row/step) closes exactly once across the engine-backed pool
+    — early termination, fork-declines and cancelled fetches included.
+    The loop stops the instant all controllers finish, so an in-flight
+    decode step is closed at the frozen clock first ("eos"), not
+    counted as a leak."""
+    sched, ctls = engine_pool("a")
+    sched.engine.close_open_spans()
+    rec = sched.loop.spans
+    assert rec.enabled and len(rec.spans) > 0
+    assert unclosed_spans(rec) == []
+    assert rec.double_closes == 0
+    kinds = {(s.plane, s.kind) for s in rec.spans}
+    assert {("gen", "workflow"), ("gen", "gen"), ("eval", "eval"),
+            ("eval", "exec"), ("engine", "row"),
+            ("engine", "step")} <= kinds
+    # causal edges: every gen span hangs off its workflow span, and
+    # ancestry walks terminate at a root
+    by_sid = {s.sid: s for s in rec.spans}
+    for s in rec.spans:
+        if s.kind == "gen" and s.plane == "gen":
+            assert by_sid[s.parent].kind == "workflow"
+        chain = rec.ancestry(s.sid)
+        assert chain[-1].sid == s.sid and chain[0].parent == -1
+    # pagepool occupancy gauges sampled at every dispatched step
+    g = sched.loop.metrics.get_gauge("pagepool/in_use")
+    steps = sum(1 for s in rec.spans
+                if (s.plane, s.kind) == ("engine", "step"))
+    assert g is not None and 0 < len(g.samples) <= steps
 
 
 # ------------------------------------- run_engine_pool on shared stack
