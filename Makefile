@@ -20,11 +20,20 @@
 #                  kernel_search with interpret-mode builds executing
 #                  at device dispatch; prints build-overlap AND
 #                  remote-KV migration/fetch-overlap stats
+#   make bench-traffic - open-loop traffic plane table (arrival
+#                  generators -> admission control -> SLO-aware pool):
+#                  goodput, shed rate, per-tenant p99, autotune verdict
+#   make bench-gate - regression gate: compares the freshly-written
+#                  BENCH_e2e.json against the committed
+#                  benchmarks/BENCH_baseline.json (makespan, p99
+#                  feedback latency, goodput rows) and fails on
+#                  regression; see benchmarks/check_regression.py for
+#                  the baseline-refresh recipe
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 smoke serve bench-smoke smoke-real
+.PHONY: tier1 smoke serve bench-smoke smoke-real bench-traffic bench-gate
 
 tier1:
 	$(PY) -m pytest -x -q
@@ -35,14 +44,22 @@ smoke:
 serve:
 	$(PY) examples/serve_spec.py
 
+bench-traffic:
+	$(PY) -m benchmarks.table_traffic --smoke
+
 bench-smoke:
 	$(PY) -m benchmarks.table_work_stealing --smoke
 	$(PY) -m benchmarks.table_async_overlap --smoke
 	$(PY) -m benchmarks.table_remote_kv --smoke
 	$(PY) -m benchmarks.table_paged_kernel --smoke
+	$(PY) -m benchmarks.table_traffic --smoke
 	$(PY) -m benchmarks.table_decode_dispatch --smoke
 	$(PY) -m benchmarks.table_prefill_dispatch --smoke
 	$(PY) -m benchmarks.e2e_json --smoke --perfetto-out BENCH_perfetto.json
+	$(MAKE) bench-gate
+
+bench-gate:
+	$(PY) -m benchmarks.check_regression
 
 smoke-real:
 	$(PY) examples/kernel_search.py T6 3

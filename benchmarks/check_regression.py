@@ -1,0 +1,122 @@
+"""Bench regression gate: fresh ``BENCH_e2e.json`` vs the committed
+baseline (``benchmarks/BENCH_baseline.json``).
+
+The e2e snapshot's simulated sections are byte-deterministic on the
+virtual clock, so run-to-run drift is zero by construction — any delta
+against the committed baseline is a CODE change.  This gate makes such
+changes loud: CI (bench-smoke, ``make bench-gate``) compares the
+metrics below with per-metric directions and relative tolerances and
+fails on regression, printing the full per-row delta table either way.
+Tolerances exist so deliberate small behavior shifts (a retuned
+default, an extra trace event) don't block a PR; big moves in the
+wrong direction do.
+
+Checked metrics: end-to-end makespans (lower is better), p99 feedback
+latency (lower), and the traffic plane's goodput (higher) / shed-rate
+(lower) rows — the paper's serving-side health metrics.
+
+On a legitimate improvement or an accepted change, refresh the
+baseline::
+
+    PYTHONPATH=src python -m benchmarks.e2e_json --smoke
+    cp BENCH_e2e.json benchmarks/BENCH_baseline.json
+    git add benchmarks/BENCH_baseline.json
+
+and commit it with the change that moved the numbers.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BASELINE = ROOT / "benchmarks" / "BENCH_baseline.json"
+CURRENT = ROOT / "BENCH_e2e.json"
+
+# (dotted json path, direction, relative tolerance); "lower" = current
+# may exceed baseline by at most tol, "higher" = may fall short by tol
+METRICS = [
+    ("engine_pool.makespan_s", "lower", 0.10),
+    ("shared_pool.makespan_s", "lower", 0.10),
+    ("shared_pool.feedback_latency_p99", "lower", 0.15),
+    ("engine_shared_pool.makespan_s", "lower", 0.10),
+    ("traffic.steady.goodput_per_ks", "higher", 0.10),
+    ("traffic.burst.goodput_per_ks", "higher", 0.10),
+    ("traffic.diurnal.goodput_per_ks", "higher", 0.10),
+    ("traffic.composed.goodput_per_ks", "higher", 0.10),
+    ("traffic.composed.shed_rate", "lower", 0.15),
+    ("traffic.engine.goodput_per_ks", "higher", 0.10),
+]
+
+REFRESH = ("to accept intentionally-changed numbers, refresh the "
+           "baseline:\n"
+           "    PYTHONPATH=src python -m benchmarks.e2e_json --smoke\n"
+           "    cp BENCH_e2e.json benchmarks/BENCH_baseline.json\n"
+           "and commit benchmarks/BENCH_baseline.json with this change.")
+
+
+def _get(doc: dict, path: str):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def compare(baseline: dict, current: dict):
+    """Per-metric rows: (path, base, cur, delta_frac, status)."""
+    rows = []
+    for path, direction, tol in METRICS:
+        b, c = _get(baseline, path), _get(current, path)
+        if b is None or c is None:
+            rows.append((path, b, c, None,
+                         "MISSING" if c is None else "NEW"))
+            continue
+        b, c = float(b), float(c)
+        delta = (c - b) / b if b else (0.0 if c == b else float("inf"))
+        if direction == "lower":
+            bad = c > b * (1.0 + tol) + 1e-12
+        else:
+            bad = c < b * (1.0 - tol) - 1e-12
+        rows.append((path, b, c, delta, "REGRESSION" if bad else "ok"))
+    return rows
+
+
+def main() -> None:
+    argv = sys.argv
+    base_p = pathlib.Path(argv[argv.index("--baseline") + 1]) \
+        if "--baseline" in argv else BASELINE
+    cur_p = pathlib.Path(argv[argv.index("--current") + 1]) \
+        if "--current" in argv else CURRENT
+    if not base_p.exists():
+        sys.exit(f"no baseline at {base_p}\n{REFRESH}")
+    if not cur_p.exists():
+        sys.exit(f"no fresh snapshot at {cur_p} — run "
+                 "`PYTHONPATH=src python -m benchmarks.e2e_json --smoke` "
+                 "(or `make bench-smoke`) first")
+    baseline = json.loads(base_p.read_text())
+    current = json.loads(cur_p.read_text())
+    if baseline.get("smoke") != current.get("smoke"):
+        sys.exit(f"baseline smoke={baseline.get('smoke')} but current "
+                 f"smoke={current.get('smoke')}: regenerate one side so "
+                 f"both snapshots come from the same grid\n{REFRESH}")
+    rows = compare(baseline, current)
+    w = max(len(r[0]) for r in rows)
+    print(f"{'metric':<{w}}  {'baseline':>12}  {'current':>12}  "
+          f"{'delta':>8}  status")
+    for path, b, c, delta, status in rows:
+        ds = f"{delta * 100:+.2f}%" if delta is not None else "-"
+        bs = f"{b:.4f}" if isinstance(b, float) else str(b)
+        cs = f"{c:.4f}" if isinstance(c, float) else str(c)
+        print(f"{path:<{w}}  {bs:>12}  {cs:>12}  {ds:>8}  {status}")
+    bad = [r for r in rows if r[4] in ("REGRESSION", "MISSING")]
+    if bad:
+        names = ", ".join(r[0] for r in bad)
+        sys.exit(f"\nbench regression gate FAILED ({names})\n{REFRESH}")
+    print("\nbench regression gate: ok")
+
+
+if __name__ == "__main__":
+    main()

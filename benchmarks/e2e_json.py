@@ -65,6 +65,7 @@ from repro.core.metrics import utilization_timeline
 from repro.core.perfetto import dump_perfetto
 from repro.core.spans import unclosed_spans
 from repro.core.trace import (dump_trace, makespan, plane_breakdown,
+                              plane_pairing_anomalies,
                               unclosed_generations)
 from repro.search.driver import run_shared_pool
 
@@ -87,6 +88,10 @@ def build(smoke: bool = False) -> dict:
         "migrations": plane.migrations_done,
         "fetches": plane.fetches_done,
         "trace_events": len(plane.loop.trace),
+        # pairing-anomaly counts (ISSUE 10 satellite): counted since
+        # PR 9, now exported — the determinism job fails on nonzero
+        "plane_pairing_anomalies":
+            plane_pairing_anomalies(plane.loop.trace),
     }
 
     tasks = T10[:3] if smoke else T10
@@ -119,6 +124,8 @@ def build(smoke: bool = False) -> dict:
                                   for c in ctls),
         "utilization_any": _r(sched.utilization_any()),
         "trace_events": len(sched.loop.trace),
+        "plane_pairing_anomalies":
+            plane_pairing_anomalies(sched.loop.trace),
     }
     # engine-backed shared pool (§One-loop): real decode rows behind
     # the same controllers, one composed timeline for everything
@@ -153,7 +160,13 @@ def build(smoke: bool = False) -> dict:
                                   for c in ectls),
         "prefix_fetches": sum(c.result.prefix_fetches for c in ectls),
         "trace_events": len(esched.loop.trace),
+        "plane_pairing_anomalies":
+            plane_pairing_anomalies(esched.loop.trace),
     }
+    # open-loop traffic plane (ISSUE 10): goodput / shed / per-tenant
+    # p99 / autotune rows — byte-deterministic like the sections above
+    from benchmarks.table_traffic import traffic_section
+    traffic = traffic_section(smoke)
     # wall-clock section LAST (toggles jax_cpu_enable_async_dispatch,
     # restoring it on exit): loop vs scan vs sharded decode dispatch
     from benchmarks.table_decode_dispatch import CONFIGS, rows
@@ -171,7 +184,7 @@ def build(smoke: bool = False) -> dict:
             configs=PCONFIGS[:1] if smoke else PCONFIGS,
             iters=10 if smoke else 20)})
     return {"engine_pool": engine_pool, "shared_pool": shared_pool,
-            "engine_shared_pool": engine_shared_pool,
+            "engine_shared_pool": engine_shared_pool, "traffic": traffic,
             "decode_dispatch": decode_dispatch,
             "admission_dispatch": admission_dispatch, "smoke": smoke,
             "_engine_shared_trace": esched.loop.trace,
@@ -193,6 +206,21 @@ def main() -> None:
     out = ROOT / "BENCH_e2e.json"
     out.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
     print(f"wrote {out}")
+    if "--fail-on-anomalies" in sys.argv:
+        # determinism-job gate (ISSUE 10 satellite): any unpaired /
+        # duplicate plane event in any traced section is a failure
+        bad = {sec: row["plane_pairing_anomalies"]
+               for sec, row in data.items()
+               if isinstance(row, dict)
+               and any((row.get("plane_pairing_anomalies") or {}).values())}
+        bad.update({f"traffic.{k}": r["plane_pairing_anomalies"]
+                    for k, r in data["traffic"].items()
+                    if isinstance(r, dict)
+                    and any((r.get("plane_pairing_anomalies")
+                             or {}).values())})
+        if bad:
+            sys.exit(f"plane pairing anomalies detected: {bad}")
+        print("plane pairing anomalies: none")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ MODULES = [
     "table_async_overlap",
     "table_remote_kv",
     "table_paged_kernel",
+    "table_traffic",
     "table_decode_dispatch",
     "table5_breakdown",
     "table6_kernel_speedup",

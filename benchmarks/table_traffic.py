@@ -1,0 +1,215 @@
+"""Open-loop traffic plane: goodput / shed / per-tenant SLO table.
+
+Every other benchmark drives a CLOSED pool (N workflows at t=0); this
+one drives the OPEN-loop traffic plane (ISSUE 10): seeded arrival
+traces (``core.arrivals``) offer workflows to the admission controller,
+admitted workflows run as SpecControllers on the SLO-aware shared pool
+(``run_traffic``), and the table reports the serving-side metrics:
+
+    goodput      SLO-met workflows per 1000 virtual seconds (SLO
+                 attainment judged from ARRIVAL, so deferral time
+                 counts — goodput measures the admission policy, not
+                 just the scheduler),
+    shed_rate    fraction of offered workflows rejected by admission
+                 control (predicted pressure / page headroom), the
+                 open-loop overload valve,
+    p99_<tenant> per-tenant p99 feedback latency from the virtual-clock
+                 metrics registry (``feedback_latency:<tenant>``),
+    util_any     paper Table-4 utilization over the traffic run.
+
+Scenarios compose the three generator shapes — steady Poisson, bursty
+(two-state MMPP), diurnal (thinned sinusoid) — plus their ``compose``d
+union, all on one seeded stream each, so every row is byte-
+deterministic run-to-run.  One engine-backed row runs a small trace
+with ``llm="engine"`` (real continuous-batched decode rows behind the
+admitted workflows, the page-headroom admission gate live), and the
+``autotune`` rows feed that run's observed fork-depth histogram to
+``serving.pagepool.autotune_pool`` — the ROADMAP autotuner picking
+``page_size``/``num_pages`` from measured fork behavior.
+
+``--trace-out PATH`` serializes the composed-scenario run's trace
+byte-stably; the CI ``traffic-determinism`` leg runs this benchmark
+twice in fresh processes and byte-compares the two files (falling back
+to the ``core.replay`` bisector on mismatch).
+
+Run standalone (``python -m benchmarks.table_traffic``), via ``make
+bench-traffic`` / ``make bench-smoke`` (reduced grid), or as part of
+benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks._data import SEED, timed, trace_out_arg
+from repro.core.arrivals import (BurstyTrace, DiurnalTrace, PoissonTrace,
+                                 TenantSpec, compose)
+from repro.core.scheduler import AdmissionConfig
+from repro.core.trace import dump_trace
+from repro.search.driver import run_traffic
+from repro.serving.pagepool import autotune_pool
+
+# three tenants, three SLO classes, deliberately unequal weights (the
+# fairness test pins that tC's 1x weight is not starved by tA's 4x)
+TENANTS = (TenantSpec("tA", share=1.0, weight=4.0, slo="interactive"),
+           TenantSpec("tB", share=1.0, weight=2.0, slo="standard"),
+           TenantSpec("tC", share=1.0, weight=1.0, slo="batch"))
+TASKS = tuple(f"T{i}" for i in range(1, 11))     # calibrated workload ids
+
+
+def scenarios(smoke: bool):
+    """(label, arrivals) per scenario; smoke shrinks horizon+rate so the
+    determinism leg (two full runs) stays cheap."""
+    h = 6_000.0 if smoke else 30_000.0
+    base = (1 / 600.0) if smoke else (1 / 300.0)
+    kw = dict(tenants=TENANTS, tasks=TASKS)
+    steady = PoissonTrace(base, seed=SEED, **kw).generate(h)
+    burst = BurstyTrace(base, burst_factor=6.0, calm_mean_s=h / 3,
+                        burst_mean_s=h / 8, seed=SEED + 1,
+                        **kw).generate(h)
+    diurnal = DiurnalTrace(base, amplitude=0.8, period_s=h / 2,
+                           seed=SEED + 2, **kw).generate(h)
+    return [("steady", steady), ("burst", burst), ("diurnal", diurnal),
+            ("composed", compose(steady, burst, diurnal))]
+
+
+def summarize(sched, adm, flows) -> dict:
+    """Deterministic serving metrics of one traffic run."""
+    mk = sched.loop.now
+    met = sum(f["met"] for f in flows)
+    out = {
+        "offered": adm.offered,
+        "admitted": adm.decisions["admit"],
+        "deferred": adm.decisions["defer"],
+        "shed": adm.decisions["shed"],
+        "shed_rate": adm.shed_rate,
+        "finished": len(flows),
+        "slo_met": met,
+        "goodput_per_ks": met / mk * 1000.0 if mk > 0 else 0.0,
+        "makespan_s": mk,
+        "util_any": sched.utilization_any(),
+    }
+    for t in TENANTS:
+        h = sched.loop.metrics.get_histogram(f"feedback_latency:{t.name}")
+        out[f"p99_feedback_{t.name}"] = \
+            h.percentile(0.99) if h is not None and h.total else 0.0
+        out[f"service_s_{t.name}"] = \
+            sched.tenant_service.get(t.name, 0.0)
+    return out
+
+
+def run_scenario(label: str, arrivals, smoke: bool, llm: str = "sim",
+                 trace: bool = False):
+    devices = 4 if smoke else 10
+    adm = AdmissionConfig(defer_pressure=1.5, shed_pressure=3.0,
+                          defer_delay_s=300.0)
+    kw = {}
+    if llm == "engine":
+        devices = 4
+        adm = AdmissionConfig(defer_pressure=1.5, shed_pressure=3.0,
+                              defer_delay_s=300.0, max_live=3)
+        kw["engine_opts"] = dict(reasoning_tokens=12, spec_tokens=4)
+    return run_traffic(arrivals, iterations=2, devices=devices,
+                       seed=SEED, tenants=TENANTS, admission=adm,
+                       trace=trace, llm=llm, metrics=True, **kw)
+
+
+def engine_run(smoke: bool = False):
+    """The engine-backed traffic run + the autotuner verdict: real
+    decode behind admission (page-headroom gate live), then
+    ``autotune_pool`` sized from the run's OBSERVED fork-depth
+    histogram (the ROADMAP autotuner).  Small either way — the
+    determinism leg runs the whole benchmark twice."""
+    earr = PoissonTrace(1 / 600.0, seed=SEED, tenants=TENANTS,
+                        tasks=TASKS).generate(3_600.0)
+    esched, eadm, eflows = run_scenario("engine", earr, smoke,
+                                        llm="engine")
+    eng = esched.engine
+    tuned = autotune_pool(
+        esched.loop.metrics.get_histogram("fork_depth"),
+        max_batch=eng.max_batch, max_len=eng.max_len)
+    return esched, eadm, eflows, tuned
+
+
+def rows(smoke: bool = False, trace_sink: list = None):
+    out = []
+    for label, arrivals in scenarios(smoke):
+        trace = trace_sink is not None and label == "composed"
+        ((sched, adm, flows), us) = timed(
+            run_scenario, label, arrivals, smoke, trace=trace)
+        s = summarize(sched, adm, flows)
+        for k in ("goodput_per_ks", "shed_rate", "util_any"):
+            out.append((f"table_traffic_{k}_{label}", us, round(s[k], 4)))
+        for t in TENANTS:
+            out.append((f"table_traffic_p99_{t.name}_{label}", us,
+                        round(s[f"p99_feedback_{t.name}"], 2)))
+        if trace:
+            trace_sink.append(list(sched.loop.trace))
+    ((esched, eadm, eflows, tuned), us) = timed(engine_run, smoke)
+    es = summarize(esched, eadm, eflows)
+    out.append(("table_traffic_goodput_per_ks_engine", us,
+                round(es["goodput_per_ks"], 4)))
+    out.append(("table_traffic_shed_rate_engine", us,
+                round(es["shed_rate"], 4)))
+    out.append(("table_traffic_min_headroom_engine", us,
+                round(eadm.min_headroom, 4)))
+    out.append(("table_traffic_autotune_page_size", us,
+                int(tuned["page_size"])))
+    out.append(("table_traffic_autotune_num_pages", us,
+                int(tuned["num_pages"])))
+    return out
+
+
+def traffic_section(smoke: bool = False) -> dict:
+    """The byte-deterministic ``BENCH_e2e.json`` "traffic" section:
+    per-scenario goodput/shed/per-tenant-p99 rows, the composed
+    scenario's utilization timeline + pairing-anomaly counts, and the
+    engine-backed run with the autotuner verdict."""
+    from repro.core.metrics import utilization_timeline
+    from repro.core.trace import makespan, plane_pairing_anomalies
+
+    def _r(x):
+        return round(float(x), 6)
+
+    def _row(s: dict) -> dict:
+        return {k: (_r(v) if isinstance(v, float) else v)
+                for k, v in s.items()}
+
+    section: dict = {}
+    for label, arrivals in scenarios(smoke):
+        trace = label == "composed"
+        sched, adm, flows = run_scenario(label, arrivals, smoke,
+                                         trace=trace)
+        row = _row(summarize(sched, adm, flows))
+        if trace:
+            row["plane_pairing_anomalies"] = \
+                plane_pairing_anomalies(sched.loop.trace)
+            ut = utilization_timeline(sched.loop.trace,
+                                      4 if smoke else 10,
+                                      makespan(sched.loop.trace))
+            row["utilization_timeline"] = {k: [_r(f) for f in v]
+                                           for k, v in ut.items()}
+            row["trace_events"] = len(sched.loop.trace)
+        section[label] = row
+    esched, eadm, eflows, tuned = engine_run(smoke)
+    erow = _row(summarize(esched, eadm, eflows))
+    erow["min_headroom"] = _r(eadm.min_headroom)
+    section["engine"] = erow
+    section["autotune"] = {"page_size": int(tuned["page_size"]),
+                           "num_pages": int(tuned["num_pages"]),
+                           "fork_depth_p95": _r(tuned["fork_depth_p95"])}
+    return section
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    trace_out = trace_out_arg()
+    sink: list = []
+    print("name,us_per_call,derived")
+    for name, us, derived in rows(smoke=smoke, trace_sink=sink):
+        print(f"{name},{us:.0f},{derived}", flush=True)
+    if trace_out:
+        dump_trace(sink[0], trace_out)
+
+
+if __name__ == "__main__":
+    main()

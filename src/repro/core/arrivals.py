@@ -1,0 +1,292 @@
+"""Open-loop arrival traces for the traffic plane (DESIGN.md
+§Traffic-plane).
+
+Every benchmark before this plane drove a CLOSED pool: N workflows
+started at t=0 and the pool drained.  The paper's §6 inefficiency —
+profiling feedback latency under *bursty speculative load* — and the
+ROADMAP's million-workflow north star both need OPEN-loop arrivals:
+workflows arrive on their own schedule, tagged by tenant, and the
+system decides (admission control, ``core.scheduler``) what to do when
+they outpace capacity.
+
+This module owns WHEN workflows arrive, nothing else:
+
+  * seeded generators — ``PoissonTrace`` (memoryless steady load),
+    ``BurstyTrace`` (two-state Markov-modulated Poisson: a base rate
+    spiked by ``burst_factor`` while the burst state holds),
+    ``DiurnalTrace`` (sinusoidal rate, thinned inhomogeneous Poisson),
+    ``ReplayTrace`` (parse a serialized trace back in) — all driven by
+    ``random.Random(seed)``, so a (generator-config, seed) pair is
+    run-to-run AND cross-platform byte-deterministic;
+  * tenant tagging — a ``TenantSpec`` list with arrival ``share``
+    weights; each arrival draws its tenant and task deterministically
+    from the same seeded stream;
+  * byte-stable serialization (``format_arrivals``/``parse_arrivals``)
+    mirroring ``core.trace.format_trace``: ``repr`` floats round-trip
+    exactly, so replay-from-file reproduces the generated trace
+    event-for-event;
+  * ``schedule_arrivals`` — posts each arrival as an event on the ONE
+    shared ``EventLoop`` (the same loop engine steps, eval grants and
+    transfers run on) and records a ``("traffic", "arrive", tenant:id)``
+    line on the composed trace, so arrival timing is part of the
+    byte-compared determinism contract.
+
+Generators PRE-generate the trace (a list, not a live process): a
+thousand-workflow trace is a thousand tuples and one loop event each —
+the scale knob is the horizon/rate, not simulator machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Callable, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.clock import EventLoop
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant sharing the pool: ``share`` weights arrival draws,
+    ``weight`` is its fair-queueing weight (``core.scheduler``), and
+    ``slo`` names its SLO class (deadline/priority semantics)."""
+    name: str
+    share: float = 1.0               # arrival-mix weight
+    weight: float = 1.0              # scheduler fairness weight
+    slo: str = "standard"            # SLO class name
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One workflow arrival: at virtual time ``t``, tenant ``tenant``
+    asks to start a workflow on ``task_id``.  ``wid`` is unique within
+    the trace (the workflow's name is ``{tenant}.{wid}``)."""
+    t: float
+    tenant: str
+    task_id: str
+    wid: int
+    slo: str = "standard"
+
+    @property
+    def name(self) -> str:
+        return f"{self.tenant}.{self.wid}"
+
+
+DEFAULT_TENANTS = (TenantSpec("tA", share=1.0, weight=1.0,
+                              slo="interactive"),
+                   TenantSpec("tB", share=1.0, weight=1.0,
+                              slo="standard"),
+                   TenantSpec("tC", share=1.0, weight=1.0, slo="batch"))
+
+
+def _finish(times: List[float], tenants: Sequence[TenantSpec],
+            tasks: Sequence[str], rng: random.Random,
+            wid0: int) -> List[Arrival]:
+    """Tag raw arrival times with tenant/task draws from the SAME
+    seeded stream (one tenant draw per arrival, in arrival order, so
+    the tagging is as deterministic as the times)."""
+    tenants = list(tenants)
+    total = sum(t.share for t in tenants)
+    out: List[Arrival] = []
+    for i, t in enumerate(times):
+        r = rng.random() * total
+        acc = 0.0
+        spec = tenants[-1]
+        for cand in tenants:
+            acc += cand.share
+            if r <= acc:
+                spec = cand
+                break
+        out.append(Arrival(t=t, tenant=spec.name,
+                           task_id=tasks[(wid0 + i) % len(tasks)],
+                           wid=wid0 + i, slo=spec.slo))
+    return out
+
+
+class PoissonTrace:
+    """Homogeneous Poisson arrivals: exponential inter-arrival times at
+    ``rate`` (arrivals / virtual second) until ``horizon``."""
+
+    def __init__(self, rate: float, *, seed: int = 0,
+                 tenants: Sequence[TenantSpec] = DEFAULT_TENANTS,
+                 tasks: Sequence[str] = ("T1",)):
+        assert rate > 0.0
+        self.rate, self.seed = rate, seed
+        self.tenants, self.tasks = tuple(tenants), tuple(tasks)
+
+    def generate(self, horizon: float, wid0: int = 0) -> List[Arrival]:
+        rng = random.Random(self.seed)
+        times: List[float] = []
+        t = 0.0
+        while True:
+            t += rng.expovariate(self.rate)
+            if t >= horizon:
+                break
+            times.append(t)
+        return _finish(times, self.tenants, self.tasks, rng, wid0)
+
+
+class BurstyTrace:
+    """Two-state Markov-modulated Poisson process: the rate alternates
+    between ``base_rate`` and ``base_rate * burst_factor``; state
+    holding times are exponential with means ``calm_mean_s`` /
+    ``burst_mean_s``.  The generated state segments are kept on
+    ``self.segments`` (``(t0, t1, state)``) so tests can verify the
+    empirical per-state rates hit the configured burst factor."""
+
+    def __init__(self, base_rate: float, *, burst_factor: float = 6.0,
+                 calm_mean_s: float = 2000.0, burst_mean_s: float = 500.0,
+                 seed: int = 0,
+                 tenants: Sequence[TenantSpec] = DEFAULT_TENANTS,
+                 tasks: Sequence[str] = ("T1",)):
+        assert base_rate > 0.0 and burst_factor >= 1.0
+        self.base_rate, self.burst_factor = base_rate, burst_factor
+        self.calm_mean_s, self.burst_mean_s = calm_mean_s, burst_mean_s
+        self.seed = seed
+        self.tenants, self.tasks = tuple(tenants), tuple(tasks)
+        self.segments: List[Tuple[float, float, str]] = []
+
+    def generate(self, horizon: float, wid0: int = 0) -> List[Arrival]:
+        rng = random.Random(self.seed)
+        self.segments = []
+        times: List[float] = []
+        t, state = 0.0, "calm"
+        while t < horizon:
+            hold = rng.expovariate(
+                1.0 / (self.calm_mean_s if state == "calm"
+                       else self.burst_mean_s))
+            t1 = min(t + hold, horizon)
+            rate = self.base_rate * (self.burst_factor
+                                     if state == "burst" else 1.0)
+            tt = t
+            while True:
+                tt += rng.expovariate(rate)
+                if tt >= t1:
+                    break
+                times.append(tt)
+            self.segments.append((t, t1, state))
+            t = t1
+            state = "burst" if state == "calm" else "calm"
+        return _finish(times, self.tenants, self.tasks, rng, wid0)
+
+
+class DiurnalTrace:
+    """Inhomogeneous Poisson with a sinusoidal rate
+    ``base_rate * (1 + amplitude * sin(2*pi*t/period))`` via thinning
+    (Lewis-Shedler): candidates at the peak rate, each kept with
+    probability rate(t)/peak — exact and seeded."""
+
+    def __init__(self, base_rate: float, *, amplitude: float = 0.8,
+                 period_s: float = 10_000.0, seed: int = 0,
+                 tenants: Sequence[TenantSpec] = DEFAULT_TENANTS,
+                 tasks: Sequence[str] = ("T1",)):
+        assert base_rate > 0.0 and 0.0 <= amplitude <= 1.0
+        self.base_rate, self.amplitude = base_rate, amplitude
+        self.period_s, self.seed = period_s, seed
+        self.tenants, self.tasks = tuple(tenants), tuple(tasks)
+
+    def rate_at(self, t: float) -> float:
+        return self.base_rate * (
+            1.0 + self.amplitude * math.sin(2.0 * math.pi * t
+                                            / self.period_s))
+
+    def generate(self, horizon: float, wid0: int = 0) -> List[Arrival]:
+        rng = random.Random(self.seed)
+        peak = self.base_rate * (1.0 + self.amplitude)
+        times: List[float] = []
+        t = 0.0
+        while True:
+            t += rng.expovariate(peak)
+            if t >= horizon:
+                break
+            if rng.random() * peak <= self.rate_at(t):
+                times.append(t)
+        return _finish(times, self.tenants, self.tasks, rng, wid0)
+
+
+class ReplayTrace:
+    """Replay a serialized arrival trace (``format_arrivals`` output)
+    back as arrivals — the from-file generator of the traffic plane."""
+
+    def __init__(self, text: Optional[str] = None,
+                 path: Optional[str] = None):
+        assert (text is None) != (path is None), \
+            "ReplayTrace takes exactly one of text= / path="
+        if path is not None:
+            with open(path) as f:
+                text = f.read()
+        self.arrivals = parse_arrivals(text)
+
+    def generate(self, horizon: Optional[float] = None,
+                 wid0: int = 0) -> List[Arrival]:
+        if horizon is None:
+            return list(self.arrivals)
+        return [a for a in self.arrivals if a.t < horizon]
+
+
+def compose(*traces: Iterable[Arrival]) -> List[Arrival]:
+    """Merge arrival traces into one timeline, re-numbering ``wid`` in
+    (t, original-wid) order so composed names stay unique and the
+    result is independent of argument chunking."""
+    merged = sorted((a for tr in traces for a in tr),
+                    key=lambda a: (a.t, a.wid, a.tenant))
+    return [dataclasses.replace(a, wid=i) for i, a in enumerate(merged)]
+
+
+# ------------------------------------------------------- serialization
+def format_arrivals(arrivals: Iterable[Arrival]) -> str:
+    """Byte-stable text form mirroring ``core.trace.format_trace``:
+    one ``repr(t)<TAB>tenant<TAB>task<TAB>wid<TAB>slo`` line per
+    arrival (``repr`` round-trips floats exactly)."""
+    return "".join(
+        f"{a.t!r}\t{a.tenant}\t{a.task_id}\t{a.wid}\t{a.slo}\n"
+        for a in arrivals)
+
+
+def parse_arrivals(text: str) -> List[Arrival]:
+    """Exact inverse of ``format_arrivals`` (corrupt lines raise)."""
+    out: List[Arrival] = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line:
+            continue
+        parts = line.split("\t")
+        if len(parts) != 5:
+            raise ValueError(f"line {lineno}: expected 5 tab-separated "
+                             f"fields, got {len(parts)}: {line!r}")
+        t, tenant, task, wid, slo = parts
+        out.append(Arrival(t=float(t), tenant=tenant, task_id=task,
+                           wid=int(wid), slo=slo))
+    return out
+
+
+def dump_arrivals(arrivals: Iterable[Arrival], path) -> None:
+    with open(path, "w") as f:
+        f.write(format_arrivals(arrivals))
+
+
+def load_arrivals(path) -> List[Arrival]:
+    with open(path) as f:
+        return parse_arrivals(f.read())
+
+
+# ------------------------------------------------------ loop scheduling
+def schedule_arrivals(loop: EventLoop, arrivals: Sequence[Arrival],
+                      offer: Callable[[Arrival], None]) -> int:
+    """Post every arrival as an event on the shared loop.  At its
+    virtual time each arrival records ``("traffic", "arrive",
+    tenant:wid)`` on the composed trace and is handed to ``offer`` —
+    the admission controller's entry point (``core.scheduler``).
+
+    Arrivals are events, not a generator pump: thousands of concurrent
+    workflows are thousands of heap entries on the one loop, exactly
+    like any other plane's work."""
+    now = loop.now
+
+    def fire(a: Arrival) -> None:
+        loop.record("traffic", "arrive", f"{a.tenant}:{a.wid}")
+        offer(a)
+
+    for a in arrivals:
+        loop.schedule(max(a.t - now, 0.0), lambda a=a: fire(a),
+                      tag="arrival")
+    return len(arrivals)

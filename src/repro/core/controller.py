@@ -31,6 +31,7 @@ the un-cached suffix is charged.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
 from repro.core.clock import EventLoop
@@ -253,8 +254,17 @@ class SpecController:
     def __init__(self, loop: EventLoop, scheduler: ElasticScheduler,
                  llm: LLMBackend, evaluator: EvalBackend,
                  search: SearchAlgorithm, cfg: SpecGenConfig,
-                 name: str = "w0", transport=None):
+                 name: str = "w0", transport=None,
+                 tenant: str = "", deadline_s: float = math.inf):
         self.loop, self.sched = loop, scheduler
+        # traffic plane (DESIGN.md §Traffic-plane): the owning tenant
+        # and the workflow-relative SLO deadline.  Defaults ("" / inf)
+        # keep every closed-loop caller — and the golden traces —
+        # byte-identical: the stamps below become the Request field
+        # defaults and the SLO heap-key layer is off.
+        self.tenant = tenant
+        self.deadline_s = deadline_s
+        self.deadline = math.inf
         # generations run through the GenerationBackend seam; a plain
         # scripted LLMBackend is auto-wrapped so existing call sites
         # (and the byte-pinned sim path) are unchanged
@@ -302,6 +312,9 @@ class SpecController:
         self._early_terms = 0
         self._feedback_total = 0
         self._t0 = self.loop.now
+        # absolute SLO deadline: workflow-relative budget anchored at
+        # start time — the EDF key every eval request below carries
+        self.deadline = self._t0 + self.deadline_s
         # causal root (§Observability): everything this workflow causes
         # — generations, forks, evals, transfers — parents up to here
         self._wspan = self.loop.spans.begin(
@@ -503,6 +516,8 @@ class SpecController:
         fut = submit_validate(self.evaluator, cand)
         req = fut.request
         req.owner = self.name
+        req.tenant = self.tenant
+        req.deadline = self.deadline
         req.priority = PRIO_FALLBACK if fallback else PRIO_SPEC
         # eval span: open at SUBMIT (queue wait is part of the span);
         # the scheduler closes it at complete or abort — either path,
@@ -531,6 +546,8 @@ class SpecController:
         fut = submit_profile(self.evaluator, cand)
         req = fut.request
         req.owner = self.name
+        req.tenant = self.tenant
+        req.deadline = self.deadline
         req.priority = PRIO_FALLBACK if fallback else PRIO_SPEC
         req.span = self.loop.spans.begin(
             "eval", "eval", f"profiling:{self.name}",

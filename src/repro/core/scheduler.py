@@ -44,10 +44,72 @@ import dataclasses
 import heapq
 import itertools
 import math
-from typing import List, Optional
+from typing import Callable, Dict, List, Optional
 
+from repro.core.arrivals import Arrival, TenantSpec
 from repro.core.clock import EventLoop
 from repro.core.types import Request
+
+
+# -------------------------------------------------------- SLO policy
+# Traffic-plane scheduling semantics (DESIGN.md §Traffic-plane):
+# PRIO_FALLBACK / PRIO_SPEC stay the PRIMARY key (an iteration-gating
+# fallback kernel always outranks speculative work, whatever the
+# tenant); below that, requests order by SLO class rank, then by
+# weighted per-tenant fairness (normalized service: a tenant that has
+# consumed more device-seconds per unit weight yields), then earliest
+# deadline first, then the per-pool LAF/FIFO policy key.  With
+# ``SchedulerConfig.slo=None`` (the default, and every pre-traffic
+# caller) the heap keys are built EXACTLY as before — the golden
+# traces cannot tell this code exists.
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One deadline/priority class: ``rank`` orders classes below the
+    FALLBACK/SPEC primary key (lower = more urgent), ``deadline_s`` is
+    the workflow-relative SLO deadline goodput is judged against."""
+    name: str
+    rank: int
+    deadline_s: float
+
+
+DEFAULT_SLO_CLASSES = {
+    "interactive": SLOClass("interactive", 0, 4_000.0),
+    "standard": SLOClass("standard", 1, 12_000.0),
+    "batch": SLOClass("batch", 2, 40_000.0),
+}
+
+
+@dataclasses.dataclass
+class SLOPolicy:
+    """Per-tenant SLO wiring: which class each tenant runs in and its
+    fair-share weight.  Unknown tenants fall back to ``default``."""
+    tenants: Dict[str, TenantSpec] = dataclasses.field(default_factory=dict)
+    classes: Dict[str, SLOClass] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_SLO_CLASSES))
+    default: str = "standard"
+
+    @classmethod
+    def from_tenants(cls, tenants) -> "SLOPolicy":
+        return cls(tenants={t.name: t for t in tenants})
+
+    def _spec(self, tenant: str) -> Optional[TenantSpec]:
+        return self.tenants.get(tenant)
+
+    def slo_class(self, tenant: str) -> SLOClass:
+        spec = self._spec(tenant)
+        name = spec.slo if spec is not None else self.default
+        return self.classes.get(name, self.classes[self.default])
+
+    def rank(self, tenant: str) -> int:
+        return self.slo_class(tenant).rank
+
+    def weight(self, tenant: str) -> float:
+        spec = self._spec(tenant)
+        return max(spec.weight if spec is not None else 1.0, 1e-9)
+
+    def deadline_s(self, tenant: str) -> float:
+        return self.slo_class(tenant).deadline_s
 
 
 @dataclasses.dataclass
@@ -77,6 +139,11 @@ class SchedulerConfig:
     # Off by default to keep the paper-faithful ablation clean; measured
     # separately in EXPERIMENTS.md §Perf.
     work_stealing: bool = False
+    # Traffic plane (DESIGN.md §Traffic-plane): per-tenant SLO classes
+    # + weighted fairness + EDF layered UNDER the FALLBACK/SPEC primary
+    # key.  None (the default) builds heap keys exactly as before —
+    # every pre-traffic golden trace is byte-identical.
+    slo: Optional[SLOPolicy] = None
 
 
 class _PriorityQueue:
@@ -86,20 +153,33 @@ class _PriorityQueue:
     Pop order: (priority-if-enabled, policy key) — LAF's key is the
     negated submission sequence (newest first), FIFO's the sequence
     itself.  Re-pushing after an owner-scoped abort re-keys from the
-    preserved ``Request.priority``, so relative order survives."""
+    preserved ``Request.priority``, so relative order survives.
 
-    __slots__ = ("_heap", "_seq", "policy", "use_priority")
+    With an SLO policy attached (``slo_key`` non-None; traffic plane
+    only) the key grows three middle terms — (class rank, tenant
+    normalized-service snapshot, absolute deadline) — between the
+    FALLBACK/SPEC primary and the LAF/FIFO tail: class-rank tiering,
+    weighted fairness across tenants, EDF within a tenant.  Without a
+    policy the key tuple is built exactly as before."""
 
-    def __init__(self, policy: str, use_priority: bool):
+    __slots__ = ("_heap", "_seq", "policy", "use_priority", "slo_key")
+
+    def __init__(self, policy: str, use_priority: bool,
+                 slo_key: Optional[Callable[[Request], tuple]] = None):
         self._heap: List[tuple] = []
         self._seq = itertools.count()
         self.policy = policy
         self.use_priority = use_priority
+        self.slo_key = slo_key
 
     def push(self, req: Request) -> None:
         s = next(self._seq)
-        key = (req.priority if self.use_priority else 0,
-               -s if self.policy == "laf" else s)
+        prio = req.priority if self.use_priority else 0
+        pol = -s if self.policy == "laf" else s
+        if self.slo_key is None:
+            key = (prio, pol)
+        else:
+            key = (prio,) + self.slo_key(req) + (pol,)
         heapq.heappush(self._heap, (key, s, req))
 
     def pop(self) -> Request:
@@ -140,8 +220,24 @@ class ElasticScheduler:
         self.loop = loop
         self.cfg = cfg
         self.devices = [_Device(i) for i in range(cfg.num_devices)]
-        self.q_val = _PriorityQueue(cfg.validation_policy, cfg.priority)
-        self.q_prof = _PriorityQueue(cfg.profiling_policy, cfg.priority)
+        # weighted per-tenant fairness state (traffic plane only):
+        # normalized service = device-seconds consumed / tenant weight.
+        # The heap key snapshots it at push, so a tenant that has been
+        # served more per unit weight sorts behind lighter ones.
+        self._tenant_vtime: Dict[str, float] = {}
+        self.tenant_service: Dict[str, float] = {}
+        slo_key = None
+        if cfg.slo is not None:
+            pol = cfg.slo
+
+            def slo_key(req: Request, _pol=pol) -> tuple:
+                return (_pol.rank(req.tenant),
+                        self._tenant_vtime.get(req.tenant, 0.0),
+                        req.deadline)
+        self.q_val = _PriorityQueue(cfg.validation_policy, cfg.priority,
+                                    slo_key)
+        self.q_prof = _PriorityQueue(cfg.profiling_policy, cfg.priority,
+                                     slo_key)
         self.L_val = 0
         self.L_prof = 0
         self.iteration = 0
@@ -372,6 +468,22 @@ class ElasticScheduler:
             if t_sub is not None:
                 self.loop.metrics.histogram("feedback_latency") \
                     .observe(req.finished - t_sub)
+                if req.tenant:
+                    # per-tenant percentile rows (traffic plane): same
+                    # submit->profile-done pairing, bucketed by tenant
+                    self.loop.metrics.histogram(
+                        f"feedback_latency:{req.tenant}") \
+                        .observe(req.finished - t_sub)
+        if req.tenant and req.started is not None:
+            # weighted-fairness bookkeeping: charge the tenant its
+            # device-seconds, normalized by weight for the heap key
+            dur = req.finished - req.started
+            self.tenant_service[req.tenant] = \
+                self.tenant_service.get(req.tenant, 0.0) + dur
+            if self.cfg.slo is not None:
+                self._tenant_vtime[req.tenant] = \
+                    self._tenant_vtime.get(req.tenant, 0.0) \
+                    + dur / self.cfg.slo.weight(req.tenant)
         if req.kind == "validation" and req.started is not None:
             dur = req.finished - req.started
             self._svc_n += 1
@@ -470,3 +582,154 @@ class ElasticScheduler:
     @property
     def capacity(self) -> tuple:
         return (self.n_val, self.n_prof)
+
+
+# ------------------------------------------------------------ admission
+@dataclasses.dataclass
+class AdmissionConfig:
+    """Knobs of the open-loop admission controller.
+
+    Pressure thresholds are in "pools of predicted load": 1.0 means the
+    predicted concurrent demand exactly fills the device pool.  Between
+    ``defer_pressure`` and ``shed_pressure`` new workflows are DEFERRED
+    (parked and re-offered after ``defer_delay_s``, up to ``defer_max``
+    times); above ``shed_pressure`` — or when a deferral ages out —
+    they are SHED (rejected outright, counted against goodput)."""
+    defer_pressure: float = 1.5
+    shed_pressure: float = 3.0
+    defer_delay_s: float = 240.0
+    defer_max: int = 2
+    # minimum engine page-pool headroom (free-page fraction) to admit a
+    # workflow when an engine is attached: admission yields BEFORE the
+    # pool's own exhaustion/reclaim machinery has to act
+    page_headroom: float = 0.125
+    # EWMA halflife (virtual s) of the workflow arrival rate, and the
+    # EWMA span (completions) of the workflow service-time estimate
+    wf_rate_halflife: float = 1200.0
+    svc_halflife_n: float = 8.0
+    # hard cap on concurrently-admitted workflows (0 = unbounded)
+    max_live: int = 0
+
+
+class AdmissionController:
+    """Admission control for open-loop arrivals (DESIGN.md
+    §Traffic-plane): decide admit / defer / shed BEFORE a workflow
+    touches the engine or the eval queues.
+
+    The predicted-pressure signal extends ``ElasticScheduler.pressure``
+    (queued validations + rate x service, per device) with the
+    workflow-level analogue: live workflows plus the arrivals EXPECTED
+    within one mean workflow service time (EWMA arrival rate x EWMA
+    e2e service time), normalized by pool size.  Shedding at the
+    workflow boundary is what keeps the page pool and eval queues out
+    of their own loud failure modes — ``PagePoolExhausted`` is an
+    error, a shed is a policy decision.
+
+    Decisions are recorded on the composed trace (``("traffic",
+    "admit"|"defer"|"shed", tenant:wid)``), so the byte-determinism CI
+    contract covers admission behavior too."""
+
+    def __init__(self, loop: EventLoop, sched: ElasticScheduler,
+                 cfg: Optional[AdmissionConfig] = None, engine=None,
+                 start_fn: Optional[Callable[[Arrival], None]] = None):
+        self.loop, self.sched = loop, sched
+        self.cfg = cfg if cfg is not None else AdmissionConfig()
+        self.engine = engine
+        self.start_fn = start_fn
+        self.live = 0
+        self.offered = 0
+        self.decisions = {"admit": 0, "defer": 0, "shed": 0}
+        self.shed_by_reason: Dict[str, int] = {}
+        self.shed_by_tenant: Dict[str, int] = {}
+        self.shed_arrivals: List[Arrival] = []
+        self.min_headroom = 1.0              # lowest page headroom seen
+        self._rate = 0.0                     # EWMA workflow arrivals/s
+        self._rate_t = loop.now
+        self._svc = 0.0                      # EWMA workflow e2e seconds
+        self._svc_n = 0
+
+    # ------------------------------------------------------ rate/service
+    def _decay(self) -> None:
+        dt = self.loop.now - self._rate_t
+        if dt > 0.0:
+            tau = self.cfg.wf_rate_halflife / math.log(2.0)
+            self._rate *= math.exp(-dt / tau)
+            self._rate_t = self.loop.now
+
+    def _note_arrival(self) -> None:
+        self._decay()
+        self._rate += 1.0 / (self.cfg.wf_rate_halflife / math.log(2.0))
+
+    def workflow_done(self, e2e_s: float) -> None:
+        """Driver callback at workflow completion: frees a live slot
+        and feeds the service-time EWMA the predictor multiplies the
+        arrival rate by."""
+        self.live = max(self.live - 1, 0)
+        self._svc_n += 1
+        a = min(1.0, 1.0 / min(self._svc_n, self.cfg.svc_halflife_n))
+        self._svc += a * (e2e_s - self._svc)
+
+    @property
+    def predicted_load(self) -> float:
+        """Predicted concurrent workflows per device: live admissions
+        plus arrivals expected within one mean service time — the
+        workflow-level extension of ``ElasticScheduler.pressure`` (the
+        eval-queue signal, folded in below as the max)."""
+        self._decay()
+        g = max(self.sched.cfg.num_devices, 1)
+        wf = (self.live + self._rate * self._svc) / g
+        return max(wf, self.sched.pressure)
+
+    def _engine_headroom(self) -> float:
+        return self.engine.admission_headroom()
+
+    # ----------------------------------------------------------- decide
+    def _decide(self) -> tuple:
+        """(decision, reason) for one offered workflow, ignoring the
+        deferral budget (``offer`` escalates aged deferrals)."""
+        if self.cfg.max_live and self.live >= self.cfg.max_live:
+            return "defer", "live-cap"
+        if self.engine is not None:
+            hr = self._engine_headroom()
+            self.min_headroom = min(self.min_headroom, hr)
+            if hr < self.cfg.page_headroom or self.engine.slots_free < 1:
+                return "defer", "pages"
+        load = self.predicted_load
+        if load >= self.cfg.shed_pressure:
+            return "shed", "pressure"
+        if load >= self.cfg.defer_pressure:
+            return "defer", "pressure"
+        return "admit", ""
+
+    def offer(self, arr: Arrival, deferrals: int = 0) -> str:
+        """Entry point ``schedule_arrivals`` wires arrivals into.
+        Returns the decision (admitted workflows are started via
+        ``start_fn`` synchronously)."""
+        if deferrals == 0:
+            self.offered += 1
+            self._note_arrival()
+        decision, reason = self._decide()
+        if decision == "defer" and deferrals >= self.cfg.defer_max:
+            decision, reason = "shed", f"defer-aged:{reason}"
+        self.decisions[decision] += 1
+        tag = f"{arr.tenant}:{arr.wid}"
+        self.loop.record("traffic", decision, tag)
+        if decision == "admit":
+            self.live += 1
+            if self.start_fn is not None:
+                self.start_fn(arr)
+        elif decision == "defer":
+            self.loop.schedule(
+                self.cfg.defer_delay_s,
+                lambda: self.offer(arr, deferrals + 1), tag="re-offer")
+        else:
+            self.shed_by_reason[reason] = \
+                self.shed_by_reason.get(reason, 0) + 1
+            self.shed_by_tenant[arr.tenant] = \
+                self.shed_by_tenant.get(arr.tenant, 0) + 1
+            self.shed_arrivals.append(arr)
+        return decision
+
+    @property
+    def shed_rate(self) -> float:
+        return self.decisions["shed"] / max(self.offered, 1)

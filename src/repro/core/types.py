@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
 from repro.core.clock import Future
@@ -68,6 +69,8 @@ class Request:
     cancelled: bool = False
     iteration: int = 0
     owner: str = ""                      # workflow/task that submitted it
+    tenant: str = ""                     # traffic-plane tenant ("" = closed loop)
+    deadline: float = math.inf           # absolute SLO deadline (EDF key)
     span: int = -1                       # causal eval span sid (§Observability):
     #                                      opened by the submitter, closed by the
     #                                      scheduler at complete OR abort

@@ -1,6 +1,7 @@
 """One-call drivers assembling the full stacks (benchmarks/examples)."""
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.clock import EventLoop
@@ -232,6 +233,103 @@ def run_shared_pool(tasks, model: str = "glm", iterations: int = 100,
         ctls.append(c)
     loop.run(stop=lambda: all(c.done for c in ctls))
     return sched, ctls
+
+
+def run_traffic(arrivals, model: str = "glm", iterations: int = 2,
+                devices: int = 10, seed: int = 0,
+                tenants=None, admission=None,
+                evaluator=None, transport=None, trace: bool = False,
+                llm: str = "sim", engine_opts=None,
+                spans: bool = False, metrics: bool = True):
+    """Open-loop traffic (DESIGN.md §Traffic-plane): a pre-generated
+    arrival trace (``core.arrivals``) drives workflow starts as events
+    on the one shared loop; every arrival passes the admission
+    controller (admit / defer / shed from predicted pressure) and each
+    ADMITTED workflow becomes a SpecController on the shared pool with
+    its tenant tag and SLO deadline stamped on every eval request —
+    the scheduler's SLO heap layer (class rank, weighted per-tenant
+    fairness, EDF) orders the queues.
+
+    ``llm="engine"`` backs every admitted workflow with ONE shared
+    loop-clocked Engine; ``AdmissionConfig.max_live`` then bounds the
+    concurrent workflows so the engine's slot/page budget is sized
+    up-front (the page-headroom gate defers the rest).
+
+    Returns ``(sched, adm, flows)``: the scheduler (``sched.engine``
+    attached on engine runs), the AdmissionController (decision
+    counters, shed bookkeeping) and one completion record per FINISHED
+    workflow — ``{"name", "tenant", "slo", "t_arrive", "t_done",
+    "latency", "deadline_s", "met"}`` in completion order.  SLO
+    attainment is judged from ARRIVAL (deferral time counts against
+    the deadline), which is what makes goodput an admission-policy
+    metric and not just a scheduler one.
+    """
+    from repro.core.arrivals import DEFAULT_TENANTS, schedule_arrivals
+    from repro.core.scheduler import (AdmissionConfig, AdmissionController,
+                                      SLOPolicy)
+
+    assert llm in ("sim", "engine")
+    if llm == "engine" and transport is None:
+        transport = "async"                  # the engine needs the plane
+    eo = _engine_opts(engine_opts, seed)
+    arrivals = list(arrivals)
+    tenants = tuple(tenants if tenants is not None else DEFAULT_TENANTS)
+    pol = SLOPolicy.from_tenants(tenants)
+    loop = _make_loop(trace, evaluator, spans=spans, metrics=metrics)
+    wl = WorkloadModel(model=model, seed=seed)
+    sched = ElasticScheduler(loop, SchedulerConfig(
+        num_devices=devices, realloc="arrival-rate", priority=True,
+        slo=pol))
+    plane = _make_transport(
+        loop, sched, transport,
+        decode_step_s=eo["decode_step_s"] if llm == "engine" else None)
+    adm_cfg = admission if admission is not None else AdmissionConfig()
+    engine = None
+    if llm == "engine":
+        spec_cap = SpecGenConfig().max_concurrent_spec
+        if adm_cfg.max_live <= 0:
+            adm_cfg = dataclasses.replace(adm_cfg, max_live=4)
+        engine = _make_engine(plane, adm_cfg.max_live * (1 + spec_cap), eo)
+    sched.engine = engine
+    sched.transport = plane
+    flows: List[dict] = []
+    adm = AdmissionController(loop, sched, adm_cfg, engine=engine)
+
+    def start_workflow(arr) -> None:
+        klass = pol.classes.get(arr.slo, pol.classes[pol.default])
+        if engine is not None:
+            from repro.search.llm_engine import EngineGeneration
+            gen = EngineGeneration(
+                engine, SimLLMBackend(wl), name=arr.name,
+                prompt_len=eo["prompt_len"],
+                reasoning_tokens=eo["reasoning_tokens"],
+                spec_tokens=eo["spec_tokens"], seed=seed + arr.wid)
+        else:
+            gen = SimLLMBackend(wl)
+        c = SpecController(
+            loop, sched, gen,
+            SimEvalBackend(wl) if evaluator is None else evaluator,
+            FeedbackSearch(),
+            SpecGenConfig(iterations=iterations),
+            name=arr.name, transport=plane,
+            tenant=arr.tenant, deadline_s=klass.deadline_s)
+
+        def finished(ctl, a=arr, k=klass):
+            lat = loop.now - a.t           # arrival-anchored: deferral
+            flows.append({                 # time counts against the SLO
+                "name": a.name, "tenant": a.tenant, "slo": k.name,
+                "t_arrive": a.t, "t_done": loop.now, "latency": lat,
+                "deadline_s": k.deadline_s, "met": lat <= k.deadline_s})
+            adm.workflow_done(lat)
+        c.start(arr.task_id, on_done=finished)
+
+    adm.start_fn = start_workflow
+    schedule_arrivals(loop, arrivals, adm.offer)
+    total = len(arrivals)
+    loop.run(stop=lambda: (
+        adm.decisions["admit"] + adm.decisions["shed"] >= total
+        and len(flows) >= adm.decisions["admit"]))
+    return sched, adm, flows
 
 
 def run_engine_pool(arch: str = "qwen2-1.5b", n_workflows: int = 10,

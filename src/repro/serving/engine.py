@@ -973,6 +973,15 @@ class Engine:
     def slots_free(self) -> int:
         return len(self._free)
 
+    def admission_headroom(self) -> float:
+        """Free-page fraction of the arena — the traffic plane's
+        admission-shed signal (DESIGN.md §Traffic-plane).  Admission
+        control reads this BEFORE starting a workflow and defers/sheds
+        while it is below ``AdmissionConfig.page_headroom``, so the
+        pool's own loud failure path (``PagePoolExhausted`` + reclaim)
+        stays what it is: an error, not a load-management mechanism."""
+        return self.pool.pages_free / max(self.pool.num_pages - 1, 1)
+
     @property
     def mid_step(self) -> bool:
         """True while a decode dispatch is in flight (compute done,

@@ -25,6 +25,7 @@ slot-indexed dense rows (DESIGN.md §Arch-applicability).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -38,6 +39,48 @@ from repro.models.layers import EMPTY_SLOT
 
 class PagePoolExhausted(RuntimeError):
     """Raised instead of silently scattering out of the arena."""
+
+
+def autotune_pool(fork_depth_hist, *, max_batch: int, max_len: int,
+                  page_sizes: Sequence[int] = (8, 16, 32, 64)
+                  ) -> Dict[str, float]:
+    """ROADMAP autotuner: size the arena from OBSERVED fork depth.
+
+    The default pool (``num_pages = 1 + 2*B*pages_per_row``) budgets
+    every slot fully unshared plus the same again for stored prefixes —
+    safe, but blind to how forky the workload actually is.  The
+    fork-depth histogram (``core.metrics`` "fork_depth", observed at
+    every fork) gives the p95 concurrent speculative generations per
+    workflow.  Deeper forking means (a) more page SHARING — forks hold
+    the parent's prefix pages by refcount, so their private footprint
+    is just the decoded suffix — and (b) more copy-on-write boundary
+    traffic — each fork eventually copies the one partially-shared
+    page, so large pages duplicate more prefix slots per copy.
+
+    Deterministic pure rules:
+      * ``page_size``: largest candidate <= max_len / (4 * depth_p95) —
+        deep forking drives pages smaller (cheap CoW boundary page);
+        shallow workloads keep big pages (short block tables);
+      * ``num_pages``: 1 (null page) + B*pages_per_row live rows, plus
+        a prefix/CoW allowance scaling with observed depth instead of
+        the blanket 2x — ceil(B * (0.5 + depth_p95/4)) rows' worth,
+        clamped to [0.5x, 2x] of the live budget.
+    """
+    depth = 1.0
+    if fork_depth_hist is not None and getattr(fork_depth_hist, "total", 0):
+        depth = max(1.0, float(fork_depth_hist.percentile(0.95)))
+    target = max_len / (4.0 * depth)
+    cands = sorted(page_sizes)
+    page_size = cands[0]
+    for c in cands:
+        if c <= target:
+            page_size = c
+    ppr = _ceil_div(max_len, page_size)
+    live = max_batch * ppr
+    allowance = int(math.ceil(max_batch * (0.5 + depth / 4.0))) * ppr
+    allowance = min(max(allowance, (live + 1) // 2), 2 * live)
+    return {"page_size": page_size, "num_pages": 1 + live + allowance,
+            "fork_depth_p95": depth}
 
 
 def _ceil_div(a: int, b: int) -> int:
